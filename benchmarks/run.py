@@ -1,0 +1,62 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (DESIGN.md §6) plus the roofline report.
+``--quick`` trims graph counts/sweep points for CI-speed runs; the default
+is the full container-scale suite.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+SECTIONS = [
+    ("Fig 1  (chunk/block-size trade-off)", "benchmarks.bench_chunk_tradeoff"),
+    ("Fig 5  (temporal graphs)", "benchmarks.bench_temporal"),
+    ("Fig 6  (strong scaling)", "benchmarks.bench_scaling"),
+    ("Fig 7  (batch-size sweep + error)", "benchmarks.bench_batch_sweep"),
+    ("S5.2.3 (stability)", "benchmarks.bench_stability"),
+    ("Fig 8/9 (delays + crashes)", "benchmarks.bench_faults"),
+    ("kernels (pallas block-SpMV)", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on section names")
+    args = ap.parse_args()
+
+    failures = []
+    for title, module in SECTIONS:
+        if args.only and args.only not in module and args.only not in title:
+            continue
+        print(f"\n===== {title} [{module}] =====", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main(quick=args.quick)
+            print(f"# section done in {time.time() - t0:.1f}s")
+        except Exception as e:
+            failures.append((module, e))
+            traceback.print_exc()
+    print("\n===== roofline (from dry-run artifacts) =====", flush=True)
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception as e:
+        failures.append(("benchmarks.roofline", e))
+        traceback.print_exc()
+
+    if failures:
+        print(f"\n{len(failures)} benchmark section(s) FAILED: "
+              f"{[m for m, _ in failures]}")
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Quickstart — the paper's workload end-to-end.
+
+Maintains PageRank over a stream of batch updates on a dynamic graph with
+the lock-free Dynamic Frontier engine (DF_LF), validating every update
+against the reference and comparing work/time with the Naive-dynamic
+baseline (ND_LF).  This is the end-to-end driver for the paper's kind of
+system (dynamic graph-algorithm serving).
+
+    PYTHONPATH=src python examples/quickstart.py [--batches 5]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)   # paper-grade f64 validation
+
+import numpy as np                                          # noqa: E402
+
+from repro.core import frontier as fr                       # noqa: E402
+from repro.core import pagerank as pr                       # noqa: E402
+from repro.core.delta import random_batch                   # noqa: E402
+from repro.graphs.generators import grid_road               # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--batch-frac", type=float, default=1e-5)
+    ap.add_argument("--side", type=int, default=256)
+    args = ap.parse_args()
+
+    print("building dynamic graph (road-network class)...")
+    hg = grid_road(args.side, seed=0)
+    cap = 1024 * ((hg.m * 3 + 2 * hg.n) // 1024 + 3)
+    print(f"  |V|={hg.n:,}  |E|={hg.m:,}")
+
+    g = hg.snapshot(edge_capacity=cap)
+    ranks = pr.reference_pagerank(g, iterations=250)
+    print("initial PageRank computed; streaming batch updates:\n")
+
+    tot_df, tot_nd = 0.0, 0.0
+    for step in range(args.batches):
+        dels, ins = random_batch(hg, args.batch_frac, seed=100 + step)
+        hg_new = hg.apply_batch(dels, ins)
+        g_prev, g_cur = g, hg_new.snapshot(edge_capacity=cap)
+        batch = fr.batch_to_device(g_cur, dels, ins)
+
+        t0 = time.perf_counter()
+        df = pr.df_pagerank(g_prev, g_cur, batch, ranks, mode="lf")
+        t_df = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        nd = pr.nd_pagerank(g_cur, ranks, mode="lf")
+        t_nd = time.perf_counter() - t0
+
+        ref = pr.reference_pagerank(g_cur, iterations=250)
+        err = pr.linf(df.ranks, ref[:df.ranks.shape[0]])
+        assert err < 1e-9, f"error {err} out of the paper's band"
+        if step > 0:                      # skip jit warm-up timings
+            tot_df += t_df
+            tot_nd += t_nd
+        print(f"batch {step}: |Δ|={len(dels) + len(ins):4d}  "
+              f"DF_LF {t_df:6.3f}s ({df.stats.sweeps} sweeps, "
+              f"{df.stats.edges_processed / 1e6:6.2f}M edges)   "
+              f"ND_LF {t_nd:6.3f}s ({nd.stats.sweeps} sweeps, "
+              f"{nd.stats.edges_processed / 1e6:6.2f}M edges)   "
+              f"L_inf={err:.2e}")
+        hg, g, ranks = hg_new, g_cur, df.ranks
+
+    if tot_df > 0:
+        print(f"\nDF_LF vs ND_LF wall-time speedup "
+              f"(excl. warm-up): {tot_nd / tot_df:.2f}x")
+    print("all updates stayed within the paper's 1e-9 error band ✓")
+
+
+if __name__ == "__main__":
+    main()

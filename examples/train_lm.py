@@ -1,0 +1,105 @@
+"""Train a small LM end-to-end with the full substrate stack: synthetic
+Markov token stream → grad-accum train step (AdamW, cosine schedule) →
+atomic checkpointing with auto-resume.
+
+Default is a ~10M-param model for CPU-container speed; ``--size 100m``
+selects the ~100M configuration (same code path, longer wall time).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --resume-drill
+"""
+import argparse
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                                  # noqa: E402
+
+from repro.ckpt.checkpoint import Checkpointer              # noqa: E402
+from repro.data import pipeline as dp                       # noqa: E402
+from repro.models.transformer import model as M             # noqa: E402
+from repro.models.transformer.config import TransformerConfig  # noqa: E402
+from repro.optim import adam                                # noqa: E402
+from repro.train import trainer                             # noqa: E402
+
+SIZES = {
+    # ~10M params: CPU-fast demonstration config
+    "10m": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                d_ff=1024, vocab=4096),
+    # ~100M params: the deliverable-scale config (same pipeline)
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab=16384),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=SIZES, default="10m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume-drill", action="store_true",
+                    help="kill the run mid-way, relaunch, verify resume")
+    args = ap.parse_args()
+
+    if args.resume_drill:
+        base = [sys.executable, __file__, "--size", args.size,
+                "--steps", str(args.steps), "--batch", str(args.batch),
+                "--seq", str(args.seq), "--ckpt-dir", args.ckpt_dir]
+        print("== resume drill: phase 1 (will be preempted) ==")
+        subprocess.run(base + ["--steps", str(args.steps // 2)], check=True)
+        print("== resume drill: phase 2 (auto-resume to the end) ==")
+        subprocess.run(base, check=True)
+        print("resume drill complete ✓")
+        return
+
+    cfg = TransformerConfig(name=f"lm-{args.size}", dtype="float32",
+                            attn_q_chunk=128, **SIZES[args.size])
+    print(f"model: {cfg.name}  params={cfg.param_count() / 1e6:.1f}M")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    acfg = adam.AdamConfig(lr=3e-4, warmup_steps=30, total_steps=args.steps)
+    tcfg = trainer.TrainConfig(microbatches=args.microbatches)
+    step_fn = jax.jit(trainer.build_train_step(trainer.lm_loss(cfg), acfg,
+                                               tcfg),
+                      donate_argnums=(0, 1))
+    opt = adam.init_state(params, acfg)
+
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    start = 0
+    if ckpt.latest_step is not None:
+        params, opt, start = ckpt.restore(ckpt.latest_step, params, opt)
+        print(f"auto-resumed from step {start}")
+    if start >= args.steps:
+        print("nothing to do (checkpoint is at/after --steps)")
+        return
+
+    stream = dp.prefetch(dp.lm_stream(cfg.vocab, args.batch, args.seq,
+                                      seed=0, start=start), depth=2)
+    t0 = time.time()
+    first_loss = None
+    for i, batch in enumerate(stream):
+        step = start + i
+        if step >= args.steps:
+            break
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        if first_loss is None:
+            first_loss = loss
+        if step % 25 == 0 or step == args.steps - 1:
+            tps = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  {tps:,.0f} tok/s")
+        if (step + 1) % 50 == 0:
+            ckpt.save(params, opt, step + 1)
+    ckpt.save(params, opt, args.steps)
+    print(f"final loss {loss:.4f} (first {first_loss:.4f}) — "
+          f"{'learning ✓' if loss < first_loss else 'NOT learning ✗'}")
+    assert loss < first_loss
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Config registry — importing this package registers every assigned
+architecture (plus the paper's own PageRank workload)."""
+from repro.configs.registry import (ArchSpec, ShapeSpec, get_arch,
+                                    iter_cells, list_archs)
+
+# one module per assigned architecture; import order = report order
+from repro.configs import (  # noqa: F401  (registration side effects)
+    qwen1_5_4b,
+    phi4_mini_3_8b,
+    nemotron_4_340b,
+    granite_moe_3b_a800m,
+    mixtral_8x22b,
+    gatedgcn,
+    egnn,
+    graphsage_reddit,
+    meshgraphnet,
+    autoint,
+    pagerank_df,
+)
+
+__all__ = ["ArchSpec", "ShapeSpec", "get_arch", "iter_cells", "list_archs"]

@@ -1,0 +1,45 @@
+"""pagerank-df — the paper's own workload: Dynamic-Frontier lock-free
+PageRank (Sahu, CS.DC 2024), as a distributed sweep over the production mesh.
+
+Shapes mirror the paper's dataset classes (Table 2) at dry-run scale:
+  * web_67m   — power-law web-crawl class (R-MAT-like),   n=2^26, d_avg 16
+  * road_64m  — road-network class (near-planar, d_avg 3), n=2^26, d_avg 4
+  * social_16m— dense social class,                        n=2^24, d_avg 64
+These lower the *distributed DF sweep* (contribution exchange + local pull +
+frontier expansion + convergence reduction) — the paper's inner loop — on
+the 256/512-chip meshes.  Wall-clock experiments run host-scale graphs via
+benchmarks/ (paper Figs 5-9).
+"""
+from __future__ import annotations
+
+from repro.configs.registry import ArchSpec, ShapeSpec, register
+
+
+def build_cfg(**kw):
+    base = dict(alpha=0.85, tau=1e-10, tau_f_ratio=1e-3, block_size=256,
+                exchange="full")
+    base.update(kw)
+    return base
+
+
+def smoke_cfg():
+    return build_cfg(tau=1e-9)
+
+
+register(ArchSpec(
+    arch_id="pagerank-df",
+    family="pagerank",
+    source="the reproduced paper (Sahu, CS.DC 2024)",
+    build_cfg=build_cfg,
+    smoke_cfg=smoke_cfg,
+    shapes=(
+        ShapeSpec("web_67m", "sweep",
+                  dict(n_vertices=1 << 26, avg_degree=16)),
+        ShapeSpec("road_64m", "sweep",
+                  dict(n_vertices=1 << 26, avg_degree=4)),
+        ShapeSpec("social_16m", "sweep",
+                  dict(n_vertices=1 << 24, avg_degree=64)),
+    ),
+    notes="the reproduction itself; exchange ∈ {full, bf16, delta} is the "
+          "§Perf axis (frontier-aware sparse-delta collective).",
+))

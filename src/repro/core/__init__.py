@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — Dynamic Frontier lock-free PageRank."""
+from repro.core.graph import GraphSnapshot, HostGraph
+from repro.core.pagerank import (df_pagerank, dt_pagerank, nd_pagerank,
+                                 static_pagerank, reference_pagerank,
+                                 numpy_reference, linf, PagerankResult)
+from repro.core.faults import FaultPlan, NO_FAULTS
+
+__all__ = [
+    "GraphSnapshot", "HostGraph", "df_pagerank", "dt_pagerank",
+    "nd_pagerank", "static_pagerank", "reference_pagerank",
+    "numpy_reference", "linf", "PagerankResult", "FaultPlan", "NO_FAULTS",
+]

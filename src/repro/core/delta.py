@@ -1,0 +1,62 @@
+"""Batch-update generation (paper §5.1.4).
+
+Random batches: an equal mix of deletions (sampled uniformly from existing
+edges) and insertions (uniform random non-connected pairs), sized as a
+fraction of |E|.  Temporal batches: consecutive slices of a timestamped edge
+stream after loading a 90% prefix.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.core.graph import HostGraph
+
+
+def random_batch(g: HostGraph, frac: float, *, seed: int = 0,
+                 deletions_frac: float = 0.5
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Random batch of size ``frac * |E|``: mix of deletions and insertions."""
+    rng = np.random.default_rng(seed)
+    b = max(1, int(round(frac * g.m)))
+    n_del = int(b * deletions_frac)
+    n_ins = b - n_del
+
+    dels = np.zeros((0, 2), dtype=np.int64)
+    if n_del and g.m:
+        idx = rng.choice(g.m, size=min(n_del, g.m), replace=False)
+        dels = g.edges[idx]
+
+    ins = np.zeros((0, 2), dtype=np.int64)
+    if n_ins:
+        cand = np.stack([rng.integers(0, g.n, 2 * n_ins),
+                         rng.integers(0, g.n, 2 * n_ins)], 1)
+        cand = cand[cand[:, 0] != cand[:, 1]]
+        keep = ~g.has_edges(cand)
+        ins = cand[keep][:n_ins]
+    return dels, ins
+
+
+def pure_deletion_batch(g: HostGraph, frac: float, *, seed: int = 0
+                        ) -> np.ndarray:
+    """For the stability experiment (§5.2.3): delete-only batch."""
+    rng = np.random.default_rng(seed)
+    b = max(1, min(int(round(frac * g.m)), g.m))
+    idx = rng.choice(g.m, size=b, replace=False)
+    return g.edges[idx]
+
+
+def temporal_batches(stream: np.ndarray, *, prefix_frac: float = 0.9,
+                     batch_frac: float = 1e-3
+                     ) -> Tuple[np.ndarray, Iterator[np.ndarray]]:
+    """Split a timestamped stream into a 90% prefix + fixed-size batches."""
+    m_total = stream.shape[0]
+    cut = int(prefix_frac * m_total)
+    bs = max(1, int(batch_frac * m_total))
+
+    def batches() -> Iterator[np.ndarray]:
+        for lo in range(cut, m_total, bs):
+            yield stream[lo:lo + bs]
+
+    return stream[:cut], batches()

@@ -1,0 +1,360 @@
+"""Distributed Dynamic-Frontier PageRank via shard_map (DESIGN.md §2, §5).
+
+1-D vertex partition: device d owns the contiguous vertex range
+[d·n_loc, (d+1)·n_loc).  In-edges are partitioned by destination owner (pull),
+out-edges by source owner (frontier expansion).  Per sweep:
+
+    1. contribution exchange — one of
+         "full"  : all-gather of the n-float contribution vector
+         "bf16"  : the same, cast to bf16 on the wire (½ the collective bytes,
+                   f32 master kept locally) — gradient-compression analogue
+         "delta" : *sparse delta all-gather* — only the ≤K contributions that
+                   changed since the last exchange travel, as (idx, val)
+                   pairs; overflow falls back to a full exchange.  This is the
+                   frontier-aware collective that makes the DF approach pay
+                   off at the wire level (beyond-paper optimization);
+    2. local update of affected vertices (Jacobi, or ``local_gs_sweeps`` > 1
+       block-Gauss–Seidel sweeps against *stale* remote contributions — the
+       TPU analogue of the paper's lock-free staleness tolerance);
+    3. frontier expansion: local out-edge OR-scatter, then a pmax exchange of
+       the mark vector;
+    4. convergence: psum of outstanding per-vertex RC flags.
+
+A straggling device simply delivers one-sweep-stale contributions; all other
+devices keep making progress — the paper's helping/stale-read argument,
+re-expressed as stale-synchronous data flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.graph import HostGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class DistGraph:
+    """Device-partitioned dynamic-graph snapshot (host-built)."""
+    n: int
+    n_pad: int
+    n_dev: int
+    # in-edges grouped by destination owner; [n_dev, m_in_pad]
+    src_in: jnp.ndarray
+    dst_in: jnp.ndarray
+    # out-edges grouped by source owner; [n_dev, m_out_pad]
+    src_out: jnp.ndarray
+    dst_out: jnp.ndarray
+    inv_deg: jnp.ndarray       # [n_pad] f32/f64 (0 on invalid)
+    vertex_valid: jnp.ndarray  # [n_pad] bool
+    # ring layout (exchange="ring"): this device's in-edges re-grouped by
+    # SOURCE owner — [n_dev, n_dev_owners, ring_cap]; hop k consumes the
+    # slice of the owner whose chunk just arrived
+    src_in_ring: Optional[jnp.ndarray] = None
+    dst_in_ring: Optional[jnp.ndarray] = None
+
+    @property
+    def n_loc(self) -> int:
+        return self.n_pad // self.n_dev
+
+
+def build_dist_graph(hg: HostGraph, n_dev: int, *, dtype=jnp.float32,
+                     ring: bool = False) -> DistGraph:
+    n = hg.n
+    n_loc = -(-n // n_dev)
+    n_pad = n_loc * n_dev
+    e = hg.edges
+    loops = np.arange(n, dtype=np.int64)
+    src = np.concatenate([e[:, 0], loops])
+    dst = np.concatenate([e[:, 1], loops])
+    out_deg = np.bincount(src, minlength=n_pad)
+
+    def partition(owner: np.ndarray, a: np.ndarray, b: np.ndarray):
+        dev = owner // n_loc
+        order = np.argsort(dev, kind="stable")
+        a, b, dev = a[order], b[order], dev[order]
+        counts = np.bincount(dev, minlength=n_dev)
+        cap = int(counts.max(initial=1))
+        A = np.full((n_dev, cap), n_pad, dtype=np.int32)
+        B = np.full((n_dev, cap), n_pad, dtype=np.int32)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        for d in range(n_dev):
+            s, c = starts[d], counts[d]
+            A[d, :c] = a[s:s + c]
+            B[d, :c] = b[s:s + c]
+        return jnp.asarray(A), jnp.asarray(B)
+
+    src_in, dst_in = partition(dst, src, dst)
+    src_out, dst_out = partition(src, src, dst)
+
+    sir = dir_ = None
+    if ring:
+        # per (dst-owner device, src-owner) edge slabs for the ring schedule
+        ddev = dst // n_loc
+        sdev = src // n_loc
+        key = ddev * n_dev + sdev
+        order = np.argsort(key, kind="stable")
+        s_s, d_s, key_s = src[order], dst[order], key[order]
+        counts = np.bincount(key_s, minlength=n_dev * n_dev)
+        cap = max(8, int(counts.max(initial=1)))
+        SIR = np.full((n_dev, n_dev, cap), n_pad, dtype=np.int32)
+        DIR = np.full((n_dev, n_dev, cap), n_pad, dtype=np.int32)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        for kk in np.nonzero(counts)[0]:
+            dd, so = divmod(int(kk), n_dev)
+            lo, c = starts[kk], counts[kk]
+            SIR[dd, so, :c] = s_s[lo:lo + c]
+            DIR[dd, so, :c] = d_s[lo:lo + c]
+        sir, dir_ = jnp.asarray(SIR), jnp.asarray(DIR)
+
+    vv = np.zeros(n_pad, dtype=bool)
+    vv[:n] = True
+    inv = np.where(vv, 1.0 / np.maximum(out_deg, 1), 0.0)
+    return DistGraph(n=n, n_pad=n_pad, n_dev=n_dev,
+                     src_in=src_in, dst_in=dst_in,
+                     src_out=src_out, dst_out=dst_out,
+                     inv_deg=jnp.asarray(inv, dtype),
+                     vertex_valid=jnp.asarray(vv),
+                     src_in_ring=sir, dst_in_ring=dir_)
+
+
+def make_sweep(dg: DistGraph, mesh: Mesh, axis, *, alpha: float,
+               tau: float, tau_f: float, expand: bool,
+               exchange: str = "full", delta_capacity: int = 1024,
+               local_gs_sweeps: int = 1, local_blocks: int = 4,
+               marks_dtype=jnp.int32):
+    """Build the jitted shard_map sweep.  State carried across sweeps:
+    (R_loc, affected_loc, rc_loc, contrib_cache_loc_view).
+
+    ``axis`` may be one mesh axis name or a tuple of axis names — the
+    production mesh partitions vertices over all of ("pod","data","model").
+    """
+    n, n_pad, n_dev, n_loc = dg.n, dg.n_pad, dg.n_dev, dg.n_loc
+    dt = dg.inv_deg.dtype
+    base = (1.0 - alpha) / n
+    delta_capacity = min(delta_capacity, n_loc)
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+
+    def _flat_index():
+        idx = jnp.zeros((), jnp.int32)
+        for a in axes:
+            idx = idx * mesh.shape[a] + lax.axis_index(a)
+        return idx
+
+    def local_update(R_loc, contrib_full, aff_loc, vv_loc, src, dst, off,
+                     inv_loc):
+        """One (or several, Gauss–Seidel) local pull updates."""
+        dst_loc = jnp.clip(dst - off, 0, n_loc)   # pad edges → bin n_loc
+
+        def one(R_loc, contrib_full):
+            pulled = jax.ops.segment_sum(
+                contrib_full[jnp.minimum(src, n_pad - 1)]
+                * (src < n_pad),
+                dst_loc, num_segments=n_loc + 1)[:n_loc]
+            r_new = base + alpha * pulled.astype(dt)
+            return jnp.where(aff_loc & vv_loc, r_new, R_loc)
+
+        if local_gs_sweeps <= 1:
+            return one(R_loc, contrib_full)
+        # block-Gauss–Seidel against stale remote contributions: refresh the
+        # *local* slice of the contribution vector between inner sweeps
+        for _ in range(local_gs_sweeps):
+            R_loc = one(R_loc, contrib_full)
+            contrib_full = lax.dynamic_update_slice(
+                contrib_full, R_loc * inv_loc, (off,))
+        return R_loc
+
+    def sweep(R_loc, aff_loc, rc_loc, cache_slab,
+              src_in, dst_in, src_out, dst_out, inv_loc, vv_loc,
+              *ring_slabs):
+        # squeeze the leading device dim shard_map leaves on the slabs
+        src_in, dst_in = src_in[0], dst_in[0]
+        src_out, dst_out = src_out[0], dst_out[0]
+        # the delta-exchange cache is each device's PRIVATE view of the
+        # global contribution vector: it travels as a [n_dev, n] slab so no
+        # output collective is ever needed (a replicated [n] output spec
+        # costs a hidden full all-gather per sweep — measured, see §Perf)
+        cache_loc = cache_slab[0]
+        idx = _flat_index()
+        off = idx * n_loc
+
+        contrib_loc = R_loc * inv_loc
+        if exchange == "ring":
+            # ring schedule: n_dev−1 collective_permute hops; hop k consumes
+            # the chunk of owner (me−k) against the pre-sliced edge slab for
+            # that owner.  On TPU the next hop's DMA overlaps the current
+            # hop's partial SpMV — the lock-free paper's "never wait at a
+            # barrier" insight applied to the exchange itself.
+            src_ring, dst_ring = ring_slabs[0][0], ring_slabs[1][0]
+            me = idx
+            perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+            def hop(k, state):
+                acc, chunk = state
+                owner = (me - k) % n_dev
+                sl = lax.dynamic_index_in_dim(src_ring, owner, 0,
+                                              keepdims=False)
+                dl = lax.dynamic_index_in_dim(dst_ring, owner, 0,
+                                              keepdims=False)
+                dloc = jnp.clip(dl - off, 0, n_loc)
+                c = jnp.where(
+                    sl < n_pad,
+                    chunk[jnp.clip(sl - owner * n_loc, 0, n_loc - 1)], 0)
+                acc = acc + jax.ops.segment_sum(
+                    c, dloc, num_segments=n_loc + 1)[:n_loc]
+                chunk = lax.ppermute(chunk, axes, perm)
+                return acc, chunk
+
+            pulled, _ = lax.fori_loop(
+                0, n_dev, hop, (jnp.zeros((n_loc,), dt), contrib_loc))
+            r_new = base + alpha * pulled.astype(dt)
+            R_new = jnp.where(aff_loc & vv_loc, r_new, R_loc)
+            overflow = jnp.zeros((), bool)
+        elif exchange == "full":
+            contrib_full = lax.all_gather(contrib_loc, axes, tiled=True)
+            overflow = jnp.zeros((), bool)
+        elif exchange == "bf16":
+            # the barrier pins the bf16 convert BEFORE the gather: XLA is
+            # otherwise free to sink it past the collective (same values,
+            # 2× the wire bytes — observed; see EXPERIMENTS.md §Perf)
+            wire = lax.optimization_barrier(
+                contrib_loc.astype(jnp.bfloat16))
+            contrib_full = lax.all_gather(wire, axes, tiled=True
+                                          ).astype(dt)
+            overflow = jnp.zeros((), bool)
+        elif exchange == "delta":
+            delta = contrib_loc - lax.dynamic_slice(cache_loc, (off,),
+                                                    (n_loc,))
+            n_changed = (delta != 0).sum()
+            overflow = n_changed > delta_capacity
+            mag, pos = lax.top_k(jnp.abs(delta), delta_capacity)
+            vals = contrib_loc[pos]
+            live = mag > 0
+            gidx = jnp.where(live, pos + off, n_pad)
+            all_idx = lax.all_gather(gidx, axes).reshape(-1)
+            all_val = lax.all_gather(jnp.where(live, vals, 0), axes
+                                     ).reshape(-1)
+            patched = jnp.concatenate([cache_loc, jnp.zeros((1,), dt)])
+            patched = patched.at[all_idx].set(all_val)
+            contrib_delta = patched[:n_pad]
+            # overflow anywhere → fall back to a full gather (correctness).
+            # The fallback lives under lax.cond so its all-gather only
+            # executes on overflow sweeps — every device agrees on the
+            # branch (any_ovf is pmax'd), keeping the SPMD program uniform.
+            any_ovf = lax.pmax(overflow.astype(jnp.int32), axes) > 0
+            contrib_full = lax.cond(
+                any_ovf,
+                lambda: lax.all_gather(contrib_loc, axes, tiled=True),
+                lambda: contrib_delta)
+            overflow = any_ovf
+        else:
+            raise ValueError(exchange)
+
+        if exchange != "ring":
+            R_new = local_update(R_loc, contrib_full, aff_loc, vv_loc,
+                                 src_in, dst_in, off, inv_loc)
+        dr = jnp.abs(R_new - R_loc)
+        changed = aff_loc & (dr > tau_f)
+        rc_new = jnp.where(aff_loc & vv_loc, dr > tau, rc_loc)
+
+        if expand:
+            # local out-edges: src are owned here; mark global dst
+            src_loc = jnp.clip(src_out - off, 0, n_loc - 1)
+            flag = (src_out < n_pad) & changed[src_loc]
+            # frontier marks travel as marks_dtype on the wire (int8 is
+            # the compressed §Perf variant — 4× fewer pmax bytes)
+            marks = jnp.zeros((n_pad + 1,), marks_dtype).at[
+                jnp.where(flag, dst_out, n_pad)].set(1)[:n_pad]
+            marks = lax.pmax(marks, axes) > 0
+            marks_loc = lax.dynamic_slice(marks, (off,), (n_loc,)) & vv_loc
+            aff_loc = aff_loc | marks_loc
+            rc_new = rc_new | marks_loc
+
+        outstanding = lax.psum(rc_new.sum(), axes)
+        max_dr = lax.pmax(jnp.max(dr), axes)
+        cache_new = (contrib_full if exchange == "delta"
+                     else cache_loc)
+        return (R_new, aff_loc, rc_new, cache_new[None], outstanding,
+                max_dr, overflow)
+
+    ax = axes if len(axes) > 1 else axes[0]
+    specs_state = (P(ax), P(ax), P(ax), P(ax, None))
+    specs_graph = (P(ax, None),) * 4 + (P(ax), P(ax))
+    if exchange == "ring":
+        specs_graph = specs_graph + (P(ax, None, None),) * 2
+    fn = shard_map(sweep, mesh=mesh,
+                   in_specs=specs_state + specs_graph,
+                   out_specs=(P(ax), P(ax), P(ax), P(ax, None), P(), P(),
+                              P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class DistStats:
+    sweeps: int = 0
+    converged: bool = False
+    full_exchanges: int = 0
+    delta_exchanges: int = 0
+
+
+def run_distributed(hg_or_dg, mesh: Mesh, *, axis: str = "data",
+                    r_prev: Optional[jnp.ndarray] = None,
+                    affected0: Optional[jnp.ndarray] = None,
+                    alpha: float = 0.85, tau: float = 1e-10,
+                    tau_f: Optional[float] = None, expand: bool = True,
+                    exchange: str = "full", delta_capacity: int = 1024,
+                    local_gs_sweeps: int = 1, max_sweeps: int = 500,
+                    marks_dtype=jnp.int32,
+                    dtype=jnp.float64) -> Tuple[jnp.ndarray, DistStats]:
+    """Driver: converges the distributed DF sweep to all-RC-clear."""
+    if isinstance(hg_or_dg, DistGraph):
+        dg = hg_or_dg
+    else:
+        n_dev = int(np.prod([mesh.shape[a] for a in ([axis] if isinstance(
+            axis, str) else axis)]))
+        dg = build_dist_graph(hg_or_dg, n_dev, dtype=dtype,
+                              ring=(exchange == "ring"))
+    if tau_f is None:
+        tau_f = tau / 1000.0 if expand else float("inf")
+
+    R = (jnp.full((dg.n_pad,), 1.0 / dg.n, dtype)
+         if r_prev is None else jnp.asarray(r_prev, dtype))
+    R = jnp.where(dg.vertex_valid, R[:dg.n_pad], 0)
+    aff = (dg.vertex_valid if affected0 is None
+           else (affected0[:dg.n_pad] & dg.vertex_valid))
+    rc = aff
+    cache_w = dg.n_pad if exchange == "delta" else 1
+    cache = jnp.zeros((dg.n_dev, cache_w), dtype)
+
+    sweep = make_sweep(dg, mesh, axis, alpha=alpha, tau=tau, tau_f=tau_f,
+                       expand=expand, exchange=exchange,
+                       delta_capacity=delta_capacity,
+                       local_gs_sweeps=local_gs_sweeps,
+                       marks_dtype=marks_dtype)
+    stats = DistStats()
+    extra = ((dg.src_in_ring, dg.dst_in_ring)
+             if exchange == "ring" else ())
+    for i in range(max_sweeps):
+        (R, aff, rc, cache, outstanding, max_dr, overflow) = sweep(
+            R, aff, rc, cache, dg.src_in, dg.dst_in, dg.src_out, dg.dst_out,
+            dg.inv_deg, dg.vertex_valid, *extra)
+        stats.sweeps += 1
+        if exchange == "delta":
+            if bool(overflow):
+                stats.full_exchanges += 1
+            else:
+                stats.delta_exchanges += 1
+        else:
+            stats.full_exchanges += 1
+        if int(outstanding) == 0:
+            stats.converged = True
+            break
+    return R, stats

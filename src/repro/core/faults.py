@@ -1,0 +1,95 @@
+"""Deterministic fault simulation (paper §5.1.6, §5.3, §5.4).
+
+The paper simulates (a) random thread *delays* — a thread sleeps for D ms with
+probability p per vertex processed — and (b) *crash-stop* failures — a flagged
+thread deterministically stops participating.
+
+On TPU there are no preemptible threads; the sweep engine assigns compacted
+block slots round-robin to ``n_threads`` *pseudo-threads* and a ``FaultPlan``
+decides, per (pseudo-thread, sweep), whether that thread's slots are processed.
+Unprocessed blocks keep their convergence flags set and are re-covered by
+surviving capacity on later sweeps — exactly the paper's recovery argument.
+
+A simulated-time model converts per-thread work into wall-clock analogues so
+Figs 6/8/9 can be reproduced without real multicore scheduling:
+    sweep_time(LF) = max over *alive* threads of (edges·t_edge + blocks·t_block
+                     + delay·1[delayed])
+    iter_time(BB)  = max over *all* threads of the same (delayed threads still
+                     finish before the barrier; a crashed thread stalls the
+                     barrier forever → DNF).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# calibration constants for the simulated-time model (arbitrary but fixed;
+# results are reported as ratios, mirroring the paper's relative plots)
+T_EDGE_NS = 1.0        # per-edge processing cost
+T_BLOCK_NS = 2000.0    # per-block scheduling overhead
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic per-(thread, sweep) fault schedule."""
+
+    n_threads: int = 64
+    delay_prob: float = 0.0       # per-thread, per-sweep delay probability
+    delay_ms: float = 0.0
+    n_crashed: int = 0            # number of threads that crash
+    crash_window: int = 64        # crashes occur at a random sweep in [0, w)
+    seed: int = 0
+    max_sweeps: int = 4096
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        self._delays = (rng.random((self.max_sweeps, self.n_threads))
+                        < self.delay_prob)
+        crash_at = np.full(self.n_threads, np.iinfo(np.int64).max)
+        if self.n_crashed:
+            who = rng.choice(self.n_threads, size=min(self.n_crashed,
+                                                      self.n_threads),
+                             replace=False)
+            crash_at[who] = rng.integers(0, max(1, self.crash_window),
+                                         size=len(who))
+        self._crash_at = crash_at
+
+    # -- queries -------------------------------------------------------------
+    def alive(self, sweep: int) -> np.ndarray:
+        return self._crash_at > sweep
+
+    def delayed(self, sweep: int) -> np.ndarray:
+        s = min(sweep, self.max_sweeps - 1)
+        return self._delays[s] & self.alive(sweep)
+
+    def participating(self, sweep: int) -> np.ndarray:
+        """Threads that actually process their slots this sweep (LF)."""
+        return self.alive(sweep) & ~self.delayed(sweep)
+
+    def any_crashed(self, sweep: int) -> bool:
+        return bool((~self.alive(sweep)).any())
+
+    # -- simulated time -------------------------------------------------------
+    def sweep_time_ms(self, sweep: int, thread_edges: np.ndarray,
+                      thread_blocks: np.ndarray, *, barrier: bool) -> float:
+        """Simulated duration of one sweep/iteration, in milliseconds."""
+        work_ms = (thread_edges * T_EDGE_NS
+                   + thread_blocks * T_BLOCK_NS) * 1e-6
+        delay = self.delayed(sweep) * self.delay_ms
+        if barrier:
+            # delayed threads still finish before the barrier; everyone waits
+            return float(np.max(work_ms + delay))
+        alive = self.alive(sweep)
+        if not alive.any():
+            return 0.0
+        return float(np.max(np.where(alive, work_ms, 0.0)))
+
+
+NO_FAULTS = FaultPlan(n_threads=1)
+
+
+def slot_thread_assignment(n_slots: int, n_threads: int) -> np.ndarray:
+    """Round-robin slot → pseudo-thread map (the paper's dynamic chunk pool)."""
+    return np.arange(n_slots, dtype=np.int64) % max(1, n_threads)

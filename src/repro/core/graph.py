@@ -1,0 +1,249 @@
+"""Graph substrate: host-side dynamic graph store + device snapshots.
+
+The paper (§3.4) assumes batch updates interleave with computation against a
+read-only *snapshot* of the graph.  We mirror that: ``HostGraph`` is the mutable
+(functionally-updated) host-side store built on numpy; ``GraphSnapshot`` is the
+immutable, padded, device-resident view that every JAX algorithm consumes.
+
+Layout decisions (TPU-native, see DESIGN.md §2):
+  * in-edges stored as flat (src, dst) arrays sorted by dst  → pull-mode SpMV is
+    ``segment_sum(contrib[src], dst)``;
+  * out-edges stored sorted by src                            → frontier expansion
+    is an OR-scatter over out-edge tiles;
+  * vertices grouped into fixed-size blocks (the paper's "chunks"); per-block
+    edge ranges (``in_block_ptr`` / ``out_block_ptr``) drive the blocked
+    frontier engine in :mod:`repro.core.blocked`;
+  * all arrays padded to static capacities with sentinel vertex id ``n`` so a
+    snapshot family shares one jit cache across a dynamic stream.
+
+Self-loops are added to every vertex (paper §5.1.3) which removes dead ends and
+the global teleport correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSnapshot:
+    """Immutable device view of one time step of a dynamic graph.
+
+    Padded edges carry ``src == dst == n`` (the phantom vertex); rank vectors
+    are padded with one trailing zero so gathers through the phantom are 0.
+    """
+
+    n: int                    # number of real vertices
+    m: int                    # number of real edges (incl. self-loops)
+    block_size: int           # vertices per block ("chunk")
+    n_blocks: int
+    # -- in-edge view (sorted by dst) --------------------------------------
+    src: jnp.ndarray          # [m_pad] i32
+    dst: jnp.ndarray          # [m_pad] i32
+    in_block_ptr: jnp.ndarray  # [n_blocks+1] i32  edge range per dst-block
+    # -- out-edge view (sorted by src) -------------------------------------
+    osrc: jnp.ndarray         # [m_pad] i32
+    odst: jnp.ndarray         # [m_pad] i32
+    out_block_ptr: jnp.ndarray  # [n_blocks+1] i32 edge range per src-block
+    # -- per-vertex --------------------------------------------------------
+    out_deg: jnp.ndarray      # [n_pad] i32 (>=1 thanks to self-loops; 0 on pad)
+    vertex_valid: jnp.ndarray  # [n_pad] bool
+
+    @property
+    def n_pad(self) -> int:
+        return self.n_blocks * self.block_size
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.src.shape[0])
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        children = (self.src, self.dst, self.in_block_ptr, self.osrc,
+                    self.odst, self.out_block_ptr, self.out_deg,
+                    self.vertex_valid)
+        aux = (self.n, self.m, self.block_size, self.n_blocks)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # pragma: no cover
+        n, m, block_size, n_blocks = aux
+        (src, dst, ibp, osrc, odst, obp, out_deg, vv) = children
+        return cls(n=n, m=m, block_size=block_size, n_blocks=n_blocks,
+                   src=src, dst=dst, in_block_ptr=ibp, osrc=osrc, odst=odst,
+                   out_block_ptr=obp, out_deg=out_deg, vertex_valid=vv)
+
+
+jax.tree_util.register_pytree_node(
+    GraphSnapshot, GraphSnapshot.tree_flatten, GraphSnapshot.tree_unflatten)
+
+
+class HostGraph:
+    """Host-side dynamic directed graph with batch update support.
+
+    Stores the edge set (without self-loops) as a sorted, de-duplicated
+    ``(src, dst)`` uint64-keyed numpy array.  ``apply_batch`` returns a new
+    ``HostGraph`` — updates are functional, matching snapshot semantics.
+    """
+
+    def __init__(self, n: int, edges: np.ndarray, *, _sorted: bool = False):
+        self.n = int(n)
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        # drop self-loops from the *stored* edge set (re-added per snapshot)
+        edges = edges[edges[:, 0] != edges[:, 1]]
+        keys = edges[:, 0] * np.int64(self.n) + edges[:, 1]
+        if not _sorted:
+            keys = np.unique(keys)
+        self._keys = keys  # sorted unique uint keys
+
+    # -- basic accessors ----------------------------------------------------
+    @property
+    def m(self) -> int:
+        """Edge count *excluding* self-loops."""
+        return int(self._keys.shape[0])
+
+    @property
+    def edges(self) -> np.ndarray:
+        src = self._keys // self.n
+        dst = self._keys % self.n
+        return np.stack([src, dst], axis=1)
+
+    def has_edges(self, edges: np.ndarray) -> np.ndarray:
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        keys = edges[:, 0] * np.int64(self.n) + edges[:, 1]
+        idx = np.searchsorted(self._keys, keys)
+        idx = np.clip(idx, 0, max(self.m - 1, 0))
+        if self.m == 0:
+            return np.zeros(len(keys), dtype=bool)
+        return self._keys[idx] == keys
+
+    # -- dynamic updates ----------------------------------------------------
+    def apply_batch(self, deletions: np.ndarray, insertions: np.ndarray
+                    ) -> "HostGraph":
+        dels = np.asarray(deletions, dtype=np.int64).reshape(-1, 2)
+        ins = np.asarray(insertions, dtype=np.int64).reshape(-1, 2)
+        ins = ins[ins[:, 0] != ins[:, 1]]
+        del_keys = dels[:, 0] * np.int64(self.n) + dels[:, 1]
+        ins_keys = ins[:, 0] * np.int64(self.n) + ins[:, 1]
+        keys = self._keys
+        if len(del_keys):
+            keep = np.isin(keys, del_keys, invert=True,
+                           assume_unique=False)
+            keys = keys[keep]
+        if len(ins_keys):
+            keys = np.unique(np.concatenate([keys, ins_keys]))
+        g = HostGraph.__new__(HostGraph)
+        g.n = self.n
+        g._keys = keys
+        return g
+
+    # -- snapshotting ---------------------------------------------------------
+    def snapshot(self, *, block_size: int = 256,
+                 edge_capacity: Optional[int] = None,
+                 dtype=jnp.int32) -> GraphSnapshot:
+        """Build the padded device snapshot (self-loops added here)."""
+        n = self.n
+        n_blocks = max(1, _round_up(n, block_size) // block_size)
+        n_pad = n_blocks * block_size
+
+        e = self.edges
+        # self-loops for every vertex (paper §5.1.3: removes dead ends)
+        loops = np.arange(n, dtype=np.int64)
+        src = np.concatenate([e[:, 0], loops])
+        dst = np.concatenate([e[:, 1], loops])
+        m = src.shape[0]
+        # +1024 tail guard: tile reads of up to 1024 edges may overshoot the
+        # real edge range; the guard keeps dynamic_slice from clamping the
+        # start (which would desynchronize data and validity mask).
+        m_pad = edge_capacity if edge_capacity is not None else (
+            _round_up(max(m, 1), 1024) + 1024)
+        if m_pad < m + 1024:
+            raise ValueError(
+                f"edge_capacity {m_pad} < edge count {m} + 1024 tail guard")
+
+        out_deg = np.bincount(src, minlength=n_pad).astype(np.int32)
+
+        def _sorted_padded(key_arr, a, b):
+            order = np.argsort(key_arr, kind="stable")
+            a, b = a[order], b[order]
+            pad = np.full(m_pad - m, n, dtype=np.int64)
+            return (np.concatenate([a, pad]).astype(np.int32),
+                    np.concatenate([b, pad]).astype(np.int32))
+
+        s_dst, s_src_by_dst = _sorted_padded(dst, dst, src)
+        # in-edges sorted by dst
+        in_dst, in_src = s_dst, s_src_by_dst
+        o_src, o_dst = _sorted_padded(src, src, dst)
+
+        def _block_ptr(sorted_vertex_ids: np.ndarray) -> np.ndarray:
+            # edge range [ptr[b], ptr[b+1]) for vertices in block b
+            bounds = np.arange(n_blocks + 1, dtype=np.int64) * block_size
+            return np.searchsorted(
+                sorted_vertex_ids[:m], bounds, side="left").astype(np.int32)
+
+        in_bp = _block_ptr(in_dst)
+        out_bp = _block_ptr(o_src)
+
+        vv = np.zeros(n_pad, dtype=bool)
+        vv[:n] = True
+
+        dev = jnp.asarray
+        return GraphSnapshot(
+            n=n, m=m, block_size=block_size, n_blocks=n_blocks,
+            src=dev(in_src), dst=dev(in_dst), in_block_ptr=dev(in_bp),
+            osrc=dev(o_src), odst=dev(o_dst), out_block_ptr=dev(out_bp),
+            out_deg=dev(out_deg), vertex_valid=dev(vv))
+
+
+# ---------------------------------------------------------------------------
+# JAX-side helpers shared by the engines
+# ---------------------------------------------------------------------------
+
+def contributions(g: GraphSnapshot, ranks: jnp.ndarray) -> jnp.ndarray:
+    """``R[u] / outdeg(u)`` padded with a trailing 0 for the phantom vertex."""
+    deg = jnp.maximum(g.out_deg, 1).astype(ranks.dtype)
+    c = jnp.where(g.vertex_valid, ranks[:g.n_pad] / deg, 0)
+    return jnp.concatenate([c, jnp.zeros((1,), dtype=ranks.dtype)])
+
+
+def pull_all(g: GraphSnapshot, ranks: jnp.ndarray, *, alpha: float
+             ) -> jnp.ndarray:
+    """Dense pull step over every vertex: one full SpMV via segment_sum."""
+    c = contributions(g, ranks)
+    pulled = jax.ops.segment_sum(c[g.src], g.dst, num_segments=g.n_pad + 1,
+                                 indices_are_sorted=True)[:g.n_pad]
+    base = jnp.asarray((1.0 - alpha) / g.n, dtype=ranks.dtype)
+    r = base + jnp.asarray(alpha, ranks.dtype) * pulled
+    return jnp.where(g.vertex_valid, r, 0)
+
+
+def out_neighbor_or(g: GraphSnapshot, flags: jnp.ndarray) -> jnp.ndarray:
+    """OR-semiring SpMV on the transposed adjacency: returns the indicator of
+    vertices having at least one in-neighbor with ``flags`` set (i.e. the
+    out-neighborhood of the flagged set).  Used for frontier expansion and
+    the initial affected marking."""
+    f = jnp.concatenate([flags.astype(jnp.int32),
+                         jnp.zeros((1,), jnp.int32)])
+    hit = jax.ops.segment_max(f[g.osrc], g.odst, num_segments=g.n_pad + 1,
+                              indices_are_sorted=False)[:g.n_pad]
+    return (hit > 0) & g.vertex_valid
+
+
+def initial_ranks(g: GraphSnapshot, dtype=jnp.float64) -> jnp.ndarray:
+    r = jnp.full((g.n_pad,), 1.0 / g.n, dtype=dtype)
+    return jnp.where(g.vertex_valid, r, 0)
+
+
+def pad_ranks(g: GraphSnapshot, ranks: jnp.ndarray) -> jnp.ndarray:
+    """Pad/crop a rank vector from another snapshot family onto this one."""
+    r = jnp.zeros((g.n_pad,), dtype=ranks.dtype)
+    k = min(int(ranks.shape[0]), g.n_pad)
+    return r.at[:k].set(ranks[:k])

@@ -1,0 +1,216 @@
+"""PageRank variants — Static / ND / DT / DF × BB / LF (paper Algorithms 1-8).
+
+Two engines back every variant:
+  * ``dense``   — full-SpMV Jacobi / block-sequential Gauss–Seidel over all
+                  blocks; simple, used for oracles and the distributed path;
+  * ``blocked`` — the frontier-compacted sweep engine (:mod:`.blocked`) with
+                  edge-proportional work and fault simulation; this is the
+                  production engine and what benchmarks measure.
+
+Variant = (initial ranks, initial affected set, expand?) × (mode):
+    Static : R0 = 1/n,      affected = all,              expand = off
+    ND     : R0 = R^{t-1},  affected = all,              expand = off
+    DT     : R0 = R^{t-1},  affected = reachable(Δ),     expand = off
+    DF     : R0 = R^{t-1},  affected = out-nbrs(src(Δ)), expand = on (τ_f)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocked as blk
+from repro.core import faults as flt
+from repro.core import frontier as fr
+from repro.core.graph import (GraphSnapshot, initial_ranks, pull_all,
+                              pad_ranks)
+
+DEFAULT_ALPHA = 0.85
+DEFAULT_TAU = 1e-10          # paper: 1e-10 (f64); use ~1e-7 for f32 runs
+MAX_ITERATIONS = 500
+
+
+@dataclasses.dataclass
+class PagerankResult:
+    ranks: jnp.ndarray              # [n_pad]
+    stats: blk.SweepStats
+    wall_time_s: float = 0.0
+
+    @property
+    def converged(self) -> bool:
+        return self.stats.converged
+
+
+def default_dtype() -> jnp.dtype:
+    return jnp.dtype(jnp.float64 if jax.config.jax_enable_x64
+                     else jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense engine (oracle-grade, full work every iteration)
+# ---------------------------------------------------------------------------
+
+def dense_jacobi(g: GraphSnapshot, R0, affected0, *, expand: bool,
+                 alpha: float = DEFAULT_ALPHA, tau: float = DEFAULT_TAU,
+                 tau_f: Optional[float] = None,
+                 max_iterations: int = MAX_ITERATIONS
+                 ) -> Tuple[jnp.ndarray, int, bool]:
+    """Barrier-based engine: masked full-SpMV per iteration (Alg. 1/3/5/7)."""
+    tau_f = (tau / 1000.0) if (expand and tau_f is None) else (
+        tau_f if tau_f is not None else float("inf"))
+
+    def cond(state):
+        R, affected, dR, i = state
+        return jnp.logical_and(dR > tau, i < max_iterations)
+
+    def body(state):
+        R, affected, _, i = state
+        r_all = pull_all(g, R, alpha=alpha)
+        r_new = jnp.where(affected, r_all, R)
+        dr = jnp.abs(r_new - R)
+        if expand:
+            changed = affected & (dr > tau_f)
+            affected, _ = fr.expand_frontier(g, changed, affected,
+                                             jnp.zeros_like(affected))
+        return r_new, affected, jnp.max(dr), i + 1
+
+    R = jnp.where(g.vertex_valid, R0[:g.n_pad], 0)
+    init = (R, affected0[:g.n_pad] & g.vertex_valid,
+            jnp.asarray(jnp.inf, R.dtype), jnp.int32(0))
+    R, _, dR, iters = jax.lax.while_loop(cond, body, init)
+    return R, int(iters), bool(dR <= tau)
+
+
+# ---------------------------------------------------------------------------
+# unified runner
+# ---------------------------------------------------------------------------
+
+def _run(g: GraphSnapshot, R0, affected0, *, mode: str, expand: bool,
+         engine: str, alpha: float, tau: float, tau_f: Optional[float],
+         max_iterations: int, faults: Optional[flt.FaultPlan], tile: int,
+         active_policy: str = "affected") -> PagerankResult:
+    t0 = time.perf_counter()
+    if engine == "dense":
+        if mode == "bb":
+            R, iters, conv = dense_jacobi(
+                g, R0, affected0, expand=expand, alpha=alpha, tau=tau,
+                tau_f=tau_f, max_iterations=max_iterations)
+            R = jax.block_until_ready(R)
+            stats = blk.SweepStats(sweeps=iters, iterations=iters,
+                                   converged=conv,
+                                   edges_processed=iters * g.m)
+        else:
+            # dense LF == blocked engine with every block active; reuse it
+            R, stats = blk.run_blocked(
+                g, R0, affected0, mode="lf", expand=expand, alpha=alpha,
+                tau=tau, tau_f=tau_f, max_iterations=max_iterations,
+                tile=tile, faults=faults, active_policy=active_policy)
+            R = jax.block_until_ready(R)
+    elif engine == "blocked":
+        R, stats = blk.run_blocked(
+            g, R0, affected0, mode=mode, expand=expand, alpha=alpha, tau=tau,
+            tau_f=tau_f, max_iterations=max_iterations, tile=tile,
+            faults=faults, active_policy=active_policy)
+        R = jax.block_until_ready(R)
+    else:
+        raise ValueError(engine)
+    return PagerankResult(ranks=R, stats=stats,
+                          wall_time_s=time.perf_counter() - t0)
+
+
+def _all_affected(g: GraphSnapshot) -> jnp.ndarray:
+    return g.vertex_valid
+
+
+# -- Static -----------------------------------------------------------------
+
+def static_pagerank(g: GraphSnapshot, *, mode: str = "bb",
+                    engine: str = "blocked", dtype=None, **kw
+                    ) -> PagerankResult:
+    dtype = dtype or default_dtype()
+    return _run(g, initial_ranks(g, dtype), _all_affected(g), mode=mode,
+                expand=False, engine=engine, **_defaults(kw))
+
+
+# -- Naive-dynamic ------------------------------------------------------------
+
+def nd_pagerank(g: GraphSnapshot, r_prev: jnp.ndarray, *, mode: str = "bb",
+                engine: str = "blocked", **kw) -> PagerankResult:
+    return _run(g, pad_ranks(g, r_prev), _all_affected(g), mode=mode,
+                expand=False, engine=engine, **_defaults(kw))
+
+
+# -- Dynamic Traversal ---------------------------------------------------------
+
+def dt_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
+                r_prev: jnp.ndarray, *, mode: str = "bb",
+                engine: str = "blocked", **kw) -> PagerankResult:
+    affected = fr.dt_affected(g_prev, g, batch)
+    return _run(g, pad_ranks(g, r_prev), affected, mode=mode, expand=False,
+                engine=engine, **_defaults(kw))
+
+
+# -- Dynamic Frontier (the paper's contribution) -------------------------------
+
+def df_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
+                r_prev: jnp.ndarray, *, mode: str = "lf",
+                engine: str = "blocked",
+                helping_first_pass: Optional[jnp.ndarray] = None,
+                **kw) -> PagerankResult:
+    """DF_BB (mode="bb") / DF_LF (mode="lf"), Algorithms 1 & 2."""
+    if helping_first_pass is not None:
+        affected, _, _ = fr.initial_affected_with_helping(
+            g_prev, g, batch, helping_first_pass)
+    else:
+        affected = fr.initial_affected(g_prev, g, batch)
+    return _run(g, pad_ranks(g, r_prev), affected, mode=mode, expand=True,
+                engine=engine, **_defaults(kw))
+
+
+def _defaults(kw: dict) -> dict:
+    out = dict(alpha=DEFAULT_ALPHA, tau=DEFAULT_TAU, tau_f=None,
+               max_iterations=MAX_ITERATIONS, faults=None, tile=512,
+               active_policy="affected")
+    out.update(kw)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# reference oracle (paper §5.1.5: barrier-based static at τ=1e-100, ≤500 it)
+# ---------------------------------------------------------------------------
+
+def reference_pagerank(g: GraphSnapshot, *, alpha: float = DEFAULT_ALPHA,
+                       iterations: int = MAX_ITERATIONS, dtype=None
+                       ) -> jnp.ndarray:
+    dtype = dtype or default_dtype()
+
+    def body(i, R):
+        return pull_all(g, R, alpha=alpha)
+
+    return jax.lax.fori_loop(0, iterations, body, initial_ranks(g, dtype))
+
+
+def numpy_reference(g: GraphSnapshot, *, alpha: float = DEFAULT_ALPHA,
+                    iterations: int = 200) -> np.ndarray:
+    """Independent numpy oracle (f64) for tests."""
+    n, n_pad = g.n, g.n_pad
+    src = np.asarray(g.src)[:g.m]
+    dst = np.asarray(g.dst)[:g.m]
+    deg = np.maximum(np.asarray(g.out_deg), 1).astype(np.float64)
+    R = np.full(n_pad, 1.0 / n)
+    R[n:] = 0
+    for _ in range(iterations):
+        c = R / deg
+        pulled = np.bincount(dst, weights=c[src], minlength=n_pad)[:n_pad]
+        R_new = (1 - alpha) / n + alpha * pulled
+        R_new[n:] = 0
+        R = R_new
+    return R
+
+
+def linf(a, b) -> float:
+    return float(jnp.max(jnp.abs(a - b)))

@@ -1,0 +1,158 @@
+"""Deterministic synthetic data pipeline (host substrate).
+
+Everything the training loops consume comes through here: token streams for
+LM training, graph batches for GNNs, id/label streams for recsys.  All
+streams are:
+  * deterministic per (seed, step) — a restarted job regenerates the exact
+    batch sequence from the checkpoint step (checkpoint/restart correctness
+    does not depend on saving the data cursor);
+  * prefetchable — ``prefetch(it, depth)`` overlaps host generation with
+    device compute via a background thread;
+  * shardable — batches are host-global; the launcher device_puts them with
+    the batch sharding of the active mesh.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# generic machinery
+# ---------------------------------------------------------------------------
+
+def counted_stream(make_batch: Callable[[int], Dict], *, start: int = 0
+                   ) -> Iterator[Dict]:
+    step = start
+    while True:
+        yield make_batch(step)
+        step += 1
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    """Background-thread prefetcher (host→device overlap)."""
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    stop = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item
+
+
+# ---------------------------------------------------------------------------
+# LM token stream
+# ---------------------------------------------------------------------------
+
+def lm_stream(vocab: int, batch: int, seq: int, *, seed: int = 0,
+              start: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Markov-ish synthetic token stream: learnable but non-trivial.
+
+    tokens[t+1] = (a·tokens[t] + noise) mod vocab gives next-token structure
+    a model can actually fit — smoke-scale loss curves are meaningful.
+    """
+    a = 31
+
+    def make(step: int) -> Dict[str, jnp.ndarray]:
+        rng = np.random.default_rng((seed, step))
+        x = np.empty((batch, seq + 1), np.int64)
+        x[:, 0] = rng.integers(0, vocab, batch)
+        noise = rng.integers(0, 7, (batch, seq))
+        for t in range(seq):
+            x[:, t + 1] = (a * x[:, t] + noise[:, t]) % vocab
+        return {"tokens": jnp.asarray(x[:, :-1], jnp.int32),
+                "labels": jnp.asarray(x[:, 1:], jnp.int32)}
+
+    return counted_stream(make, start=start)
+
+
+# ---------------------------------------------------------------------------
+# GNN batches
+# ---------------------------------------------------------------------------
+
+def gnn_full_graph_batch(*, n: int, e: int, d_feat: int, n_out: int,
+                         seed: int = 0, with_pos: bool = False
+                         ) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = {
+        "nodes": jnp.asarray(rng.normal(size=(n, d_feat)), jnp.float32),
+        "senders": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "receivers": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, n_out, n), jnp.int32),
+    }
+    if with_pos:
+        out["pos"] = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    return out
+
+
+def graphsage_minibatch_stream(sampler, feats: np.ndarray,
+                               labels: np.ndarray, *, batch_nodes: int,
+                               fanouts: Sequence[int], seed: int = 0,
+                               start: int = 0) -> Iterator[Dict]:
+    """Wraps the real neighbor sampler into the trainer batch format."""
+    def make(step: int) -> Dict:
+        rng = np.random.default_rng((seed, step))
+        seeds = rng.integers(0, sampler.n, size=batch_nodes)
+        hops = sampler.sample_block(seeds, fanouts, rng)
+        batch = {f"hop{i}": jnp.asarray(feats[h], jnp.float32)
+                 for i, h in enumerate(hops)}
+        batch["labels"] = jnp.asarray(labels[seeds], jnp.int32)
+        return batch
+
+    return counted_stream(make, start=start)
+
+
+# ---------------------------------------------------------------------------
+# recsys stream
+# ---------------------------------------------------------------------------
+
+def recsys_stream(n_fields: int, rows_per_field: int, batch: int, *,
+                  seed: int = 0, start: int = 0) -> Iterator[Dict]:
+    """CTR stream with planted structure: the label correlates with a hash
+    of two field ids, so AUC above 0.5 is learnable."""
+    offsets = np.arange(n_fields, dtype=np.int64) * rows_per_field
+
+    def make(step: int) -> Dict:
+        rng = np.random.default_rng((seed, step))
+        local = rng.integers(0, rows_per_field, (batch, n_fields))
+        ids = local + offsets[None, :]
+        signal = ((local[:, 0] ^ local[:, 1 % n_fields]) % 7) < 3
+        flip = rng.random(batch) < 0.2
+        labels = np.where(flip, ~signal, signal).astype(np.float32)
+        return {"ids": jnp.asarray(ids, jnp.int32),
+                "labels": jnp.asarray(labels)}
+
+    return counted_stream(make, start=start)
+
+
+# ---------------------------------------------------------------------------
+# dynamic-graph batch stream (the paper's workload)
+# ---------------------------------------------------------------------------
+
+def dynamic_graph_stream(hg, *, batch_frac: float, seed: int = 0,
+                         deletions_frac: float = 0.5):
+    """Yields (HostGraph_t-1, HostGraph_t, deletions, insertions) forever."""
+    from repro.core.delta import random_batch
+    step = 0
+    while True:
+        dels, ins = random_batch(hg, batch_frac, seed=(seed + step),
+                                 deletions_frac=deletions_frac)
+        hg_new = hg.apply_batch(dels, ins)
+        yield hg, hg_new, dels, ins
+        hg = hg_new
+        step += 1

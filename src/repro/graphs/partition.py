@@ -1,0 +1,90 @@
+"""Device partitioners for distributed graph work.
+
+The 1-D contiguous partition in core/distributed.py is the baseline; the
+edge-cut-aware partitioners here reduce the cross-device frontier traffic
+(the collective term of the roofline) for graphs with locality:
+
+  * ``contiguous``   — vertex v → device v // n_loc (road networks and
+    k-mer chains already have index locality → low edge-cut);
+  * ``hash``         — vertex v → device hash(v) % n_dev (load-balanced but
+    worst-case edge-cut; what you use when the id space is adversarial);
+  * ``bfs_blocks``   — BFS-order relabeling then contiguous split: a cheap
+    locality-recovering partition for power-law graphs (a lightweight
+    stand-in for METIS-class partitioners, which would be overkill here).
+
+``edge_cut`` measures the fraction of edges crossing devices — the direct
+driver of the pagerank sweep's all-gather volume under the "delta" exchange.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.graph import HostGraph
+
+
+def contiguous(n: int, n_dev: int) -> np.ndarray:
+    n_loc = -(-n // n_dev)
+    return np.arange(n) // n_loc
+
+
+def hashed(n: int, n_dev: int, *, seed: int = 0x9E3779B9) -> np.ndarray:
+    v = np.arange(n, dtype=np.uint64)
+    v = (v * np.uint64(seed)) & np.uint64(0xFFFFFFFF)
+    return (v % np.uint64(n_dev)).astype(np.int64)
+
+
+def bfs_order(hg: HostGraph) -> np.ndarray:
+    """BFS relabeling: order[new_id] = old_id (undirected view)."""
+    e = hg.edges
+    n = hg.n
+    src = np.concatenate([e[:, 0], e[:, 1]])
+    dst = np.concatenate([e[:, 1], e[:, 0]])
+    order_idx = np.argsort(src, kind="stable")
+    src_s, dst_s = src[order_idx], dst[order_idx]
+    ptr = np.searchsorted(src_s, np.arange(n + 1))
+    visited = np.zeros(n, dtype=bool)
+    order = np.empty(n, dtype=np.int64)
+    pos = 0
+    for seed in range(n):
+        if visited[seed]:
+            continue
+        frontier = [seed]
+        visited[seed] = True
+        while frontier:
+            nxt = []
+            for u in frontier:
+                order[pos] = u
+                pos += 1
+                nbrs = dst_s[ptr[u]:ptr[u + 1]]
+                for w in nbrs[~visited[nbrs]]:
+                    if not visited[w]:
+                        visited[w] = True
+                        nxt.append(w)
+            frontier = nxt
+    return order
+
+
+def bfs_blocks(hg: HostGraph, n_dev: int) -> np.ndarray:
+    """Vertex → device map via BFS-order contiguous split."""
+    order = bfs_order(hg)
+    owner = np.empty(hg.n, dtype=np.int64)
+    owner[order] = contiguous(hg.n, n_dev)
+    return owner
+
+
+def edge_cut(hg: HostGraph, owner: np.ndarray) -> float:
+    """Fraction of edges whose endpoints live on different devices."""
+    e = hg.edges
+    if len(e) == 0:
+        return 0.0
+    return float(np.mean(owner[e[:, 0]] != owner[e[:, 1]]))
+
+
+def relabel(hg: HostGraph, order: np.ndarray) -> Tuple[HostGraph, np.ndarray]:
+    """Apply a vertex relabeling; returns (new graph, inverse map)."""
+    inv = np.empty_like(order)
+    inv[order] = np.arange(len(order))
+    e = hg.edges
+    return HostGraph(hg.n, np.stack([inv[e[:, 0]], inv[e[:, 1]]], 1)), inv

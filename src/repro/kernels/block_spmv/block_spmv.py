@@ -1,0 +1,88 @@
+"""Block-sparse SpMV Pallas TPU kernel — the PageRank pull hot-spot on the MXU.
+
+Hardware adaptation (DESIGN.md §2): a CPU/GPU CSR gather loop has no MXU
+mapping.  Instead the adjacency is partitioned into dense B×B tiles and only
+non-empty tiles are stored.  Per destination row-block, the kernel walks its
+(padded) tile list via *scalar-prefetched* indices and accumulates
+
+    acc[rows of i] += A_tile(i, j) @ c[cols of tile j]
+
+entirely in VMEM, writing each output block exactly once.  The same kernel in
+the OR-semiring (saturating accumulation) implements the Dynamic Frontier
+expansion ("mark out-neighbors of changed vertices") on the transposed tiles.
+
+Grid = (n_row_blocks, max_tiles_per_row); the tile loop is innermost so the
+output block stays resident in VMEM across the accumulation (standard Pallas
+revisiting pattern).  Padded slots carry column id -1 and are masked.
+
+VMEM working set per grid step: one B×B tile + one B×1 slice of x + one B×1
+accumulator ≈ (B² + 2B)·4 bytes → B=256 ⇒ ~260 KiB, far below the ~16 MiB
+VMEM budget; B is kept a parameter (tests sweep 8..128) and must be a
+multiple of 8×128 lanes for peak MXU utilisation on real hardware (B=128/256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, cols_ref, tiles_ref, x_ref, o_ref, *, semiring: str):
+    j = pl.program_id(1)
+    valid = cols_ref[pl.program_id(0), j] >= 0
+    tile = tiles_ref[0]                       # [B, B]
+    x = x_ref[...]                            # [B, 1]
+    part = jnp.dot(tile, x, preferred_element_type=jnp.float32)
+    part = jnp.where(valid, part, 0.0).astype(o_ref.dtype)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    if semiring == "sum":
+        o_ref[...] += part
+    elif semiring == "or":
+        # saturating OR: any positive contribution marks the row
+        o_ref[...] = jnp.maximum(o_ref[...], jnp.minimum(part, 1.0))
+    else:
+        raise ValueError(semiring)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_tiles",
+                                             "semiring", "interpret"))
+def block_spmv_pallas(tile_idx: jnp.ndarray,    # [n_rb * max_tiles] i32
+                      tile_cols: jnp.ndarray,   # [n_rb, max_tiles]  i32 (-1 pad)
+                      tiles: jnp.ndarray,       # [n_tiles, B, B]    f32
+                      x: jnp.ndarray,           # [n_cb * B]         f32
+                      *, block: int, max_tiles: int, semiring: str = "sum",
+                      interpret: bool = False) -> jnp.ndarray:
+    """Returns y [n_rb * B] with y = A @ x (sum) or y = (A @ x > 0) (or)."""
+    n_rb = tile_cols.shape[0]
+    x2 = x.reshape(-1, 1)
+
+    gspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_rb, max_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tiles.shape[1], tiles.shape[2]),
+                         lambda i, j, idx, cols: (idx[i * max_tiles + j], 0,
+                                                  0)),
+            pl.BlockSpec((block, 1),
+                         lambda i, j, idx, cols: (
+                             jnp.maximum(cols[i, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i, j, idx, cols: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, semiring=semiring),
+        grid_spec=gspec,
+        out_shape=jax.ShapeDtypeStruct((n_rb * block, 1), x.dtype),
+        interpret=interpret,
+    )(tile_idx, tile_cols, tiles, x2)
+    y = out[:, 0]
+    if semiring == "or":
+        y = (y > 0).astype(x.dtype)
+    return y

@@ -1,0 +1,115 @@
+"""Host-side block-sparse builder + jit'd SpMV wrapper + PageRank step op."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_spmv.block_spmv import block_spmv_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparse:
+    """Block-sparse matrix A [n_rows_pad, n_cols_pad] in B×B dense tiles.
+
+    ``tiles[k]`` is the dense tile for the k-th stored (row-block, col-block)
+    pair; ``tile_cols[i, j]`` is the column-block of the j-th tile of
+    row-block i (or -1 padding); ``tile_idx`` flat-indexes into ``tiles``.
+    """
+    n_rows: int
+    n_cols: int
+    block: int
+    max_tiles: int
+    tiles: jnp.ndarray       # [n_tiles, B, B]
+    tile_cols: jnp.ndarray   # [n_rb, max_tiles] i32
+    tile_idx: jnp.ndarray    # [n_rb * max_tiles] i32
+
+    @property
+    def n_rb(self) -> int:
+        return self.tile_cols.shape[0]
+
+    @property
+    def n_cb(self) -> int:
+        return (self.n_cols + self.block - 1) // self.block
+
+
+def build_block_sparse(rows: np.ndarray, cols: np.ndarray, n_rows: int,
+                       n_cols: int, *, block: int = 128,
+                       values: Optional[np.ndarray] = None,
+                       dtype=np.float32) -> BlockSparse:
+    """Build tiles from an edge list: A[rows[k], cols[k]] = values[k] (or 1)."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = (np.ones_like(rows, dtype=dtype) if values is None
+            else np.asarray(values, dtype))
+    n_rb = (n_rows + block - 1) // block
+    n_cb = (n_cols + block - 1) // block
+
+    rb, cb = rows // block, cols // block
+    key = rb * n_cb + cb
+    order = np.argsort(key, kind="stable")
+    rows, cols, vals, key = rows[order], cols[order], vals[order], key[order]
+    uniq, start = np.unique(key, return_index=True)
+    counts = np.diff(np.append(start, len(key)))
+
+    n_tiles = max(1, len(uniq))
+    tiles = np.zeros((n_tiles, block, block), dtype=dtype)
+    for t, (k, s, c) in enumerate(zip(uniq, start, counts)):
+        r = rows[s:s + c] % block
+        cc = cols[s:s + c] % block
+        np.add.at(tiles[t], (r, cc), vals[s:s + c])
+
+    tiles_rb = (uniq // n_cb).astype(np.int64)
+    tiles_cb = (uniq % n_cb).astype(np.int64)
+    per_row = np.bincount(tiles_rb, minlength=n_rb)
+    max_tiles = max(1, int(per_row.max(initial=1)))
+
+    tile_cols = np.full((n_rb, max_tiles), -1, dtype=np.int32)
+    tile_idx = np.zeros((n_rb, max_tiles), dtype=np.int32)
+    slot = np.zeros(n_rb, dtype=np.int64)
+    for t, (r, c) in enumerate(zip(tiles_rb, tiles_cb)):
+        tile_cols[r, slot[r]] = c
+        tile_idx[r, slot[r]] = t
+        slot[r] += 1
+
+    return BlockSparse(
+        n_rows=n_rows, n_cols=n_cols, block=block, max_tiles=max_tiles,
+        tiles=jnp.asarray(tiles), tile_cols=jnp.asarray(tile_cols),
+        tile_idx=jnp.asarray(tile_idx.reshape(-1)))
+
+
+def block_spmv(mat: BlockSparse, x: jnp.ndarray, *, semiring: str = "sum",
+               interpret: bool = True) -> jnp.ndarray:
+    """y = A @ x over the requested semiring; x is zero-padded to block size.
+
+    ``interpret=True`` executes the kernel body on CPU (this container);
+    on TPU pass ``interpret=False``.
+    """
+    n_cb_pad = mat.n_cb * mat.block
+    xp = jnp.zeros((n_cb_pad,), x.dtype).at[:x.shape[0]].set(x)
+    y = block_spmv_pallas(mat.tile_idx, mat.tile_cols, mat.tiles, xp,
+                          block=mat.block, max_tiles=mat.max_tiles,
+                          semiring=semiring, interpret=interpret)
+    return y[:mat.n_rows]
+
+
+def pagerank_pull_step(mat: BlockSparse, ranks: jnp.ndarray,
+                       inv_out_deg: jnp.ndarray, n: int, *,
+                       alpha: float = 0.85, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """One PageRank pull iteration with the Pallas SpMV:
+    r' = (1-α)/n + α · A @ (r ⊙ 1/outdeg).  A[v,u] = 1 iff edge u→v."""
+    contrib = ranks * inv_out_deg
+    pulled = block_spmv(mat, contrib, semiring="sum", interpret=interpret)
+    return (1.0 - alpha) / n + alpha * pulled
+
+
+def frontier_expand_op(mat_t: BlockSparse, changed: jnp.ndarray, *,
+                       interpret: bool = True) -> jnp.ndarray:
+    """DF expansion: indicator of out-neighbors of ``changed`` vertices.
+    ``mat_t`` must hold A[v,u]=1 iff edge u→v (same layout as the pull)."""
+    return block_spmv(mat_t, changed.astype(jnp.float32), semiring="or",
+                      interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the block-sparse SpMV kernel."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def spmv_ref(rows: np.ndarray, cols: np.ndarray, n_rows: int,
+             x: jnp.ndarray, *, values=None, semiring: str = "sum"
+             ) -> jnp.ndarray:
+    """Edge-list oracle: y[r] = Σ_{k: rows[k]=r} values[k] · x[cols[k]]."""
+    rows = jnp.asarray(rows, jnp.int32)
+    cols = jnp.asarray(cols, jnp.int32)
+    v = (jnp.ones(rows.shape, x.dtype) if values is None
+         else jnp.asarray(values, x.dtype))
+    import jax
+    y = jax.ops.segment_sum(v * x[cols], rows, num_segments=n_rows)
+    if semiring == "or":
+        y = (y > 0).astype(x.dtype)
+    return y
+
+
+def pagerank_pull_step_ref(rows, cols, n_rows, ranks, inv_out_deg, n, *,
+                           alpha=0.85):
+    contrib = ranks * inv_out_deg
+    pulled = spmv_ref(rows, cols, n_rows, contrib)
+    return (1.0 - alpha) / n + alpha * pulled

@@ -1,0 +1,590 @@
+"""Cell builders — map (architecture × input shape × mesh) to a lowerable,
+sharded step function.  This is the single source of truth consumed by the
+multi-pod dry-run, the roofline analyzer, and the per-arch smoke tests.
+
+Design notes
+------------
+* ``main`` lowers the PRODUCTION program (scan-over-layers, scan-over-
+  microbatches) — its ``memory_analysis`` and HLO collective schedule are
+  exact.  XLA's ``cost_analysis`` counts a ``while`` body once, so LM cells
+  also carry two cheap *probes* (the same step at n_layers=1 and 2,
+  single microbatch): the roofline reconstructs exact per-step FLOPs/bytes
+  as   opt + microbatches · (P1 + (L−1)·(P2−P1) − opt).
+  GNN / recsys / pagerank mains unroll their (short) layer loops, so their
+  cost analysis is already exact and they carry no probes.
+* Inputs are ``ShapeDtypeStruct``s — nothing is allocated (the full configs
+  reach 340B params / billion-edge graphs).
+* All sharding comes from the logical-axis rule tables
+  (:mod:`repro.dist.sharding`) + per-arch overrides in the registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeSpec, get_arch
+from repro.dist import sharding as S
+from repro.dist.api import use_rules
+from repro.launch import flops as F
+from repro.optim import adam
+from repro.train import trainer
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass
+class Lowerable:
+    fn: Callable
+    args: Tuple
+    in_shardings: Any
+
+    def lower(self):
+        jf = jax.jit(self.fn, in_shardings=self.in_shardings)
+        return jf.lower(*self.args)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    family: str
+    mesh: Mesh
+    main: Lowerable
+    probes: Dict[str, Lowerable] = dataclasses.field(default_factory=dict)
+    # roofline bookkeeping
+    model_flops: float = 0.0           # analytic useful flops, full step
+    microbatches: int = 1
+    n_scan_layers: int = 1             # L for the probe correction
+    opt_flops: float = 0.0             # analytic optimizer cost (train)
+    opt_bytes: float = 0.0
+    param_count: int = 0
+    layer_param_count: int = 0         # params of ONE layer (probe algebra)
+    note: str = ""
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch_id}/{self.shape_name}"
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _rules(spec: ArchSpec, mesh: Mesh) -> S.Rules:
+    base = {"lm": S.LM_RULES, "gnn": S.GNN_RULES,
+            "recsys": S.RECSYS_RULES}.get(spec.family, S.LM_RULES)
+    rules = dict(base)
+    rules.update(spec.rules_override)
+    return rules
+
+
+def _shard(mesh, rules, logical, shape) -> NamedSharding:
+    return NamedSharding(mesh, S.logical_to_spec(logical, rules, mesh, shape))
+
+
+def _tree_shard(mesh, rules, logical_tree, abstract_tree):
+    return jax.tree.map(
+        lambda lg, a: _shard(mesh, rules, lg, a.shape),
+        logical_tree, abstract_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _opt_analytics(n_params: int, *, param_bytes: int, state_bytes: int,
+                   accum_bytes: int) -> Tuple[float, float]:
+    """Analytic AdamW cost: ~14 flops/param (incl. global-norm clip);
+    bytes = p(r+w) + g(r) + m,v(r+w)."""
+    fl = 14.0 * n_params
+    by = n_params * (2 * param_bytes + accum_bytes + 4 * state_bytes)
+    return fl, by
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_abstract_params(cfg):
+    from repro.models.transformer import model as M
+    return M.abstract_params(cfg)
+
+
+def _lm_param_shardings(cfg, mesh, rules):
+    from repro.models.transformer import model as M
+    ap = M.abstract_params(cfg)
+    lg = M.param_logical(cfg)
+    return ap, _tree_shard(mesh, rules, lg, ap)
+
+
+def _lm_opt_abstract(cfg, ap, mesh, rules, state_dtype):
+    from repro.models.transformer import model as M
+    lg = M.param_logical(cfg)
+    sd = jnp.dtype(state_dtype)
+    am = {k: SDS(v.shape, sd) for k, v in ap.items()}
+    sh = {}
+    for k, v in am.items():
+        z = S.zero1_logical(lg[k], v.shape, mesh, rules)
+        sh[k] = _shard(mesh, rules, z, v.shape)
+    aopt = {"m": am, "v": am, "step": SDS((), jnp.int32)}
+    oshard = {"m": sh, "v": sh, "step": NamedSharding(mesh, P())}
+    return aopt, oshard
+
+
+def _lm_train_lowerable(spec, shape, mesh, *, n_layers, microbatches,
+                        global_batch, scan_layers, exec_kw):
+    cfg = spec.build_cfg(n_layers=n_layers, scan_layers=scan_layers)
+    rules = _rules(spec, mesh)
+    state_dtype = exec_kw.get("state_dtype", "float32")
+    tcfg = trainer.TrainConfig(
+        microbatches=microbatches,
+        accum_dtype=exec_kw.get("accum_dtype", "float32"))
+    acfg = adam.AdamConfig(state_dtype=jnp.dtype(state_dtype))
+    step = trainer.build_train_step(trainer.lm_loss(cfg), acfg, tcfg)
+
+    def fn(params, opt_state, batch):
+        with use_rules(rules, mesh):
+            return step(params, opt_state, batch)
+
+    ap, psh = _lm_param_shardings(cfg, mesh, rules)
+    aopt, osh = _lm_opt_abstract(cfg, ap, mesh, rules, state_dtype)
+    seq = shape.dim("seq_len")
+    batch = {"tokens": SDS((global_batch, seq), jnp.int32),
+             "labels": SDS((global_batch, seq), jnp.int32)}
+    bsh = {k: _shard(mesh, rules, ("batch", "seq"), v.shape)
+           for k, v in batch.items()}
+    return Lowerable(fn, (ap, aopt, batch), (psh, osh, bsh))
+
+
+def _lm_serve_lowerable(spec, shape, mesh, *, n_layers, scan_layers):
+    from repro.models.transformer import model as M
+    cfg = spec.build_cfg(n_layers=n_layers, scan_layers=scan_layers)
+    rules = _rules(spec, mesh)
+    B = shape.dim("global_batch")
+    seq = shape.dim("seq_len")
+    ap, psh = _lm_param_shardings(cfg, mesh, rules)
+
+    if shape.kind == "prefill":
+        def fn(params, tokens):
+            with use_rules(rules, mesh):
+                return M.prefill(params, tokens, cfg, cache_len=seq)
+
+        tokens = SDS((B, seq), jnp.int32)
+        tsh = _shard(mesh, rules, ("batch", "seq"), tokens.shape)
+        return Lowerable(fn, (ap, tokens), (psh, tsh))
+
+    # decode: one new token against a seq-long KV cache
+    cshape = M.cache_shapes(cfg, B, seq)
+    clog = M.cache_logical()
+    cdt = jnp.dtype(cfg.cache_dtype or cfg.dtype)
+    cache = {k: SDS(v, cdt) for k, v in cshape.items()}
+    csh = {k: _shard(mesh, rules, clog[k], cshape[k]) for k in cache}
+
+    def fn(params, cache, token, position):
+        with use_rules(rules, mesh):
+            return M.decode_step(params, cache, token, position, cfg)
+
+    token = SDS((B,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    tsh = _shard(mesh, rules, ("batch",), token.shape)
+    return Lowerable(fn, (ap, cache, token, pos),
+                     (psh, csh, tsh, NamedSharding(mesh, P())))
+
+
+def _lm_pipeline_cell(spec, shape, mesh, *, microbatches: int = 32,
+                      state_dtype: str = "bfloat16") -> Cell:
+    """§Perf variant: GPipe pipeline over 'model' + Megatron TP over 'data'
+    (weights stationary — activation-sized collectives).  Train shapes only.
+    """
+    from repro.models.transformer import model as M
+    from repro.train.pipeline import (PipelineConfig, build_pipeline_loss,
+                                      pipeline_param_shardings)
+    cfg = spec.build_cfg()
+    B = shape.dim("global_batch")
+    seq = shape.dim("seq_len")
+    pcfg = PipelineConfig(stage_axis="model", tp_axis="data",
+                          dp_axis="pod" if "pod" in mesh.axis_names
+                          else None,
+                          microbatches=microbatches)
+    loss = build_pipeline_loss(cfg, pcfg, mesh, global_batch=B, seq=seq)
+    acfg = adam.AdamConfig(state_dtype=jnp.dtype(state_dtype))
+    step = trainer.build_train_step(loss, acfg)
+
+    ap = M.abstract_params(cfg)
+    psh = pipeline_param_shardings(cfg, pcfg, mesh)
+    sd = jnp.dtype(state_dtype)
+    am = {k: SDS(v.shape, sd) for k, v in ap.items()}
+    aopt = {"m": am, "v": am, "step": SDS((), jnp.int32)}
+    osh = {"m": psh, "v": psh, "step": NamedSharding(mesh, P())}
+    batch = {"tokens": SDS((B, seq), jnp.int32),
+             "labels": SDS((B, seq), jnp.int32)}
+    bspec = P("pod") if "pod" in mesh.axis_names else P()
+    bsh = {k: NamedSharding(mesh, bspec) for k in batch}
+    low = Lowerable(step, (ap, aopt, batch), (psh, osh, bsh))
+    n_stages = mesh.shape["model"]
+    bubble = (microbatches + n_stages - 1) / microbatches
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind=shape.kind,
+        family="lm", mesh=mesh, main=low,
+        model_flops=F.lm_model_flops(cfg, shape),
+        microbatches=microbatches, n_scan_layers=cfg.n_layers,
+        param_count=cfg.param_count(),
+        note=f"pipeline: {n_stages} stages × TP{mesh.shape['data']}, "
+             f"{microbatches} microbatches, bubble ×{bubble:.2f}")
+
+
+def _lm_cell(spec, shape, mesh) -> Cell:
+    exec_kw = spec.exec_for(shape.name)
+    mb = exec_kw.get("microbatches", 1)
+    cfg_full = spec.build_cfg()
+    L = cfg_full.n_layers
+    if shape.kind == "train":
+        B = shape.dim("global_batch")
+        main = _lm_train_lowerable(
+            spec, shape, mesh, n_layers=L, microbatches=mb, global_batch=B,
+            scan_layers=True, exec_kw=exec_kw)
+        probes = {
+            "layer1": _lm_train_lowerable(
+                spec, shape, mesh, n_layers=1, microbatches=1,
+                global_batch=B // mb, scan_layers=False, exec_kw=exec_kw),
+            "layer2": _lm_train_lowerable(
+                spec, shape, mesh, n_layers=2, microbatches=1,
+                global_batch=B // mb, scan_layers=False, exec_kw=exec_kw),
+        }
+        pb = jnp.dtype(cfg_full.param_dtype).itemsize
+        sb = jnp.dtype(exec_kw.get("state_dtype", "float32")).itemsize
+        ab = jnp.dtype(exec_kw.get("accum_dtype", "float32")).itemsize
+        ofl, oby = _opt_analytics(cfg_full.param_count(), param_bytes=pb,
+                                  state_bytes=sb, accum_bytes=ab)
+    else:
+        main = _lm_serve_lowerable(spec, shape, mesh, n_layers=L,
+                                   scan_layers=True)
+        probes = {
+            "layer1": _lm_serve_lowerable(spec, shape, mesh, n_layers=1,
+                                          scan_layers=False),
+            "layer2": _lm_serve_lowerable(spec, shape, mesh, n_layers=2,
+                                          scan_layers=False),
+        }
+        mb, ofl, oby = 1, 0.0, 0.0
+    n_total = cfg_full.param_count()
+    cfg_l1 = spec.build_cfg(n_layers=1)
+    cfg_l2 = spec.build_cfg(n_layers=2)
+    layer_params = cfg_l2.param_count() - cfg_l1.param_count()
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind=shape.kind,
+        family="lm", mesh=mesh, main=main, probes=probes,
+        model_flops=F.lm_model_flops(cfg_full, shape),
+        microbatches=mb, n_scan_layers=L, opt_flops=ofl, opt_bytes=oby,
+        param_count=n_total, layer_param_count=layer_params,
+        note=shape.note)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cfg_for_shape(spec: ArchSpec, shape: ShapeSpec, **kw):
+    if shape.kind == "batched_small":
+        task = "graph_reg"
+        d_feat, n_out = shape.dim("d_feat"), shape.dim("n_out")
+    else:
+        task = "node_clf"
+        d_feat, n_out = shape.dim("d_feat"), shape.dim("n_out")
+    return spec.build_cfg(d_feat=d_feat, n_out=n_out, task=task,
+                          scan_layers=False, **kw)
+
+
+def _gnn_batch_loss(cfg, *, n_graphs: int = 1):
+    from repro.models.gnn import get_family
+    from repro.models.gnn.common import GraphBatch
+    mod = get_family(cfg)
+
+    def fn(params, batch):
+        g = GraphBatch(
+            nodes=batch["nodes"], senders=batch["senders"],
+            receivers=batch["receivers"], pos=batch.get("pos"),
+            graph_id=batch.get("graph_id"), n_graphs=n_graphs,
+            node_mask=batch.get("node_mask"))
+        return mod.loss_fn(params, cfg, g, batch["labels"])
+    return fn
+
+
+_GNN_BATCH_LOGICAL = {
+    "nodes": ("nodes", None), "senders": ("edges",),
+    "receivers": ("edges",), "pos": ("nodes", None),
+    "graph_id": ("nodes",), "node_mask": ("nodes",),
+    "labels": ("nodes",), "labels_graph": ("batch", None),
+}
+
+
+def _gnn_train_lowerable(spec, shape, mesh, cfg, batch, *, n_graphs=1,
+                         loss=None):
+    from repro.models.gnn import get_family
+    rules = _rules(spec, mesh)
+    loss_fn = loss or _gnn_batch_loss(cfg, n_graphs=n_graphs)
+    acfg = adam.AdamConfig()
+    step = trainer.build_train_step(loss_fn, acfg)
+
+    def fn(params, opt_state, batch):
+        with use_rules(rules, mesh):
+            return step(params, opt_state, batch)
+
+    mod = get_family(cfg)
+    shapes = mod.shapes(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ap = {k: SDS(v, dt) for k, v in shapes.items()}
+    psh = {k: NamedSharding(mesh, P()) for k in ap}   # GNN params are small
+    am = {k: SDS(v, jnp.float32) for k, v in shapes.items()}
+    aopt = {"m": am, "v": am, "step": SDS((), jnp.int32)}
+    osh = {"m": psh, "v": psh, "step": NamedSharding(mesh, P())}
+
+    bsh = {}
+    for k, v in batch.items():
+        if k == "labels":
+            lg = (_GNN_BATCH_LOGICAL["labels_graph"]
+                  if cfg.task == "graph_reg" else
+                  _GNN_BATCH_LOGICAL["labels"])
+        elif k.startswith("hop"):
+            lg = ("batch",) + (None,) * (len(v.shape) - 1)
+        else:
+            lg = _GNN_BATCH_LOGICAL[k]
+        bsh[k] = _shard(mesh, rules, lg, v.shape)
+    return Lowerable(fn, (ap, aopt, batch), (psh, osh, bsh))
+
+
+def _gnn_cell(spec, shape, mesh) -> Cell:
+    f32, i32 = jnp.float32, jnp.int32
+    needs_pos = spec.build_cfg().family in ("egnn", "meshgraphnet")
+    n_graphs = 1
+
+    if shape.kind == "full_batch":
+        cfg = _gnn_cfg_for_shape(spec, shape)
+        N = _round_up(shape.dim("n_nodes"), 4096)
+        E = _round_up(shape.dim("n_edges"), 4096)
+        batch = {"nodes": SDS((N, cfg.d_feat), f32),
+                 "senders": SDS((E,), i32), "receivers": SDS((E,), i32),
+                 "labels": SDS((N,), i32)}
+        if needs_pos:
+            batch["pos"] = SDS((N, 3), f32)
+        low = _gnn_train_lowerable(spec, shape, mesh, cfg, batch)
+    elif shape.kind == "sampled" and spec.build_cfg().family == "graphsage":
+        cfg = _gnn_cfg_for_shape(spec, shape,
+                                 sample_sizes=(shape.dim("fanout1"),
+                                               shape.dim("fanout2")))
+        B, f1, f2 = (shape.dim("batch_nodes"), shape.dim("fanout1"),
+                     shape.dim("fanout2"))
+        Fe = cfg.d_feat
+        batch = {"hop0": SDS((B, Fe), f32), "hop1": SDS((B, f1, Fe), f32),
+                 "hop2": SDS((B, f1, f2, Fe), f32),
+                 "labels": SDS((B,), i32)}
+        low = _gnn_train_lowerable(
+            spec, shape, mesh, cfg, batch,
+            loss=trainer.gnn_sampled_loss(cfg))
+    elif shape.kind == "sampled":
+        # sampled-subgraph form for archs without a dense-hop path: the host
+        # sampler materializes the fanout block as one padded GraphBatch
+        cfg = _gnn_cfg_for_shape(spec, shape)
+        B, f1, f2 = (shape.dim("batch_nodes"), shape.dim("fanout1"),
+                     shape.dim("fanout2"))
+        N = _round_up(B * (1 + f1 + f1 * f2), 4096)
+        E = _round_up(B * f1 + B * f1 * f2, 4096)
+        batch = {"nodes": SDS((N, cfg.d_feat), f32),
+                 "senders": SDS((E,), i32), "receivers": SDS((E,), i32),
+                 "labels": SDS((N,), i32), "node_mask": SDS((N,), jnp.bool_)}
+        if needs_pos:
+            batch["pos"] = SDS((N, 3), f32)
+        low = _gnn_train_lowerable(spec, shape, mesh, cfg, batch)
+    elif shape.kind == "batched_small":
+        n_graphs = shape.dim("batch")
+        cfg = _gnn_cfg_for_shape(spec, shape)
+        N = n_graphs * shape.dim("n_nodes")
+        E = n_graphs * shape.dim("n_edges")
+        batch = {"nodes": SDS((N, cfg.d_feat), f32),
+                 "senders": SDS((E,), i32), "receivers": SDS((E,), i32),
+                 "graph_id": SDS((N,), i32),
+                 "labels": SDS((n_graphs, cfg.n_out), f32)}
+        if needs_pos:
+            batch["pos"] = SDS((N, 3), f32)
+        low = _gnn_train_lowerable(spec, shape, mesh, cfg, batch,
+                                   n_graphs=n_graphs)
+    else:
+        raise ValueError(shape.kind)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=shape.name, kind=shape.kind,
+        family="gnn", mesh=mesh, main=low,
+        model_flops=F.gnn_model_flops(cfg, shape),
+        note=shape.note)
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(spec, shape, mesh) -> Cell:
+    from repro.models.recsys import autoint as A
+    cfg = spec.build_cfg()
+    rules = _rules(spec, mesh)
+    ap = A.abstract_params(cfg)
+    lg = A.param_logical(cfg)
+    psh = _tree_shard(mesh, rules, lg, ap)
+    i64 = jnp.int32
+
+    if shape.kind == "train":
+        B = shape.dim("batch")
+        acfg = adam.AdamConfig()
+        step = trainer.build_train_step(trainer.recsys_loss(cfg), acfg)
+
+        def fn(params, opt_state, batch):
+            with use_rules(rules, mesh):
+                return step(params, opt_state, batch)
+
+        am = {k: SDS(v.shape, jnp.float32) for k, v in ap.items()}
+        osh = {}
+        for k, v in am.items():
+            z = S.zero1_logical(lg[k], v.shape, mesh, rules)
+            osh[k] = _shard(mesh, rules, z, v.shape)
+        aopt = {"m": am, "v": am, "step": SDS((), jnp.int32)}
+        oshard = {"m": osh, "v": osh, "step": NamedSharding(mesh, P())}
+        batch = {"ids": SDS((B, cfg.n_sparse), i64),
+                 "labels": SDS((B,), jnp.float32)}
+        bsh = {"ids": _shard(mesh, rules, ("batch", None), batch["ids"].shape),
+               "labels": _shard(mesh, rules, ("batch",),
+                                batch["labels"].shape)}
+        low = Lowerable(fn, (ap, aopt, batch), (psh, oshard, bsh))
+    elif shape.kind == "serve":
+        B = shape.dim("batch")
+
+        def fn(params, ids):
+            with use_rules(rules, mesh):
+                return A.forward(params, cfg, ids)
+
+        ids = SDS((B, cfg.n_sparse), i64)
+        low = Lowerable(fn, (ap, ids),
+                        (psh, _shard(mesh, rules, ("batch", None),
+                                     ids.shape)))
+    elif shape.kind == "retrieval":
+        N = shape.dim("n_candidates")
+        n_item = cfg.n_sparse - cfg.n_user_fields
+
+        def fn(params, user_ids, cand_ids):
+            with use_rules(rules, mesh):
+                return A.retrieval_scores(params, cfg, user_ids, cand_ids)
+
+        uids = SDS((1, cfg.n_user_fields), i64)
+        cids = SDS((N, n_item), i64)
+        low = Lowerable(
+            fn, (ap, uids, cids),
+            (psh, NamedSharding(mesh, P()),
+             _shard(mesh, rules, ("candidates", None), cids.shape)))
+    else:
+        raise ValueError(shape.kind)
+
+    return Cell(arch_id=spec.arch_id, shape_name=shape.name, kind=shape.kind,
+                family="recsys", mesh=mesh, main=low,
+                model_flops=F.recsys_model_flops(cfg, shape),
+                note=shape.note)
+
+
+# ---------------------------------------------------------------------------
+# pagerank (the paper's workload): one distributed DF sweep
+# ---------------------------------------------------------------------------
+
+def _pagerank_cell(spec, shape, mesh, **overrides) -> Cell:
+    from repro.core import distributed as D
+    cfgd = spec.build_cfg(**overrides)
+    n = shape.dim("n_vertices")
+    deg = shape.dim("avg_degree")
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    axes = tuple(mesh.axis_names)
+    m = n * (deg + 1)                      # + self-loops
+    m_loc = _round_up(int(m / n_dev * 1.05), 8)
+    f32, i32 = jnp.float32, jnp.int32
+    dg = D.DistGraph(
+        n=n, n_pad=n, n_dev=n_dev,
+        src_in=SDS((n_dev, m_loc), i32), dst_in=SDS((n_dev, m_loc), i32),
+        src_out=SDS((n_dev, m_loc), i32), dst_out=SDS((n_dev, m_loc), i32),
+        inv_deg=SDS((n,), f32), vertex_valid=SDS((n,), jnp.bool_))
+    tau = 1e-7                             # f32 tolerance (DESIGN.md §2)
+    sweep = D.make_sweep(
+        dg, mesh, axes, alpha=cfgd["alpha"], tau=tau,
+        tau_f=tau * cfgd["tau_f_ratio"], expand=True,
+        exchange=cfgd["exchange"],
+        delta_capacity=int(cfgd.get("delta_capacity", 1024)),
+        local_gs_sweeps=int(cfgd.get("local_gs_sweeps", 1)),
+        marks_dtype=jnp.dtype(cfgd.get("marks_dtype", "int32")))
+    cache_w = n if cfgd["exchange"] == "delta" else 1
+    args = (SDS((n,), f32), SDS((n,), jnp.bool_), SDS((n,), jnp.bool_),
+            SDS((n_dev, cache_w), f32), dg.src_in, dg.dst_in, dg.src_out,
+            dg.dst_out, dg.inv_deg, dg.vertex_valid)
+    vec = NamedSharding(mesh, P(axes))
+    slab = NamedSharding(mesh, P(axes, None))
+    shard = (vec, vec, vec, slab, slab, slab, slab, slab, vec, vec)
+    if cfgd["exchange"] == "ring":
+        ring_cap = _round_up(int(m / (n_dev * n_dev) * 1.3) + 8, 8)
+        ring_sds = SDS((n_dev, n_dev, ring_cap), i32)
+        args = args + (ring_sds, ring_sds)
+        shard = shard + (NamedSharding(mesh, P(axes, None, None)),) * 2
+    low = Lowerable(sweep, args, shard)
+    return Cell(arch_id=spec.arch_id, shape_name=shape.name, kind=shape.kind,
+                family="pagerank", mesh=mesh, main=low,
+                model_flops=F.pagerank_sweep_flops(n, m),
+                note=f"exchange={cfgd['exchange']}; " + shape.note)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def make_cell(arch_id: str, shape_name: str, mesh: Mesh, **overrides) -> Cell:
+    """Build one cell.  ``overrides`` are §Perf hillclimb knobs:
+      * lm     — model-config fields (e.g. ``pad_vocab_to_multiple=2048``),
+                 plus ``microbatches=N`` / ``rules:<axis>=<mesh axes>``;
+      * pagerank — sweep config fields (e.g. ``exchange="delta"``).
+    """
+    spec = get_arch(arch_id)
+    if overrides.pop("pipeline", False):
+        pp_kw = {k.replace("pp_", ""): v for k, v in overrides.items()
+                 if k.startswith("pp_")}
+        return _lm_pipeline_cell(spec, spec.shape(shape_name), mesh,
+                                 **pp_kw)
+    if overrides and spec.family != "pagerank":
+        rules_over = {}
+        exec_over = dict(spec.exec_overrides)
+        cfg_over = {}
+        for k, v in overrides.items():
+            if k.startswith("rules:"):
+                rules_over[k.split(":", 1)[1]] = (None if v in ("none", "")
+                                                  else v)
+            elif k in ("microbatches", "state_dtype", "accum_dtype"):
+                exec_over = {sn: {**spec.exec_overrides.get(sn, {}), k: v}
+                             for sn in [shape_name]}
+            else:
+                cfg_over[k] = v
+        base_build = spec.build_cfg
+
+        def build2(**kw):
+            merged = dict(cfg_over)
+            merged.update(kw)          # caller-explicit keys win (probes)
+            return base_build(**merged)
+
+        spec = dataclasses.replace(
+            spec, build_cfg=build2,
+            rules_override={**spec.rules_override, **rules_over},
+            exec_overrides=exec_over)
+    shape = spec.shape(shape_name)
+    if spec.family == "lm":
+        return _lm_cell(spec, shape, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape, mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape, mesh)
+    if spec.family == "pagerank":
+        return _pagerank_cell(spec, shape, mesh, **overrides)
+    raise ValueError(spec.family)

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first initialization, and the production
+# meshes below need 512 placeholder host devices.  Do NOT set this globally —
+# smoke tests and benchmarks must see the real single device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every assigned (architecture × input shape) cell, lower + compile the
+production step on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh,
+print ``compiled.memory_analysis()`` (proves it fits) and
+``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), parse the
+collective schedule out of the partitioned HLO, and append everything to a
+results JSON consumed by ``benchmarks/roofline.py``.
+
+Usage:
+  python -m repro.launch.dryrun --list
+  python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+  python -m repro.launch.dryrun --all --orchestrate   # subprocess per cell
+
+``--orchestrate`` isolates each cell in a fresh process (a pathological
+compile cannot take down the sweep; memory is returned after each cell) and
+skips cells already present in the JSON, so the sweep is resumable.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+RESULTS_DEFAULT = "results/dryrun.json"
+
+
+def _load(path: str) -> Dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def _store(path: str, results: Dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def _mesh(tag: str):
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh(multi_pod=(tag == "multi"))
+
+
+def _lower_compile(low, label: str, verbose: bool) -> Dict:
+    import jax  # noqa: F401
+    from repro.launch import hlo_analysis as H
+    t0 = time.time()
+    lowered = low.lower()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    out: Dict = {"lower_s": round(t1 - t0, 2),
+                 "compile_s": round(t2 - t1, 2)}
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            "peak_bytes": int(ma.peak_memory_in_bytes),
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+        }
+        if verbose:
+            print(f"[{label}] memory_analysis: {ma}")
+    except Exception as e:  # pragma: no cover - backend-specific
+        out["memory"] = {"error": str(e)}
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out["cost"] = {"flops": float(ca.get("flops", -1.0)),
+                   "bytes_accessed": float(ca.get("bytes accessed", -1.0))}
+    if verbose:
+        print(f"[{label}] cost_analysis: flops={out['cost']['flops']:.4g} "
+              f"bytes={out['cost']['bytes_accessed']:.4g}")
+    txt = compiled.as_text()
+    out["collectives"] = H.analyze_collectives(txt).as_dict()
+    out["hlo_chars"] = len(txt)
+    return out
+
+
+def _parse_overrides(items) -> Dict:
+    out: Dict = {}
+    for item in items or ():
+        k, _, v = item.partition("=")
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_tag: str, *, probes: bool,
+             out_path: str, verbose: bool = True,
+             overrides: Optional[Dict] = None, tag: str = "") -> Dict:
+    from repro.configs import get_arch
+    from repro.launch.cells import make_cell
+
+    overrides = overrides or {}
+    key = f"{mesh_tag}:{arch}/{shape}" + (f"@{tag}" if tag else "")
+    spec = get_arch(arch)
+    sh = spec.shape(shape)
+    rec: Dict = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                 "kind": sh.kind, "status": "ok", "note": sh.note,
+                 "overrides": overrides, "variant": tag}
+    if sh.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = sh.skip
+        print(f"[{key}] SKIPPED (by rule): {sh.skip}")
+        return _merge(out_path, key, rec)
+
+    mesh = _mesh(mesh_tag)
+    try:
+        cell = make_cell(arch, shape, mesh, **overrides)
+        rec.update(model_flops=cell.model_flops,
+                   microbatches=cell.microbatches,
+                   n_scan_layers=cell.n_scan_layers,
+                   opt_flops=cell.opt_flops, opt_bytes=cell.opt_bytes,
+                   param_count=cell.param_count,
+                   layer_param_count=cell.layer_param_count,
+                   family=cell.family)
+        rec.update(_lower_compile(cell.main, key, verbose))
+        if probes and cell.probes:
+            rec["probes"] = {}
+            for pname, plow in cell.probes.items():
+                rec["probes"][pname] = _lower_compile(
+                    plow, f"{key}#{pname}", verbose)
+        print(f"[{key}] OK compile={rec['compile_s']}s "
+              f"peak={rec['memory'].get('peak_bytes', -1)/1e9:.2f}GB "
+              f"coll_wire={rec['collectives']['total_wire_bytes']/1e9:.3f}GB")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{key}] ERROR {rec['error']}")
+    return _merge(out_path, key, rec)
+
+
+def _merge(out_path: str, key: str, rec: Dict) -> Dict:
+    results = _load(out_path)
+    results[key] = rec
+    _store(out_path, results)
+    return rec
+
+
+def iter_all_cells(include_pagerank: bool = True):
+    from repro.configs import get_arch, iter_cells, list_archs
+    for spec, shape in iter_cells(include_skipped=True):
+        yield spec.arch_id, shape.name
+    if include_pagerank:
+        pr = get_arch("pagerank-df")
+        for shape in pr.shapes:
+            yield pr.arch_id, shape.name
+
+
+def orchestrate(mesh_tags, out_path: str, *, probes: bool,
+                timeout_s: int = 2400) -> int:
+    done = _load(out_path)
+    failures = 0
+    for mesh_tag in mesh_tags:
+        for arch, shape in iter_all_cells():
+            key = f"{mesh_tag}:{arch}/{shape}"
+            if key in done and done[key].get("status") in ("ok", "skipped"):
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_tag,
+                   "--out", out_path]
+            if probes and mesh_tag == "single":
+                cmd.append("--probes")
+            src_dir = os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+            env = dict(os.environ)
+            env["PYTHONPATH"] = src_dir + os.pathsep + env.get(
+                "PYTHONPATH", "")
+            print(f"=== {key} ===", flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=timeout_s, env=env)
+                if r.returncode != 0:
+                    failures += 1
+                    _merge(out_path, key, {
+                        "arch": arch, "shape": shape, "mesh": mesh_tag,
+                        "status": "error",
+                        "error": f"subprocess rc={r.returncode}"})
+            except subprocess.TimeoutExpired:
+                failures += 1
+                _merge(out_path, key, {
+                    "arch": arch, "shape": shape, "mesh": mesh_tag,
+                    "status": "error", "error": f"timeout {timeout_s}s"})
+        done = _load(out_path)
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--probes", action="store_true",
+                    help="also compile the L=1/L=2 probe programs "
+                         "(exact scan-flop correction; single-pod only)")
+    ap.add_argument("--orchestrate", action="store_true",
+                    help="subprocess-per-cell sweep, resumable")
+    ap.add_argument("--out", default=RESULTS_DEFAULT)
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="§Perf variant knob (e.g. exchange=delta, "
+                         "pad_vocab_to_multiple=2048, rules:seq=model)")
+    ap.add_argument("--tag", default="",
+                    help="variant tag; result stored as <cell>@<tag>")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape in iter_all_cells():
+            print(f"{arch:24s} {shape}")
+        return
+
+    tags = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.orchestrate or (args.all and not args.arch):
+        rc = orchestrate(tags, args.out, probes=True)
+        summary = _load(args.out)
+        n_ok = sum(1 for v in summary.values() if v.get("status") == "ok")
+        n_skip = sum(1 for v in summary.values()
+                     if v.get("status") == "skipped")
+        n_err = len(summary) - n_ok - n_skip
+        print(f"dry-run sweep: {n_ok} ok / {n_skip} skipped-by-rule / "
+              f"{n_err} errors")
+        sys.exit(1 if rc else 0)
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    for tag in tags:
+        run_cell(args.arch, args.shape, tag, probes=args.probes,
+                 out_path=args.out,
+                 overrides=_parse_overrides(args.override), tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

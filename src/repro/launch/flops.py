@@ -1,0 +1,202 @@
+"""Analytic MODEL_FLOPS per cell — the *useful* flops of one full step.
+
+Conventions (standard MFU accounting):
+  * matmul = 2·m·n·k flops; elementwise/norm/softmax flops are ignored;
+  * remat recomputation is EXCLUDED (that waste is exactly what the
+    MODEL_FLOPS / HLO_FLOPs ratio in §Roofline is meant to expose);
+  * training = 3 × forward (backward is 2×); embedding *gather* is free,
+    the vocab-head matmul is counted;
+  * MoE counts only the top-k active experts (6·N_active·D);
+  * causal attention counts the ~half of the score matrix actually computed;
+    sliding-window attention counts ≤window keys per query.
+
+All numbers are GLOBAL flops for the full step (the roofline divides by
+chips × peak).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.configs.registry import ArchSpec, ShapeSpec
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_matmul_params(cfg, *, active: bool = True) -> int:
+    """Matmul-participating params (norms excluded, head included)."""
+    D, H, KV, dh, F, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.d_head, cfg.d_ff, cfg.n_layers)
+    attn = D * H * dh + 2 * D * KV * dh + H * dh * D
+    n_mats = 3 if cfg.mlp == "swiglu" else 2
+    if cfg.moe:
+        e = cfg.moe.top_k if active else cfg.moe.n_experts
+        ff = e * n_mats * D * F + D * cfg.moe.n_experts  # + router
+    else:
+        ff = n_mats * D * F
+    head = cfg.vocab_padded * D                      # output projection
+    return L * (attn + ff) + head
+
+
+def lm_attn_fwd_flops(cfg, batch: int, s_q: int, s_kv: int,
+                      *, causal: bool) -> float:
+    """QK^T + AV forward flops across all layers."""
+    window = cfg.sliding_window
+    if causal and window and s_kv > window:
+        eff_kv = float(window)            # each query sees ≤window keys
+    elif causal and s_q == s_kv:
+        eff_kv = s_kv / 2.0               # lower triangle
+    else:
+        eff_kv = float(min(s_kv, window) if window else s_kv)
+    per_layer = 2 * 2 * batch * cfg.n_heads * s_q * eff_kv * cfg.d_head
+    return cfg.n_layers * per_layer
+
+
+def lm_model_flops(cfg, shape: ShapeSpec) -> float:
+    B = shape.dim("global_batch")
+    S = shape.dim("seq_len")
+    N = lm_matmul_params(cfg)
+    if shape.kind == "train":
+        T = B * S
+        return 6.0 * N * T + 3.0 * lm_attn_fwd_flops(cfg, B, S, S,
+                                                     causal=True)
+    if shape.kind == "prefill":
+        T = B * S
+        return 2.0 * N * T + lm_attn_fwd_flops(cfg, B, S, S, causal=True)
+    if shape.kind == "decode":
+        cache = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        return 2.0 * N * B + lm_attn_fwd_flops(cfg, B, 1, cache,
+                                               causal=False)
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN (forward formulas per family; train = 3 × fwd)
+# ---------------------------------------------------------------------------
+
+def _mlp_flops(rows: float, dims) -> float:
+    f = 0.0
+    for a, b in zip(dims[:-1], dims[1:]):
+        f += 2.0 * rows * a * b
+    return f
+
+
+def gnn_fwd_flops(cfg, n_nodes: float, n_edges: float) -> float:
+    d, L, f, o = cfg.d_hidden, cfg.n_layers, cfg.d_feat, cfg.n_out
+    N, E = float(n_nodes), float(n_edges)
+    if cfg.family == "gatedgcn":
+        enc = 2 * N * f * d + 2 * E * max(cfg.d_edge_feat, 1) * d
+        layer = 2 * d * d * (4 * E + N)          # E1,E2,E3,V on edges; U
+        dec = 2 * N * d * o
+        return enc + L * layer + dec
+    if cfg.family == "egnn":
+        enc = 2 * N * f * d
+        phi_e = _mlp_flops(E, (2 * d + 1 + cfg.d_edge_feat, d, d))
+        phi_x = _mlp_flops(E, (d, d, 1))
+        phi_h = _mlp_flops(N, (2 * d, d, d))
+        dec = 2 * N * d * o
+        return enc + L * (phi_e + phi_x + phi_h) + dec
+    if cfg.family == "graphsage":
+        flops, d_in = 0.0, f
+        for _ in range(L):
+            flops += 2 * 2 * N * d_in * d        # w_self + w_neigh
+            d_in = d
+        return flops + 2 * N * d * o
+    if cfg.family == "meshgraphnet":
+        ml = cfg.mlp_layers
+        enc = _mlp_flops(N, (f,) + (d,) * ml) + \
+            _mlp_flops(E, (4 + cfg.d_edge_feat,) + (d,) * ml)
+        layer = _mlp_flops(E, (3 * d,) + (d,) * ml) + \
+            _mlp_flops(N, (2 * d,) + (d,) * ml)
+        dec = _mlp_flops(N, (d,) * ml + (o,))
+        return enc + L * layer + dec
+    raise ValueError(cfg.family)
+
+
+def gnn_sampled_fwd_flops(cfg, batch: int, fanouts) -> float:
+    """GraphSAGE dense-hop minibatch: nodes processed per layer step."""
+    d, f = cfg.d_hidden, cfg.d_feat
+    counts = [float(batch)]
+    for fo in fanouts:
+        counts.append(counts[-1] * fo)
+    flops, d_in = 0.0, f
+    L = cfg.n_layers
+    for step in range(L):
+        rows = sum(counts[: L - step])
+        flops += 2 * 2 * rows * d_in * d
+        d_in = d
+    return flops + 2 * batch * d * cfg.n_out
+
+
+def gnn_model_flops(cfg, shape: ShapeSpec) -> float:
+    if shape.kind == "sampled" and cfg.family == "graphsage":
+        fwd = gnn_sampled_fwd_flops(cfg, shape.dim("batch_nodes"),
+                                    (shape.dim("fanout1"),
+                                     shape.dim("fanout2")))
+    elif shape.kind == "sampled":
+        b, f1, f2 = (shape.dim("batch_nodes"), shape.dim("fanout1"),
+                     shape.dim("fanout2"))
+        n = b * (1 + f1 + f1 * f2)
+        e = b * f1 + b * f1 * f2
+        fwd = gnn_fwd_flops(cfg, n, e)
+    elif shape.kind == "batched_small":
+        b = shape.dim("batch")
+        fwd = gnn_fwd_flops(cfg, b * shape.dim("n_nodes"),
+                            b * shape.dim("n_edges"))
+    else:
+        fwd = gnn_fwd_flops(cfg, shape.dim("n_nodes"), shape.dim("n_edges"))
+    return 3.0 * fwd                     # all GNN cells are training steps
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+def autoint_fwd_flops(cfg, batch: float, n_fields: int = None) -> float:
+    F = n_fields if n_fields is not None else cfg.n_sparse
+    d_int, H, da = cfg.d_interact, cfg.n_heads, cfg.d_attn
+    flops, d_in = 0.0, cfg.embed_dim
+    for _ in range(cfg.n_attn_layers):
+        flops += 2 * batch * F * d_in * d_int * 4      # wq,wk,wv,w_res
+        flops += 2 * batch * H * F * F * da * 2        # scores + apply
+        d_in = d_int
+    return flops + 2 * batch * F * d_int               # head
+
+
+def recsys_model_flops(cfg, shape: ShapeSpec) -> float:
+    if shape.kind == "train":
+        return 3.0 * autoint_fwd_flops(cfg, shape.dim("batch"))
+    if shape.kind == "serve":
+        return autoint_fwd_flops(cfg, shape.dim("batch"))
+    if shape.kind == "retrieval":
+        n = shape.dim("n_candidates")
+        n_item = cfg.n_sparse - cfg.n_user_fields
+        user = autoint_fwd_flops(cfg, 1, cfg.n_user_fields)
+        item = 2 * n * n_item * cfg.embed_dim * cfg.d_interact
+        dot = 2 * n * cfg.d_interact
+        return user + item + dot
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# pagerank (the paper's workload): flops per distributed sweep
+# ---------------------------------------------------------------------------
+
+def pagerank_sweep_flops(n_vertices: int, n_edges: int) -> float:
+    # pull: 2 flops/edge (mul + add); expansion: ~1 flop/out-edge;
+    # convergence/bookkeeping ~6/vertex
+    return 3.0 * n_edges + 6.0 * n_vertices
+
+
+def model_flops(spec: ArchSpec, cfg: Any, shape: ShapeSpec) -> float:
+    if spec.family == "lm":
+        return lm_model_flops(cfg, shape)
+    if spec.family == "gnn":
+        return gnn_model_flops(cfg, shape)
+    if spec.family == "recsys":
+        return recsys_model_flops(cfg, shape)
+    if spec.family == "pagerank":
+        n = shape.dim("n_vertices")
+        return pagerank_sweep_flops(n, n * shape.dim("avg_degree"))
+    raise ValueError(spec.family)

@@ -1,0 +1,229 @@
+"""Collective-traffic analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` carries no collective information, so the
+roofline's collective term is derived here: we parse ``compiled.as_text()``,
+attribute every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` to its enclosing computation, and
+multiply by loop trip counts (XLA stamps ``known_trip_count`` on each
+``while`` op, so ``lax.scan`` bodies are counted exactly).
+
+Two byte totals per op type:
+  * ``operand_bytes`` — Σ input sizes (the spec'd convention);
+  * ``wire_bytes``    — per-device traffic under the standard ring models:
+        all-gather        (g−1)/g · output
+        all-reduce        2·(g−1)/g · input
+        reduce-scatter    (g−1)/g · input
+        all-to-all        (g−1)/g · input
+        collective-permute  input
+The HLO is the per-device program, so these are per-chip bytes; the roofline
+divides by per-link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string, incl. tuple shapes."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue  # token[] etc.
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    wire_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "operand_bytes": dict(self.operand_bytes),
+            "wire_bytes": dict(self.wire_bytes),
+            "counts": dict(self.counts),
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-_]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)"
+    r".*?condition=(%[\w\.\-_]+)"
+    r".*?body=(%[\w\.\-_]+)", re.DOTALL)
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"?(\d+)"?')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w\.\-_]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\((.*?)\)(?:,|$)")
+_CALLS_RE = re.compile(r"calls=(%[\w\.\-_]+)")
+_BRANCH_RE = re.compile(
+    r"(?:true_computation|false_computation)=(%[\w\.\-_]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _split_computations(txt: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in txt.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Trip-count multiplier per computation (entry = 1), propagated through
+    while bodies/conditions and call/fusion references."""
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for line in lines:
+            if " while(" in line:
+                m = _WHILE_RE.search(line)
+                if not m:
+                    continue
+                cond, body = m.group(1), m.group(2)
+                t = _TRIP_RE.search(line)
+                trip = float(t.group(1)) if t else 1.0
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip))
+            for cm in _CALLS_RE.finditer(line):
+                edges[name].append((cm.group(1), 1.0))
+            for cm in _BRANCH_RE.finditer(line):
+                edges[name].append((cm.group(1), 1.0))
+            for cm in _BRANCHES_RE.finditer(line):
+                for b in cm.group(1).split(","):
+                    b = b.strip()
+                    if b.startswith("%"):
+                        edges[name].append((b, 1.0))
+
+    entry = None
+    for name, lines in comps.items():
+        if name != "__entry__" and comps.get("__entry__") is lines:
+            entry = name
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return mult
+    # fixed-point propagation (call graph is a DAG; loop once per depth)
+    mult[entry] = 1.0
+    frontier = [entry]
+    seen_depth = 0
+    while frontier and seen_depth < 64:
+        nxt = []
+        for src in frontier:
+            for dst, trip in edges.get(src, ()):
+                new = mult[src] * trip
+                if new > mult[dst]:
+                    mult[dst] = new
+                    nxt.append(dst)
+        frontier = nxt
+        seen_depth += 1
+    return mult
+
+
+def analyze_collectives(hlo_text: str, *, default_group: int = 1
+                        ) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+    stats = CollectiveStats()
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        k = mult.get(name, 1.0) or 1.0
+        for line in lines:
+            m = _OPLINE_RE.match(line)
+            if not m:
+                continue
+            out_shape, op, operands = m.group(1), m.group(2), m.group(3)
+            op = op.replace("-start", "")
+            g = _group_size(line, default_group)
+            out_b = shape_bytes(out_shape)
+            in_b = 0
+            # operand list: %name references only; shapes unavailable — use
+            # output-based inference per op type (exact for these ops).
+            if op == "all-gather":
+                in_b = out_b // max(g, 1)
+                wire = out_b * (g - 1) / max(g, 1)
+            elif op == "all-reduce":
+                in_b = out_b
+                wire = 2.0 * in_b * (g - 1) / max(g, 1)
+            elif op == "reduce-scatter":
+                in_b = out_b * g
+                wire = in_b * (g - 1) / max(g, 1)
+            elif op == "all-to-all":
+                in_b = out_b
+                wire = in_b * (g - 1) / max(g, 1)
+            else:  # collective-permute
+                in_b = out_b
+                wire = float(in_b)
+            stats.operand_bytes[op] += k * in_b
+            stats.wire_bytes[op] += k * wire
+            stats.counts[op] += k
+    return stats
+
+
+def loop_report(hlo_text: str) -> List[Tuple[str, float]]:
+    """(body name, trip count) for every while in the module — debugging."""
+    out = []
+    for m in _WHILE_RE.finditer(hlo_text):
+        t = _TRIP_RE.search(hlo_text[m.start():m.start() + 2000])
+        out.append((m.group(2), float(t.group(1)) if t else -1.0))
+    return out

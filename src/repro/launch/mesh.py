@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+``xla_force_host_platform_device_count=512`` before any jax import and only
+then calls it.
+
+Axis semantics (DESIGN.md §5):
+  * "pod"   — crosses the inter-pod DCN/ICI boundary (2 pods × 256 chips);
+    used for data parallelism and (MoE) expert parallelism.
+  * "data"  — intra-pod data parallel / FSDP / ZeRO axis.
+  * "model" — tensor/sequence-parallel axis (heads, ff, vocab, cache_seq).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
+                   axes: Tuple[str, ...] = ("data",)) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    if shape is None:
+        shape = (n,)
+    if int(np.prod(shape)) != n:
+        raise ValueError(f"mesh shape {shape} != device count {n}")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def n_chips(mesh: jax.sharding.Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

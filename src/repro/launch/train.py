@@ -1,0 +1,107 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a REDUCED-config training job on the host devices (this container is
+CPU-only; the same code path jits against the production mesh when real
+chips are present — the dry-run proves those programs compile).  Includes
+the full fault-tolerance loop: atomic checkpointing, auto-resume, and a
+``--simulate-preemption`` flag that kills the loop mid-run so the restart
+path is exercised end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_arch
+from repro.ckpt.checkpoint import Checkpointer
+from repro.data import pipeline as dp
+from repro.launch import smoke
+from repro.optim import adam
+from repro.train import trainer
+
+
+def data_for(spec, cfg, batch: int, seq: int, seed: int):
+    if spec.family == "lm":
+        return dp.lm_stream(cfg.vocab, batch, seq, seed=seed)
+    if spec.family == "recsys":
+        return dp.recsys_stream(cfg.n_sparse, cfg.rows_per_field, batch,
+                                seed=seed)
+    if spec.family == "gnn":
+        def gen():
+            step = 0
+            while True:
+                _, _, _, batch_arrays = None, None, None, None
+                _, loss_fn, _, arrays = smoke.smoke_setup(spec,
+                                                          seed=seed + step)
+                yield arrays
+                step += 1
+        return gen()
+    raise ValueError(spec.family)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-dtype", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--simulate-preemption", type=int, default=0,
+                    help="raise SystemExit after N steps (restart drill)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg, loss_fn, params, _ = smoke.smoke_setup(spec, seed=args.seed)
+    acfg = adam.AdamConfig(lr=args.lr, warmup_steps=20,
+                           total_steps=args.steps)
+    tcfg = trainer.TrainConfig(microbatches=args.microbatches,
+                               grad_dtype=args.grad_dtype)
+    step_fn = jax.jit(trainer.build_train_step(loss_fn, acfg, tcfg),
+                      donate_argnums=(0, 1))
+    opt = adam.init_state(params, acfg)
+
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt is not None and ckpt.latest_step is not None:
+        params, opt, start = ckpt.restore(ckpt.latest_step, params, opt)
+        print(f"resumed from step {start}")
+
+    if spec.family == "lm":
+        stream = dp.lm_stream(cfg.vocab, args.batch, args.seq,
+                              seed=args.seed, start=start)
+    elif spec.family == "recsys":
+        stream = dp.recsys_stream(cfg.n_sparse, cfg.rows_per_field,
+                                  args.batch, seed=args.seed, start=start)
+    else:
+        stream = data_for(spec, cfg, args.batch, args.seq, args.seed)
+
+    t0 = time.time()
+    for i, batch in enumerate(stream):
+        step = start + i
+        if step >= args.steps:
+            break
+        params, opt, metrics = step_fn(params, opt, batch)
+        if args.log_every and step % args.log_every == 0:
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            path = ckpt.save(params, opt, step + 1)
+            print(f"checkpoint -> {path}")
+        if args.simulate_preemption and i + 1 >= args.simulate_preemption:
+            print("simulated preemption — relaunch to resume")
+            raise SystemExit(75)
+    print(f"done: {args.steps} steps, final loss "
+          f"{float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""GNN model zoo: dispatch by family name."""
+from repro.models.gnn.common import GNNConfig, GraphBatch
+from repro.models.gnn import gatedgcn, egnn, graphsage, meshgraphnet
+
+FAMILIES = {
+    "gatedgcn": gatedgcn,
+    "egnn": egnn,
+    "graphsage": graphsage,
+    "meshgraphnet": meshgraphnet,
+}
+
+
+def get_family(cfg: GNNConfig):
+    return FAMILIES[cfg.family]
+
+
+__all__ = ["GNNConfig", "GraphBatch", "FAMILIES", "get_family",
+           "gatedgcn", "egnn", "graphsage", "meshgraphnet"]

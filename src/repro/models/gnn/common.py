@@ -1,0 +1,226 @@
+"""Shared GNN substrate: graph batches, segment message passing, MLP blocks.
+
+JAX has no CSR/CSC sparse or EmbeddingBag — message passing is built from
+``jnp.take`` (gather along edges) + ``jax.ops.segment_sum`` / ``segment_max``
+(scatter-aggregate by destination), per the assignment notes.  Everything is
+static-shaped: edge arrays are padded with ``src = dst = n_pad`` (a phantom
+node) so padded edges aggregate into a discarded bin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    family: str                    # "gatedgcn" | "egnn" | "graphsage" | "meshgraphnet"
+    n_layers: int
+    d_hidden: int
+    d_feat: int                    # input node feature dim
+    n_out: int                     # classes (node_clf) or regression dim
+    task: str = "node_clf"         # "node_clf" | "node_reg" | "graph_reg"
+    aggregator: str = "sum"        # graphsage: "mean"; gatedgcn: "gated"
+    d_edge_feat: int = 0           # input edge feature dim (0 = none)
+    mlp_layers: int = 2            # meshgraphnet MLP depth
+    sample_sizes: Tuple[int, ...] = ()   # graphsage default fanouts
+    dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True       # False: unroll (exact dry-run HLO flops)
+
+
+class GraphBatch(NamedTuple):
+    """One (possibly batched/padded) graph on device.
+
+    ``senders/receivers`` index into the flattened node array; padded edges
+    point at node ``n_pad`` (one past the last row — callers allocate +1 row
+    in scatter bins, not in ``nodes``).
+    """
+    nodes: jnp.ndarray                 # [N, F] float
+    senders: jnp.ndarray               # [E] i32
+    receivers: jnp.ndarray             # [E] i32
+    edge_feat: Optional[jnp.ndarray] = None   # [E, Fe]
+    pos: Optional[jnp.ndarray] = None  # [N, 3] (egnn / meshgraphnet)
+    graph_id: Optional[jnp.ndarray] = None    # [N] i32 (batched small graphs)
+    n_graphs: int = 1
+    node_mask: Optional[jnp.ndarray] = None   # [N] bool
+    edge_mask: Optional[jnp.ndarray] = None   # [E] bool
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.nodes.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# message passing primitives
+# ---------------------------------------------------------------------------
+
+def gather_src(g: GraphBatch, h: jnp.ndarray) -> jnp.ndarray:
+    """h[senders] with phantom-safe clamping; padded edges yield zeros."""
+    v = jnp.take(h, jnp.minimum(g.senders, g.n_pad - 1), axis=0)
+    if g.edge_mask is not None:
+        v = jnp.where(g.edge_mask[:, None], v, 0)
+    return v
+
+
+def gather_dst(g: GraphBatch, h: jnp.ndarray) -> jnp.ndarray:
+    v = jnp.take(h, jnp.minimum(g.receivers, g.n_pad - 1), axis=0)
+    if g.edge_mask is not None:
+        v = jnp.where(g.edge_mask[:, None], v, 0)
+    return v
+
+
+def scatter_sum(g: GraphBatch, messages: jnp.ndarray) -> jnp.ndarray:
+    """Σ_{e: dst(e)=v} messages[e]  →  [N, d]; padded edges land in bin N."""
+    out = jax.ops.segment_sum(messages, g.receivers,
+                              num_segments=g.n_pad + 1)
+    return out[:g.n_pad]
+
+
+def scatter_mean(g: GraphBatch, messages: jnp.ndarray) -> jnp.ndarray:
+    s = scatter_sum(g, messages)
+    ones = jnp.ones((messages.shape[0],), messages.dtype)
+    if g.edge_mask is not None:
+        ones = ones * g.edge_mask
+    cnt = jax.ops.segment_sum(ones, g.receivers,
+                              num_segments=g.n_pad + 1)[:g.n_pad]
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def scatter_max(g: GraphBatch, messages: jnp.ndarray) -> jnp.ndarray:
+    out = jax.ops.segment_max(messages, g.receivers,
+                              num_segments=g.n_pad + 1)
+    return jnp.maximum(out[:g.n_pad], 0)  # empty bins → -inf → clamp
+
+
+def graph_readout(g: GraphBatch, h: jnp.ndarray, *, op: str = "mean"
+                  ) -> jnp.ndarray:
+    """Per-graph pooling for batched small graphs → [n_graphs, d]."""
+    gid = g.graph_id if g.graph_id is not None else jnp.zeros(
+        (g.n_pad,), jnp.int32)
+    if g.node_mask is not None:
+        h = jnp.where(g.node_mask[:, None], h, 0)
+        gid = jnp.where(g.node_mask, gid, g.n_graphs)
+    s = jax.ops.segment_sum(h, gid, num_segments=g.n_graphs + 1)[:g.n_graphs]
+    if op == "sum":
+        return s
+    ones = jnp.ones((g.n_pad,), h.dtype)
+    if g.node_mask is not None:
+        ones = ones * g.node_mask
+    cnt = jax.ops.segment_sum(ones, gid,
+                              num_segments=g.n_graphs + 1)[:g.n_graphs]
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# dense blocks
+# ---------------------------------------------------------------------------
+
+def mlp_shapes(d_in: int, d_hidden: int, d_out: int, n_layers: int
+               ) -> Dict[str, Tuple[int, ...]]:
+    dims = [d_in] + [d_hidden] * (n_layers - 1) + [d_out]
+    s = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        s[f"w{i}"] = (a, b)
+        s[f"b{i}"] = (b,)
+    return s
+
+
+def mlp_apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray, *, prefix: str = "",
+              n_layers: int, act=jax.nn.relu, layernorm: bool = False
+              ) -> jnp.ndarray:
+    for i in range(n_layers):
+        x = x @ p[f"{prefix}w{i}"].astype(x.dtype) \
+            + p[f"{prefix}b{i}"].astype(x.dtype)
+        if i < n_layers - 1:
+            x = act(x)
+    if layernorm:
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.var(x, -1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return x
+
+
+def dense_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    return jax.random.normal(key, shape, dtype) * (fan_in ** -0.5)
+
+
+def _is_bias(leaf: str) -> bool:
+    import re
+    return (leaf.startswith("b") and not leaf.startswith("bn")) or \
+        any(re.fullmatch(r"b\d*", seg) for seg in leaf.split("_")) or \
+        "bias" in leaf
+
+
+def init_from_shapes(shapes: Dict[str, Tuple[int, ...]], key,
+                     dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    params = {}
+    keys = jax.random.split(key, len(shapes))
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        leaf = name.split("/")[-1]
+        if "norm" in leaf or leaf.startswith("ln"):
+            params[name] = jnp.ones(shape, dtype)
+        elif _is_bias(leaf):
+            params[name] = jnp.zeros(shape, dtype)
+        else:
+            params[name] = dense_init(k, shape, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def node_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+              mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             jnp.maximum(labels, 0)[:, None], axis=1)[:, 0]
+    nll = lse - ll
+    m = (labels >= 0).astype(jnp.float32)
+    if mask is not None:
+        m = m * mask
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def mse(pred: jnp.ndarray, target: jnp.ndarray,
+        mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    err = jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32))
+    err = err.mean(axis=-1)
+    if mask is not None:
+        return (err * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return err.mean()
+
+
+def scan_or_unroll(layer_fn, carry, stack, *, scan: bool, remat: bool):
+    """Run ``layer_fn(carry, per_layer_params) -> (carry, None)`` over a
+    stacked param tree, either as ``lax.scan`` (small HLO, production) or
+    unrolled (exact compiled-FLOP accounting for the dry-run roofline)."""
+    fn = jax.checkpoint(layer_fn) if remat else layer_fn
+    if scan:
+        carry, _ = jax.lax.scan(fn, carry, stack)
+        return carry
+    n = jax.tree.leaves(stack)[0].shape[0]
+    for i in range(n):
+        carry, _ = fn(carry, jax.tree.map(lambda a: a[i], stack))
+    return carry
+
+
+def shard_edges(g: GraphBatch) -> GraphBatch:
+    """Apply edge/node sharding constraints (dry-run / production meshes)."""
+    return g._replace(
+        nodes=constrain(g.nodes, ("nodes", None)),
+        senders=constrain(g.senders, ("edges",)),
+        receivers=constrain(g.receivers, ("edges",)),
+        edge_feat=(None if g.edge_feat is None
+                   else constrain(g.edge_feat, ("edges", None))),
+        pos=None if g.pos is None else constrain(g.pos, ("nodes", None)),
+    )

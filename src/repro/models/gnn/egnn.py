@@ -1,0 +1,106 @@
+"""EGNN — E(n)-equivariant GNN (Satorras et al., arXiv:2102.09844).
+
+    m_ij  = φ_e([h_i, h_j, ‖x_i − x_j‖²])
+    x_i'  = x_i + (1/(N−1)) Σ_j (x_i − x_j) · φ_x(m_ij)
+    h_i'  = h_i + φ_h([h_i, Σ_j m_ij])
+
+φ_e, φ_h: 2-layer MLPs (SiLU); φ_x: 2-layer MLP → scalar, no output bias
+(per the reference implementation, keeps equivariance exact).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+
+def shapes(cfg: C.GNNConfig) -> Dict[str, Tuple[int, ...]]:
+    d = cfg.d_hidden
+    s: Dict[str, Tuple[int, ...]] = {
+        "enc/w": (cfg.d_feat, d), "enc/b": (d,),
+        "dec/w": (d, cfg.n_out), "dec/b": (cfg.n_out,),
+    }
+    L = cfg.n_layers
+    # φ_e: [h_i, h_j, dist²(+edge_feat)] → d
+    d_in_e = 2 * d + 1 + cfg.d_edge_feat
+    s["layers/e_w0"] = (L, d_in_e, d)
+    s["layers/e_b0"] = (L, d)
+    s["layers/e_w1"] = (L, d, d)
+    s["layers/e_b1"] = (L, d)
+    # φ_x: m → 1 (no final bias)
+    s["layers/x_w0"] = (L, d, d)
+    s["layers/x_b0"] = (L, d)
+    s["layers/x_w1"] = (L, d, 1)
+    # φ_h: [h, Σm] → d
+    s["layers/h_w0"] = (L, 2 * d, d)
+    s["layers/h_b0"] = (L, d)
+    s["layers/h_w1"] = (L, d, d)
+    s["layers/h_b1"] = (L, d)
+    return s
+
+
+def init(cfg: C.GNNConfig, key) -> Dict[str, jnp.ndarray]:
+    return C.init_from_shapes(shapes(cfg), key, jnp.dtype(cfg.dtype))
+
+
+def forward(params, cfg: C.GNNConfig, g: C.GraphBatch
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (per-node output [N, n_out] or per-graph, final positions)."""
+    assert g.pos is not None, "EGNN requires node positions"
+    g = C.shard_edges(g)
+    h = g.nodes @ params["enc/w"] + params["enc/b"]
+    x = g.pos.astype(h.dtype)
+    stack = {k.split("/", 1)[1]: v for k, v in params.items()
+             if k.startswith("layers/")}
+    inv_n = 1.0 / max(g.n_pad - 1, 1)
+
+    def layer(carry, lp):
+        h, x = carry
+        hs, hd = C.gather_src(g, h), C.gather_dst(g, h)
+        xs = C.gather_src(g, x)
+        xd = jnp.take(x, jnp.minimum(g.receivers, g.n_pad - 1), axis=0)
+        rel = xd - xs                                   # x_i − x_j on edge j→i
+        dist2 = jnp.sum(jnp.square(rel), -1, keepdims=True)
+        feats = [hd, hs, dist2]
+        if g.edge_feat is not None:
+            feats.append(g.edge_feat.astype(h.dtype))
+        m = jnp.concatenate(feats, -1)
+        m = jax.nn.silu(m @ lp["e_w0"] + lp["e_b0"])
+        m = jax.nn.silu(m @ lp["e_w1"] + lp["e_b1"])
+        if g.edge_mask is not None:
+            m = jnp.where(g.edge_mask[:, None], m, 0)
+        w = jax.nn.silu(m @ lp["x_w0"] + lp["x_b0"]) @ lp["x_w1"]
+        if g.edge_mask is not None:
+            w = jnp.where(g.edge_mask[:, None], w, 0)
+        x = x + inv_n * C.scatter_sum(g, rel * w)
+        agg = C.scatter_sum(g, m)
+        dh = jnp.concatenate([h, agg], -1)
+        dh = jax.nn.silu(dh @ lp["h_w0"] + lp["h_b0"])
+        dh = dh @ lp["h_w1"] + lp["h_b1"]
+        return (h + dh, x), None
+
+    h, x = C.scan_or_unroll(layer, (h, x), stack, scan=cfg.scan_layers,
+                            remat=cfg.remat)
+
+    out = h @ params["dec/w"] + params["dec/b"]
+    if cfg.task == "graph_reg":
+        out = C.graph_readout(g, h, op="sum") @ params["dec/w"] \
+            + params["dec/b"]
+    return out, x
+
+
+def loss_fn(params, cfg: C.GNNConfig, g: C.GraphBatch, labels
+            ) -> Tuple[jnp.ndarray, Dict]:
+    out, _ = forward(params, cfg, g)
+    if cfg.task == "node_clf":
+        loss = C.node_xent(out, labels, None if g.node_mask is None
+                           else g.node_mask.astype(jnp.float32))
+    elif cfg.task == "graph_reg":
+        loss = C.mse(out, labels, None)
+    else:
+        loss = C.mse(out, labels, None if g.node_mask is None
+                     else g.node_mask.astype(jnp.float32))
+    return loss, {"loss": loss}

@@ -1,0 +1,86 @@
+"""GatedGCN (Bresson & Laurent; benchmarking-GNNs variant, arXiv:2003.00982).
+
+Edge-gated message passing:
+    ê_ij   = E1·h_i + E2·h_j + E3·e_ij
+    e_ij'  = e_ij + ReLU(LN(ê_ij))
+    η_ij   = σ(ê_ij) / (Σ_{j'→i} σ(ê_ij') + ε)
+    h_i'   = h_i + ReLU(LN(U·h_i + Σ_{j→i} η_ij ⊙ V·h_j))
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+EPS = 1e-6
+
+
+def shapes(cfg: C.GNNConfig) -> Dict[str, Tuple[int, ...]]:
+    d = cfg.d_hidden
+    s: Dict[str, Tuple[int, ...]] = {
+        "enc/w_node": (cfg.d_feat, d), "enc/b_node": (d,),
+        "enc/w_edge": (max(cfg.d_edge_feat, 1), d), "enc/b_edge": (d,),
+        "dec/w": (d, cfg.n_out), "dec/b": (cfg.n_out,),
+    }
+    for k in ("U", "V", "E1", "E2", "E3"):
+        s[f"layers/{k}"] = (cfg.n_layers, d, d)
+    s["layers/ln_h"] = (cfg.n_layers, d)
+    s["layers/ln_e"] = (cfg.n_layers, d)
+    return s
+
+
+def init(cfg: C.GNNConfig, key) -> Dict[str, jnp.ndarray]:
+    return C.init_from_shapes(shapes(cfg), key, jnp.dtype(cfg.dtype))
+
+
+def _ln(x, scale):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale
+
+
+def forward(params, cfg: C.GNNConfig, g: C.GraphBatch) -> jnp.ndarray:
+    g = C.shard_edges(g)
+    h = g.nodes @ params["enc/w_node"] + params["enc/b_node"]
+    ef = (g.edge_feat if g.edge_feat is not None
+          else jnp.ones((g.senders.shape[0], 1), h.dtype))
+    e = ef @ params["enc/w_edge"] + params["enc/b_edge"]
+
+    stack = {k.split("/", 1)[1]: v for k, v in params.items()
+             if k.startswith("layers/")}
+
+    def layer(carry, lp):
+        h, e = carry
+        hs, hd = C.gather_src(g, h), C.gather_dst(g, h)
+        e_hat = hd @ lp["E1"] + hs @ lp["E2"] + e @ lp["E3"]
+        e_new = e + jax.nn.relu(_ln(e_hat, lp["ln_e"]))
+        sig = jax.nn.sigmoid(e_hat)
+        num = C.scatter_sum(g, sig * (hs @ lp["V"]))
+        den = C.scatter_sum(g, sig) + EPS
+        h_new = h + jax.nn.relu(_ln(h @ lp["U"] + num / den, lp["ln_h"]))
+        return (h_new, e_new), None
+
+    h, e = C.scan_or_unroll(layer, (h, e), stack, scan=cfg.scan_layers,
+                            remat=cfg.remat)
+
+    if cfg.task == "graph_reg":
+        pooled = C.graph_readout(g, h, op="mean")
+        return pooled @ params["dec/w"] + params["dec/b"]
+    return h @ params["dec/w"] + params["dec/b"]
+
+
+def loss_fn(params, cfg: C.GNNConfig, g: C.GraphBatch, labels
+            ) -> Tuple[jnp.ndarray, Dict]:
+    out = forward(params, cfg, g)
+    if cfg.task == "node_clf":
+        loss = C.node_xent(out, labels, None if g.node_mask is None
+                           else g.node_mask.astype(jnp.float32))
+    elif cfg.task == "graph_reg":
+        loss = C.mse(out, labels, None)
+    else:
+        loss = C.mse(out, labels, None if g.node_mask is None
+                     else g.node_mask.astype(jnp.float32))
+    return loss, {"loss": loss}

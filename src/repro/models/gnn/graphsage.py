@@ -1,0 +1,95 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216) — mean aggregator.
+
+Two execution modes:
+  * ``forward``          — full-graph layer-wise:  h' = ReLU(W_s·h + W_n·mean_N(h))
+  * ``forward_sampled``  — minibatch with dense sampled neighborhoods from
+    :mod:`repro.graphs.sampler` (the real neighbor sampler), exactly the
+    paper's minibatch algorithm: aggregate hop-2 → hop-1 → seeds.
+L2 output normalisation per the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+
+def shapes(cfg: C.GNNConfig) -> Dict[str, Tuple[int, ...]]:
+    d = cfg.d_hidden
+    s: Dict[str, Tuple[int, ...]] = {
+        "dec/w": (d, cfg.n_out), "dec/b": (cfg.n_out,),
+    }
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        s[f"l{i}/w_self"] = (d_in, d)
+        s[f"l{i}/w_neigh"] = (d_in, d)
+        s[f"l{i}/b"] = (d,)
+        d_in = d
+    return s
+
+
+def init(cfg: C.GNNConfig, key) -> Dict[str, jnp.ndarray]:
+    return C.init_from_shapes(shapes(cfg), key, jnp.dtype(cfg.dtype))
+
+
+def _l2norm(h):
+    return h * jax.lax.rsqrt(jnp.sum(jnp.square(h), -1, keepdims=True) + 1e-12)
+
+
+def _layer(params, i, h_self, h_neigh_mean):
+    h = h_self @ params[f"l{i}/w_self"] \
+        + h_neigh_mean @ params[f"l{i}/w_neigh"] + params[f"l{i}/b"]
+    return _l2norm(jax.nn.relu(h))
+
+
+def forward(params, cfg: C.GNNConfig, g: C.GraphBatch) -> jnp.ndarray:
+    g = C.shard_edges(g)
+    h = g.nodes
+    for i in range(cfg.n_layers):
+        neigh = C.scatter_mean(g, C.gather_src(g, h))
+        h = _layer(params, i, h, neigh)
+    if cfg.task == "graph_reg":
+        h = C.graph_readout(g, h, op="mean")
+    return h @ params["dec/w"] + params["dec/b"]
+
+
+def forward_sampled(params, cfg: C.GNNConfig,
+                    feats: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    """feats[k] — features of hop-k nodes, shape [B, f1, …, fk, F].
+    len(feats) == n_layers + 1.  Returns seed logits [B, n_out]."""
+    assert len(feats) == cfg.n_layers + 1
+    from repro.dist.api import constrain
+    h = [constrain(f, ("batch",) + (None,) * (f.ndim - 1)) for f in feats]
+    # aggregate from the deepest hop inward; after step i, h has one less level
+    for i in reversed(range(cfg.n_layers)):
+        li = cfg.n_layers - 1 - i          # layer index applied at this step
+        new_h = []
+        for k in range(i + 1):
+            neigh_mean = h[k + 1].mean(axis=-2)
+            new_h.append(_layer(params, li, h[k], neigh_mean))
+        h = new_h
+    return h[0] @ params["dec/w"] + params["dec/b"]
+
+
+def loss_fn(params, cfg: C.GNNConfig, g: C.GraphBatch, labels
+            ) -> Tuple[jnp.ndarray, Dict]:
+    out = forward(params, cfg, g)
+    if cfg.task == "node_clf":
+        loss = C.node_xent(out, labels, None if g.node_mask is None
+                           else g.node_mask.astype(jnp.float32))
+    elif cfg.task == "graph_reg":
+        loss = C.mse(out, labels, None)
+    else:
+        loss = C.mse(out, labels, None if g.node_mask is None
+                     else g.node_mask.astype(jnp.float32))
+    return loss, {"loss": loss}
+
+
+def loss_fn_sampled(params, cfg: C.GNNConfig, feats, labels
+                    ) -> Tuple[jnp.ndarray, Dict]:
+    logits = forward_sampled(params, cfg, feats)
+    loss = C.node_xent(logits, labels, None)
+    return loss, {"loss": loss}

@@ -1,0 +1,6 @@
+from repro.models.recsys.autoint import (AutoIntConfig, init_params,
+                                         forward, loss_fn, retrieval_scores)
+from repro.models.recsys.embedding import embedding_bag, fielded_lookup
+
+__all__ = ["AutoIntConfig", "init_params", "forward", "loss_fn",
+           "retrieval_scores", "embedding_bag", "fielded_lookup"]

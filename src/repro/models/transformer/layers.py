@@ -1,0 +1,268 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked causal
+/ sliding-window / split-KV decode), dense MLPs, and capacity-based MoE."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.api import constrain
+from repro.models.transformer.config import TransformerConfig
+
+NEG_INF = -1e9
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(d_head: int, theta: float, dtype=jnp.float32) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=dtype) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: [..., S, H, dh]; positions: [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _qkv(x, p, cfg: TransformerConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def causal_attention(x, p, cfg: TransformerConfig, positions) -> jnp.ndarray:
+    return causal_attention_with_kv(x, p, cfg, positions)[0]
+
+
+def causal_attention_with_kv(x, p, cfg: TransformerConfig, positions
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                        jnp.ndarray]:
+    """Full-sequence GQA attention, q-chunked for O(chunk·S) score memory.
+    Applies causal + optional sliding-window masking.  Also returns the
+    (roped) K/V for prefill cache construction."""
+    B, S, D = x.shape
+    KV, rep, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head
+    q, k, v = _qkv(x, p, cfg, positions)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    q = q.reshape(B, S, KV, rep, dh) * (dh ** -0.5)
+
+    Cq = min(cfg.attn_q_chunk, S)
+    while S % Cq:                     # largest divisor of S ≤ attn_q_chunk
+        Cq -= 1
+    n_chunks = S // Cq
+    kv_pos = positions  # [S] or [B, S]
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None, :]
+
+    def chunk(qi):
+        qc = lax.dynamic_slice_in_dim(q, qi * Cq, Cq, axis=1)
+        qp = lax.dynamic_slice_in_dim(kv_pos, qi * Cq, Cq, axis=1)
+        s = jnp.einsum("bqkrd,bskd->bkrqs", qc, k,
+                       preferred_element_type=jnp.float32)
+        mask = qp[:, :, None] >= kv_pos[:, None, :]           # causal
+        if cfg.sliding_window:
+            mask &= (qp[:, :, None] - kv_pos[:, None, :]) < cfg.sliding_window
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return jnp.einsum("bkrqs,bskd->bqkrd", pattn, v)
+
+    out = jnp.concatenate([chunk(i) for i in range(n_chunks)], axis=1) \
+        if n_chunks > 1 else chunk(0)
+    out = out.reshape(B, S, cfg.n_heads, dh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), k, v
+
+
+def decode_attention(x, p, cfg: TransformerConfig, cache_k, cache_v,
+                     position: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token decode with a (possibly ring-buffered SWA) KV cache.
+
+    x: [B, 1, D]; cache_k/v: [B, S_cache, KV, dh]; position: scalar i32 —
+    current absolute position.  Returns (out, new_cache_k, new_cache_v).
+    The cache sequence dim may be sharded over 'model' (split-KV decode);
+    XLA inserts the partial-softmax collectives.
+    """
+    B = x.shape[0]
+    KV, rep, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head
+    S_cache = cache_k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    pos_arr = jnp.full((1, 1), position, jnp.int32)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+
+    slot = position % S_cache if cfg.sliding_window else position
+    cache_k = lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    q = q.reshape(B, 1, KV, rep, dh) * (dh ** -0.5)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", q, cache_k.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    idx = jnp.arange(S_cache)
+    if cfg.sliding_window:
+        valid = idx < jnp.minimum(position + 1, S_cache)
+    else:
+        valid = idx <= position
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", pattn, cache_v.astype(x.dtype))
+    out = out.reshape(B, 1, cfg.n_heads, dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+def decode_attention_batch(x, p, cfg: TransformerConfig, cache_k, cache_v,
+                           positions: jnp.ndarray
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-row-position decode (continuous batching): positions [B] i32.
+
+    Identical math to :func:`decode_attention` but every batch row sits at
+    its own absolute position (slots admitted at different times).  The
+    cache write uses a one-hot mask over the sequence dim instead of
+    ``dynamic_update_slice`` (per-row indices).
+    """
+    B = x.shape[0]
+    KV, rep, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head
+    S_cache = cache_k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    pos2 = positions[:, None].astype(jnp.int32)            # [B, 1]
+    q = apply_rope(q, pos2, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_theta)
+
+    slot = (positions % S_cache) if cfg.sliding_window else positions
+    iota = jnp.arange(S_cache)
+    write = (iota[None, :] == slot[:, None])               # [B, S]
+    cache_k = jnp.where(write[:, :, None, None], k.astype(cache_k.dtype),
+                        cache_k)
+    cache_v = jnp.where(write[:, :, None, None], v.astype(cache_v.dtype),
+                        cache_v)
+
+    q = q.reshape(B, 1, KV, rep, dh) * (dh ** -0.5)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", q, cache_k.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if cfg.sliding_window:
+        valid = iota[None, :] < jnp.minimum(positions + 1, S_cache)[:, None]
+    else:
+        valid = iota[None, :] <= positions[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", pattn, cache_v.astype(x.dtype))
+    out = out.reshape(B, 1, cfg.n_heads, dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def dense_mlp(x, p, cfg: TransformerConfig) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    elif cfg.mlp == "squared_relu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.mlp)
+    h = constrain(h, ("batch", "seq", "ff"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo_mlp"].astype(x.dtype))
+
+
+def moe_mlp(x, p, cfg: TransformerConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k MoE (GShard-style, scatter dispatch).
+    Returns (output, aux_load_balancing_loss)."""
+    mcfg = cfg.moe
+    B, S, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    router_logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                               p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, K)              # [T, K]
+    if mcfg.renormalize:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Switch-style aux loss: E · Σ_e fraction_tokens(e) · mean_prob(e)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32),
+                  axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = gate_idx.reshape(-1)                           # [T*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, 0) - 1,
+                              flat_e[:, None], axis=1)[:, 0]
+    capacity = max(1, int(mcfg.capacity_factor * T * K / E))
+    keep = pos < capacity
+    slot_e = jnp.where(keep, flat_e, E)                     # drop bin E
+    slot_c = jnp.clip(pos, 0, capacity - 1)
+
+    x_rep = jnp.repeat(xt, K, axis=0)                       # [T*K, D]
+    buf = jnp.zeros((E + 1, capacity, D), x.dtype)
+    buf = buf.at[slot_e, slot_c].add(x_rep)
+    # dispatch buffers shard their capacity dim ("moe_capacity" → data):
+    # an unsharded [E, cap, D] buffer turns the token scatter into a
+    # full-buffer all-reduce per layer per microbatch (≈27 TB/step at the
+    # granite production shape — see EXPERIMENTS.md §Perf)
+    buf = constrain(buf[:E], ("experts", "moe_capacity", "embed"))
+
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, p["we_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, p["we_up"].astype(x.dtype))
+        h = jnp.square(jax.nn.relu(h))
+    h = constrain(h, ("experts", "moe_capacity", "expert_ff"))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["we_down"].astype(x.dtype))
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((1, capacity, D), x.dtype)], 0)
+
+    y = out_buf[slot_e, slot_c]                             # [T*K, D]
+    y = y * (keep * gate_vals.reshape(-1)).astype(x.dtype)[:, None]
+    y = y.reshape(T, K, D).sum(axis=1)
+    return y.reshape(B, S, D), aux

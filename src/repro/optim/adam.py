@@ -1,0 +1,89 @@
+"""Adam / AdamW built from scratch (no optax), with ZeRO-1-compatible state.
+
+State is a pytree mirroring params: {"m": ..., "v": ..., "step": scalar}.
+Gradient clipping (global L2 norm) and a cosine/linear-warmup schedule are
+included; the trainer shards ``m``/``v`` per dist.sharding.zero1_logical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"      # "cosine" | "linear" | "constant"
+    state_dtype: Any = jnp.float32
+
+
+def schedule_lr(cfg: AdamConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps),
+                     0.0, 1.0)
+        decay = (0.5 * (1 + jnp.cos(jnp.pi * t)) if cfg.schedule == "cosine"
+                 else 1.0 - t)
+    return cfg.lr * warm * decay
+
+
+def init_state(params, cfg: AdamConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply_updates(params, grads, state, cfg: AdamConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = schedule_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(cfg.state_dtype)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(cfg.state_dtype)
+        return (p - (lr * delta).astype(p.dtype)), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    state = {"m": new_m, "v": new_v, "step": step}
+    return new_p, state, {"lr": lr, "grad_norm": gnorm}

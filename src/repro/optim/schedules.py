@@ -1,0 +1,32 @@
+"""Standalone LR schedules (the AdamConfig embeds the common ones; these are
+for custom training loops and the examples)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, warmup_steps))
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(1, total_steps - warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return peak_lr * warm * (final_frac + (1 - final_frac) * cos)
+
+
+def warmup_linear(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, warmup_steps))
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(1, total_steps - warmup_steps), 0.0, 1.0)
+    return peak_lr * warm * (1.0 - t)
+
+
+def inverse_sqrt(step, *, peak_lr: float, warmup_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, warmup_steps))
+    decay = jnp.sqrt(jnp.maximum(1.0, warmup_steps)
+                     / jnp.maximum(step, 1.0))
+    return peak_lr * warm * jnp.minimum(1.0, decay)

@@ -1,0 +1,196 @@
+"""Correctness of the six PageRank variants against the numpy oracle,
+plus the paper's stability, fault-tolerance, and helping properties."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (HostGraph, FaultPlan, df_pagerank, dt_pagerank,
+                        nd_pagerank, static_pagerank, reference_pagerank,
+                        numpy_reference, linf)
+from repro.core.delta import random_batch, pure_deletion_batch
+from repro.core.frontier import (batch_to_device, initial_affected,
+                                 initial_affected_with_helping, dt_affected)
+from repro.graphs.generators import rmat, erdos_renyi, grid_road, kmer_chains
+
+TAU = 1e-10
+BAND = 1e-8          # paper: error stays within [0, 1e-9) at τ=1e-10
+
+
+@pytest.fixture(scope="module")
+def dyn_setup():
+    hg0 = rmat(11, avg_degree=8, seed=3)
+    g0 = hg0.snapshot(block_size=128)
+    r_prev = jnp.asarray(numpy_reference(g0, iterations=300))
+    dels, ins = random_batch(hg0, 1e-3, seed=11)
+    hg1 = hg0.apply_batch(dels, ins)
+    g1 = hg1.snapshot(block_size=128)
+    ref1 = numpy_reference(g1, iterations=300)
+    batch = batch_to_device(g1, dels, ins)
+    return g0, g1, batch, r_prev, ref1
+
+
+@pytest.mark.parametrize("gen", [rmat, erdos_renyi])
+@pytest.mark.parametrize("mode,engine", [("bb", "dense"), ("bb", "blocked"),
+                                         ("lf", "blocked")])
+def test_static_matches_oracle(gen, mode, engine):
+    hg = gen(9 if gen is rmat else 512, avg_degree=6, seed=1)
+    g = hg.snapshot(block_size=64)
+    ref = numpy_reference(g, iterations=300)
+    res = static_pagerank(g, mode=mode, engine=engine, tau=TAU)
+    assert res.converged
+    assert linf(res.ranks, ref) < BAND
+
+
+def test_reference_pagerank_jax_vs_numpy():
+    hg = grid_road(48, seed=0)
+    g = hg.snapshot(block_size=64)
+    assert linf(reference_pagerank(g, iterations=200),
+                numpy_reference(g, iterations=200)) < 1e-12
+
+
+@pytest.mark.parametrize("variant", ["nd", "dt", "df"])
+@pytest.mark.parametrize("mode", ["bb", "lf"])
+def test_dynamic_variants_match_oracle(dyn_setup, variant, mode):
+    g0, g1, batch, r_prev, ref1 = dyn_setup
+    if variant == "nd":
+        res = nd_pagerank(g1, r_prev, mode=mode)
+    elif variant == "dt":
+        res = dt_pagerank(g0, g1, batch, r_prev, mode=mode)
+    else:
+        res = df_pagerank(g0, g1, batch, r_prev, mode=mode)
+    assert res.converged
+    assert linf(res.ranks[:g1.n], ref1[:g1.n]) < BAND
+
+
+def test_ranks_sum_to_one(dyn_setup):
+    g0, g1, batch, r_prev, _ = dyn_setup
+    res = df_pagerank(g0, g1, batch, r_prev, mode="lf")
+    assert abs(float(res.ranks[:g1.n].sum()) - 1.0) < 1e-6
+
+
+def test_stability_delete_then_reinsert(dyn_setup):
+    """Paper §5.2.3: delete a batch, update, re-insert, update — final ranks
+    must match the original ones (L∞ ≈ 0)."""
+    hg0 = rmat(10, avg_degree=8, seed=5)
+    g0 = hg0.snapshot(block_size=128)
+    r0 = jnp.asarray(numpy_reference(g0, iterations=300))
+    dels = pure_deletion_batch(hg0, 1e-3, seed=2)
+    hg1 = hg0.apply_batch(dels, np.zeros((0, 2)))
+    g1 = hg1.snapshot(block_size=128)
+    b1 = batch_to_device(g1, dels, np.zeros((0, 2)))
+    r1 = df_pagerank(g0, g1, b1, r0, mode="lf").ranks
+    hg2 = hg1.apply_batch(np.zeros((0, 2)), dels)
+    g2 = hg2.snapshot(block_size=128)
+    b2 = batch_to_device(g2, np.zeros((0, 2)), dels)
+    r2 = df_pagerank(g1, g2, b2, r1, mode="lf").ranks
+    assert linf(r2[:g0.n], r0[:g0.n]) < BAND
+
+
+def test_initial_affected_is_out_neighbors(dyn_setup):
+    g0, g1, batch, _, _ = dyn_setup
+    aff = np.asarray(initial_affected(g0, g1, batch))
+    expect = np.zeros(g1.n_pad, dtype=bool)
+    b = np.asarray(batch)
+    srcs = set(int(u) for u, v in b if u < g1.n)
+    for g, hg_edges in ((g0, None), (g1, None)):
+        src = np.asarray(g.src)[:g.m]
+        dst = np.asarray(g.dst)[:g.m]
+        for u, v in zip(src, dst):
+            if int(u) in srcs:
+                expect[v] = True
+    # self-loops mean sources mark themselves too — per paper, source u is
+    # marked only via its self-loop (u,u): out-neighbor of u includes u.
+    assert (aff == expect[:g1.n_pad]).all()
+
+
+def test_dt_superset_of_df_initial(dyn_setup):
+    g0, g1, batch, _, _ = dyn_setup
+    df0 = initial_affected(g0, g1, batch)
+    dt0 = dt_affected(g0, g1, batch)
+    assert bool(jnp.all(dt0 | ~df0))   # DF initial ⊆ DT reachable set
+
+
+def test_helping_equals_faultfree_marking(dyn_setup):
+    g0, g1, batch, _, _ = dyn_setup
+    full = initial_affected(g0, g1, batch)
+    fp = np.zeros(batch.shape[0], dtype=bool)
+    fp[::3] = True   # first pass only processed a third of the updates
+    aff, C, rounds = initial_affected_with_helping(
+        g0, g1, batch, jnp.asarray(fp))
+    assert bool(jnp.all(aff == full))
+    assert bool(C.all())
+    assert rounds >= 1
+
+
+class TestFaultTolerance:
+    def _setup(self):
+        hg0 = rmat(10, avg_degree=8, seed=7)
+        g0 = hg0.snapshot(block_size=64)
+        r_prev = jnp.asarray(numpy_reference(g0, iterations=300))
+        dels, ins = random_batch(hg0, 1e-3, seed=1)
+        hg1 = hg0.apply_batch(dels, ins)
+        g1 = hg1.snapshot(block_size=64)
+        ref1 = numpy_reference(g1, iterations=300)
+        return g0, g1, batch_to_device(g1, dels, ins), r_prev, ref1
+
+    def test_lf_survives_crashes(self):
+        g0, g1, batch, r_prev, ref1 = self._setup()
+        plan = FaultPlan(n_threads=8, n_crashed=6, crash_window=4, seed=3)
+        res = df_pagerank(g0, g1, batch, r_prev, mode="lf", faults=plan)
+        assert res.converged
+        assert linf(res.ranks[:g1.n], ref1[:g1.n]) < BAND
+
+    def test_bb_stalls_on_crash(self):
+        g0, g1, batch, r_prev, _ = self._setup()
+        plan = FaultPlan(n_threads=8, n_crashed=1, crash_window=1, seed=3)
+        res = df_pagerank(g0, g1, batch, r_prev, mode="bb", faults=plan)
+        assert res.stats.dnf and not res.converged
+
+    def test_lf_survives_delays(self):
+        g0, g1, batch, r_prev, ref1 = self._setup()
+        plan = FaultPlan(n_threads=8, delay_prob=0.4, delay_ms=100, seed=5)
+        res = df_pagerank(g0, g1, batch, r_prev, mode="lf", faults=plan)
+        assert res.converged
+        assert linf(res.ranks[:g1.n], ref1[:g1.n]) < BAND
+
+    def test_crash_slowdown_is_graceful(self):
+        """More crashes → more simulated time, but always completes (Fig 9)."""
+        g0, g1, batch, r_prev, _ = self._setup()
+        times = []
+        for k in [0, 4, 6]:
+            plan = FaultPlan(n_threads=8, n_crashed=k, crash_window=1, seed=9)
+            res = df_pagerank(g0, g1, batch, r_prev, mode="lf", faults=plan)
+            assert res.converged
+            times.append(res.stats.sim_time_ms)
+        assert times[0] <= times[1] <= times[2] * 1.001
+
+
+class TestDynamicGraphStore:
+    def test_apply_batch_roundtrip(self):
+        hg = erdos_renyi(256, avg_degree=4, seed=0)
+        dels, ins = random_batch(hg, 0.01, seed=1)
+        hg2 = hg.apply_batch(dels, ins)
+        assert hg2.m == hg.m - len(dels) + len(ins)
+        hg3 = hg2.apply_batch(ins, dels)
+        assert hg3.m == hg.m
+        assert (hg3.edges == hg.edges).all()
+
+    def test_snapshot_degrees(self):
+        hg = rmat(8, avg_degree=4, seed=2)
+        g = hg.snapshot(block_size=32)
+        deg = np.asarray(g.out_deg)[:g.n]
+        e = hg.edges
+        expect = np.bincount(e[:, 0], minlength=g.n) + 1  # + self-loop
+        assert (deg == expect).all()
+
+    def test_block_ptrs_partition_edges(self):
+        hg = rmat(8, avg_degree=4, seed=2)
+        g = hg.snapshot(block_size=32)
+        ibp = np.asarray(g.in_block_ptr)
+        assert ibp[0] == 0 and ibp[-1] == g.m
+        assert (np.diff(ibp) >= 0).all()
+        dst = np.asarray(g.dst)[:g.m]
+        for b in range(0, g.n_blocks, max(1, g.n_blocks // 7)):
+            sl = dst[ibp[b]:ibp[b + 1]]
+            assert ((sl >= b * 32) & (sl < (b + 1) * 32)).all()

@@ -1,0 +1,100 @@
+"""Two claim-level tests:
+ 1. the paper's §3.5.2 observation that Dynamic Traversal (DT) cannot beat
+    ND — DT marks everything REACHABLE from the update, a superset of DF's
+    decay-bounded frontier;
+ 2. elastic checkpoint restore: a checkpoint written from a 1-device run
+    restores onto an 8-device mesh with sharded placement (the framework's
+    elastic-rescale claim)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import frontier as fr
+from repro.core import pagerank as pr
+from repro.core.delta import random_batch
+from repro.graphs.generators import rmat
+
+
+def test_dt_marks_superset_and_matches_reference():
+    hg = rmat(11, 8, seed=0)
+    cap = 1024 * ((hg.m * 3 + 2 * hg.n) // 1024 + 3)
+    dels, ins = random_batch(hg, 1e-3, seed=1)
+    hg2 = hg.apply_batch(dels, ins)
+    g1 = hg.snapshot(edge_capacity=cap)
+    g2 = hg2.snapshot(edge_capacity=cap)
+    batch = fr.batch_to_device(g2, dels, ins)
+    r_prev = pr.reference_pagerank(g1, iterations=250)
+    ref = pr.reference_pagerank(g2, iterations=250)
+
+    # DT's initial affected set ⊇ DF's (reachability vs out-neighbors)
+    df0 = fr.initial_affected(g1, g2, batch)
+    dt0 = fr.dt_affected(g1, g2, batch)
+    assert bool(jnp.all(jnp.logical_or(~df0, dt0)))
+    assert int(dt0.sum()) >= int(df0.sum())
+
+    # both converge to the reference.  (The paper's runtime claim — DT
+    # "cannot perform better than ND" — is about wall time incl. the BFS
+    # marking overhead at 37M+ edge scale; cumulative-edge comparisons are
+    # scale-dependent, so only the set/correctness invariants are asserted.)
+    dt = pr.dt_pagerank(g1, g2, batch, r_prev, mode="lf")
+    df = pr.df_pagerank(g1, g2, batch, r_prev, mode="lf")
+    assert dt.stats.converged and df.stats.converged
+    assert pr.linf(dt.ranks, ref[:dt.ranks.shape[0]]) < 1e-9
+    assert pr.linf(df.ranks, ref[:df.ranks.shape[0]]) < 1e-9
+    # DT's first sweep covers at least DF's initial frontier
+    assert int(dt0.sum()) >= int(df0.sum())
+
+
+ELASTIC = textwrap.dedent("""
+    import sys, numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.ckpt.checkpoint import Checkpointer
+    ckdir = sys.argv[1]
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    params = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((16,))}
+    opt = {"m": jax.tree.map(jnp.zeros_like, params),
+           "step": jnp.int32(0)}
+    shard = ({"w": NamedSharding(mesh, P("data", None)),
+              "b": NamedSharding(mesh, P("data"))},
+             {"m": {"w": NamedSharding(mesh, P("data", None)),
+                    "b": NamedSharding(mesh, P("data"))},
+              "step": NamedSharding(mesh, P())})
+    ck = Checkpointer(ckdir)
+    p2, o2, step = ck.restore(7, params, opt, shardings=shard)
+    assert step == 7
+    w = p2["w"]
+    assert len(w.sharding.device_set) == 8, w.sharding
+    np.testing.assert_allclose(np.asarray(w),
+                               np.arange(64).reshape(16, 4))
+    assert int(o2["step"]) == 3
+    print("ELASTIC-OK")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_restore_onto_8_devices(tmp_path):
+    from repro.ckpt.checkpoint import Checkpointer
+    # write from THIS (1-device) process
+    params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(16, 4),
+              "b": jnp.ones((16,))}
+    opt = {"m": jax.tree.map(jnp.zeros_like, params),
+           "step": jnp.int32(3)}
+    ck = Checkpointer(str(tmp_path))
+    ck.save(params, opt, 7)
+    # restore in a subprocess that sees 8 devices, with sharded placement
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", ELASTIC, str(tmp_path)],
+                       env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ELASTIC-OK" in r.stdout

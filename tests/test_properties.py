@@ -1,0 +1,148 @@
+"""Hypothesis property tests over the system's invariants
+(repro/core/properties.py; each mirrors a claim the paper relies on)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frontier as fr
+from repro.core import pagerank as pr
+from repro.core import properties as prop
+from repro.core.delta import random_batch
+from repro.core.faults import FaultPlan
+from repro.core.graph import HostGraph
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def _graph(n: int, m: int, seed: int) -> HostGraph:
+    rng = np.random.default_rng(seed)
+    e = np.stack([rng.integers(0, n, m), rng.integers(0, n, m)], 1)
+    return HostGraph(n, e)
+
+
+@st.composite
+def graph_and_batch(draw):
+    n = draw(st.integers(16, 200))
+    m = draw(st.integers(n, 4 * n))
+    seed = draw(st.integers(0, 2 ** 16))
+    frac = draw(st.sampled_from([1e-2, 0.05, 0.2]))
+    return n, m, seed, frac
+
+
+# -- I1: rank conservation -----------------------------------------------------
+
+@SET
+@given(st.integers(16, 150), st.integers(0, 2 ** 16))
+def test_rank_conservation(n, seed):
+    hg = _graph(n, 3 * n, seed)
+    g = hg.snapshot()
+    r = pr.reference_pagerank(g, iterations=150)
+    assert prop.rank_conservation_error(g, r) < 1e-6
+
+
+# -- I2: idempotent marking (the helping mechanism's correctness) --------------
+
+@SET
+@given(graph_and_batch())
+def test_marking_idempotent(gb):
+    n, m, seed, frac = gb
+    hg = _graph(n, m, seed)
+    dels, ins = random_batch(hg, frac, seed=seed + 1)
+    hg2 = hg.apply_batch(dels, ins)
+    g1, g2 = hg.snapshot(), hg2.snapshot()
+    batch = fr.batch_to_device(g2, dels, ins)
+    assert prop.marking_idempotent(g1, g2, batch)
+
+
+# -- I2b: helping == single-pass marking, any first-pass subset ----------------
+
+@SET
+@given(graph_and_batch(), st.floats(0.0, 1.0))
+def test_helping_equals_full_marking(gb, coverage):
+    n, m, seed, frac = gb
+    hg = _graph(n, m, seed)
+    dels, ins = random_batch(hg, frac, seed=seed + 2)
+    hg2 = hg.apply_batch(dels, ins)
+    g1, g2 = hg.snapshot(), hg2.snapshot()
+    batch = fr.batch_to_device(g2, dels, ins)
+    rng = np.random.default_rng(seed)
+    first_pass = jnp.asarray(rng.random(batch.shape[0]) < coverage)
+    full = fr.initial_affected(g1, g2, batch)
+    helped, checked, _ = fr.initial_affected_with_helping(
+        g1, g2, batch, first_pass)
+    assert bool(jnp.array_equal(full, helped))
+    assert bool(checked.all())
+
+
+# -- I3: frontier monotonicity --------------------------------------------------
+
+@SET
+@given(graph_and_batch())
+def test_frontier_monotone(gb):
+    n, m, seed, frac = gb
+    hg = _graph(n, m, seed)
+    g = hg.snapshot()
+    rng = np.random.default_rng(seed)
+    flags = jnp.asarray(rng.random(g.n_pad) < 0.1)
+    grown, _ = fr.expand_frontier(g, flags, flags, jnp.zeros_like(flags))
+    assert prop.frontier_monotone(flags, grown)
+
+
+# -- I4: fault-schedule soundness ----------------------------------------------
+
+@SET
+@given(st.integers(1, 64), st.integers(0, 63), st.floats(0, 0.9),
+       st.integers(0, 2 ** 16))
+def test_fault_schedule_sound(n_threads, n_crashed, delay_prob, seed):
+    n_crashed = min(n_crashed, n_threads - 1)  # at least one survivor
+    plan = FaultPlan(n_threads=n_threads, n_crashed=n_crashed,
+                     delay_prob=delay_prob, delay_ms=10, seed=seed)
+    assert prop.fault_schedule_sound(plan)
+
+
+# -- I5: delete+reinsert round trip ---------------------------------------------
+
+@SET
+@given(graph_and_batch())
+def test_delete_insert_roundtrip(gb):
+    n, m, seed, frac = gb
+    hg = _graph(n, m, seed)
+    if hg.m == 0:
+        return
+    rng = np.random.default_rng(seed)
+    k = max(1, int(frac * hg.m))
+    batch = hg.edges[rng.choice(hg.m, size=min(k, hg.m), replace=False)]
+    assert prop.delete_insert_roundtrip(hg, batch)
+
+
+# -- engine-level: DF == reference within the paper's band ----------------------
+
+@settings(max_examples=6, deadline=None)
+@given(graph_and_batch(), st.sampled_from(["bb", "lf"]),
+       st.sampled_from(["affected", "rc"]))
+def test_df_matches_reference(gb, mode, policy):
+    n, m, seed, frac = gb
+    hg = _graph(n, m, seed)
+    dels, ins = random_batch(hg, frac, seed=seed + 3)
+    hg2 = hg.apply_batch(dels, ins)
+    g1, g2 = hg.snapshot(), hg2.snapshot()
+    batch = fr.batch_to_device(g2, dels, ins)
+    r_prev = pr.reference_pagerank(g1, iterations=250)
+    res = pr.df_pagerank(g1, g2, batch, r_prev, mode=mode,
+                         active_policy=policy)
+    ref = pr.reference_pagerank(g2, iterations=250)
+    assert res.stats.converged
+    assert prop.ranks_match_reference(res.ranks, ref, tol=1e-9)
+
+
+# -- HostGraph functional semantics ---------------------------------------------
+
+@SET
+@given(st.integers(8, 64), st.integers(8, 128), st.integers(0, 2 ** 16))
+def test_apply_batch_is_functional(n, m, seed):
+    hg = _graph(n, m, seed)
+    before = hg.edges.copy()
+    dels, ins = random_batch(hg, 0.3, seed=seed)
+    hg.apply_batch(dels, ins)           # must NOT mutate the original
+    assert np.array_equal(before, hg.edges)
