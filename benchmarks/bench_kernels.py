@@ -11,14 +11,42 @@ reports what IS meaningful off-hardware:
 from __future__ import annotations
 
 import sys
+import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import SUITE, Row, emit
 from repro.kernels.block_spmv import ops, ref
 
 BLOCKS = (64, 128, 256)
+
+
+def _bench_build(e: np.ndarray, n: int, block: int, gname: str,
+                 rows: list) -> None:
+    """Build-path microbenchmark: full vectorized build vs apply_delta on a
+    1% batch — the structural win of the incremental builder."""
+    t0 = time.perf_counter()
+    mat = ops.build_block_sparse(e[:, 1], e[:, 0], n, n, block=block)
+    jax.block_until_ready(mat.tiles)
+    t_full = time.perf_counter() - t0
+    b = max(1, len(e) // 100)
+    rng = np.random.default_rng(1)
+    dr = rng.integers(0, n, b)
+    dc = rng.integers(0, n, b)
+    ones = np.ones(b, np.float32)
+    # warm the scatter-add jit; block so async dispatch can't hide the work
+    jax.block_until_ready(ops.apply_delta(mat, dr, dc, ones).tiles)
+    t0 = time.perf_counter()
+    jax.block_until_ready(ops.apply_delta(mat, dr, dc, ones).tiles)
+    t_delta = time.perf_counter() - t0
+    rows.append(Row("kernel_build", gname, f"full_B{block}", block,
+                    t_full, 0, len(e),
+                    extra=f"tiles={int(mat.tiles.shape[0])}"))
+    rows.append(Row("kernel_build", gname, f"delta_B{block}", block,
+                    t_delta, 0, b,
+                    extra=f"speedup_vs_full={t_full / max(t_delta, 1e-9):.1f}x"))
 
 
 def main(out: str = "results/bench_kernels.csv", *, quick: bool = False):
@@ -61,6 +89,26 @@ def main(out: str = "results/bench_kernels.csv", *, quick: bool = False):
             rows.append(Row("kernel_expand", gname, f"pallas_or_B{B}", B,
                             0.0, 0, nnz, err_or))
             assert err_or == 0.0, "OR-semiring expansion mismatch"
+            # frontier-compacted variant: a strict subset of active
+            # row-blocks must reproduce the full result on those blocks
+            n_rb = mat.n_rb
+            ids = np.full(n_rb, -1, np.int32)
+            sub = np.arange(0, n_rb, 2, dtype=np.int32)
+            ids[:len(sub)] = sub
+            xp = jnp.zeros((mat.n_cb * B,), x.dtype).at[:n].set(x)
+            ya = np.asarray(ops.block_spmv_active(
+                mat, xp, jnp.asarray(ids), interpret=True))
+            ya = np.concatenate(
+                [ya, np.zeros(n_rb * B - len(ya))]).reshape(n_rb, B)
+            yf = np.asarray(y_ref)
+            yf = np.concatenate([yf, np.zeros(n_rb * B - len(yf))])
+            err_act = max(float(np.abs(ya[rb] - yf.reshape(n_rb, B)[rb]).max())
+                          for rb in sub)
+            rows.append(Row("kernel_spmv_active", gname,
+                            f"pallas_active_B{B}", B, 0.0, 0, nnz, err_act,
+                            extra=f"active_blocks={len(sub)}/{n_rb}"))
+            assert err_act < 1e-4, f"active SpMV mismatch: {err_act}"
+        _bench_build(e, n, blocks[-1], gname, rows)
     emit(rows, out)
     print("# pallas kernels match oracles across block sizes")
     return rows

@@ -103,8 +103,11 @@ def timed(fn: Callable, *, repeats: int = 2) -> Dict:
 
 
 def run_variant(name: str, g_prev, g_cur, batch, r_prev, *, faults=None,
-                **kw) -> pr.PagerankResult:
-    """Dispatch one of the six paper variants on the blocked engine."""
+                engine: Optional[str] = None, **kw) -> pr.PagerankResult:
+    """Dispatch one of the paper variants.  ``engine`` selects
+    dense/blocked/pallas explicitly; None uses ``pr.default_engine()``
+    (blocked on CPU containers, the fused pallas engine on TPU)."""
+    kw = dict(kw, engine=engine)
     if name == "static_bb":
         return pr.static_pagerank(g_cur, mode="bb", faults=faults, **kw)
     if name == "static_lf":

@@ -2,11 +2,16 @@
 from repro.core.graph import GraphSnapshot, HostGraph
 from repro.core.pagerank import (df_pagerank, dt_pagerank, nd_pagerank,
                                  static_pagerank, reference_pagerank,
-                                 numpy_reference, linf, PagerankResult)
+                                 numpy_reference, linf, PagerankResult,
+                                 default_engine)
+from repro.core.pallas_engine import run_pallas, build_pull_matrix
+from repro.core.incremental import IncrementalPullMatrix
 from repro.core.faults import FaultPlan, NO_FAULTS
 
 __all__ = [
     "GraphSnapshot", "HostGraph", "df_pagerank", "dt_pagerank",
     "nd_pagerank", "static_pagerank", "reference_pagerank",
     "numpy_reference", "linf", "PagerankResult", "FaultPlan", "NO_FAULTS",
+    "default_engine", "run_pallas", "build_pull_matrix",
+    "IncrementalPullMatrix",
 ]

@@ -16,7 +16,17 @@ Vertices are grouped into fixed blocks (the paper's chunks).  Each sweep:
   5. per-slot masks simulate delayed / crashed pseudo-threads: a masked slot
      does no work and its block simply stays flagged for a later sweep.
 
-Everything is static-shaped; one jit cache entry per (snapshot family, K).
+Everything is static-shaped; one jit cache entry per (snapshot family, K),
+with K drawn from the fixed ladder :func:`slot_buckets` (recomputed every
+sweep, so capacity both grows and shrinks with the frontier while the cache
+stays bounded).  α/τ/τ_f are *traced operands*, not static arguments — a
+hyperparameter sweep reuses one compiled sweep.
+
+This engine drives its loop from Python and pays a host↔device round-trip
+per sweep (active count, convergence flag, per-sweep stats).  It is kept as
+the in-sweep Gauss–Seidel reference and fault-model oracle; the production
+hot path is the fully fused device-resident driver in
+:mod:`repro.core.pallas_engine` (see docs/ENGINES.md).
 """
 from __future__ import annotations
 
@@ -31,6 +41,7 @@ from jax import lax
 
 from repro.core.graph import GraphSnapshot
 from repro.core import faults as flt
+from repro.core import frontier as fr
 
 
 @dataclasses.dataclass
@@ -45,13 +56,16 @@ class SweepStats:
 
 
 def _slot_body(g: GraphSnapshot, *, tile: int, expand: bool, jacobi: bool,
-               alpha: float, tau: float, tau_f: float, dtype):
-    """Returns the scan body processing one compacted block slot."""
+               alpha, tau, tau_f, dtype):
+    """Returns the scan body processing one compacted block slot.
+
+    ``alpha``/``tau``/``tau_f`` may be traced scalars — they participate
+    only in arithmetic, never in shapes."""
     B = g.block_size
     T = tile
     n_pad = g.n_pad
     iota = jnp.arange(T, dtype=jnp.int32)
-    base_rank = jnp.asarray((1.0 - alpha) / g.n, dtype)
+    base_rank = ((1.0 - jnp.asarray(alpha, dtype)) / g.n).astype(dtype)
     alpha_c = jnp.asarray(alpha, dtype)
     tau_c = jnp.asarray(tau, dtype)
     tau_f_c = jnp.asarray(tau_f, dtype)
@@ -130,12 +144,15 @@ def _slot_body(g: GraphSnapshot, *, tile: int, expand: bool, jacobi: bool,
     return body
 
 
-@partial(jax.jit, static_argnames=("tile", "expand", "jacobi", "alpha",
-                                   "tau", "tau_f", "dtype_name"))
+@partial(jax.jit, static_argnames=("tile", "expand", "jacobi", "dtype_name"))
 def sweep(g: GraphSnapshot, R, affected, RC, slot_ids, slot_mask,
-          R_read, *, tile: int, expand: bool, jacobi: bool, alpha: float,
-          tau: float, tau_f: float, dtype_name: str):
-    """One compacted sweep over up to K = len(slot_ids) active blocks."""
+          R_read, alpha, tau, tau_f, *, tile: int, expand: bool,
+          jacobi: bool, dtype_name: str):
+    """One compacted sweep over up to K = len(slot_ids) active blocks.
+
+    α/τ/τ_f are traced operands: changing them reuses the jit cache entry
+    (one compilation per (snapshot family, K, structure), not per
+    hyperparameter point — a τ sweep costs one compile)."""
     dtype = jnp.dtype(dtype_name)
     body = _slot_body(g, tile=tile, expand=expand, jacobi=jacobi, alpha=alpha,
                       tau=tau, tau_f=tau_f, dtype=dtype)
@@ -145,13 +162,40 @@ def sweep(g: GraphSnapshot, R, affected, RC, slot_ids, slot_mask,
     return R, affected, RC, maxdr, edges
 
 
+SLOT_BUCKET_BASE = 16
+SLOT_BUCKET_GROWTH = 4
+
+
+def slot_buckets(n_blocks: int) -> Tuple[int, ...]:
+    """The full ladder of slot capacities ``run_blocked`` may ever use for a
+    graph with ``n_blocks`` blocks — this bounds the jit cache: at most
+    ``len(slot_buckets(n_blocks))`` sweep compilations per (snapshot family,
+    dtype, mode), i.e. O(log n_blocks)."""
+    out = []
+    K = SLOT_BUCKET_BASE
+    while K < n_blocks:
+        out.append(K)
+        K *= SLOT_BUCKET_GROWTH
+    out.append(n_blocks)
+    return tuple(out)
+
+
+def slot_capacity(n_act: int, n_blocks: int) -> int:
+    """Smallest ladder bucket ≥ n_act (clamped to n_blocks).  Recomputed
+    from the ladder base every sweep, so capacity *shrinks* as the frontier
+    decays — a small late-phase frontier costs a small sweep — and only the
+    ladder values ever reach the jit cache."""
+    for K in slot_buckets(n_blocks):
+        if K >= n_act:
+            return K
+    return n_blocks
+
+
 @partial(jax.jit, static_argnames=("n_blocks", "block_size"))
 def active_blocks(flags: jnp.ndarray, *, n_blocks: int, block_size: int):
     """Compact active block ids; returns (ids [n_blocks] w/ -1 fill, count)."""
-    per_block = flags[:n_blocks * block_size].reshape(n_blocks, block_size)
-    act = per_block.any(axis=1)
-    ids = jnp.nonzero(act, size=n_blocks, fill_value=-1)[0].astype(jnp.int32)
-    return ids, act.sum()
+    act = fr.block_any(flags, n_blocks, block_size)
+    return fr.compact_block_ids(act, n_blocks), act.sum()
 
 
 def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
@@ -206,12 +250,9 @@ def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
             stats.converged = True
             break
         # capacity-K compaction: the sweep scans K slots, K the smallest
-        # power-of-4 bucket ≥ |active| (few jit cache entries; a small
-        # frontier costs a small sweep — the static-shape work pool)
-        K = 16
-        while K < n_act:
-            K *= 4
-        K = min(K, g.n_blocks)
+        # ladder bucket ≥ |active| (see slot_buckets: bounded jit cache,
+        # capacity shrinks with the frontier — the static-shape work pool)
+        K = slot_capacity(n_act, g.n_blocks)
         ids = ids_full[:K]
 
         # dynamic scheduling (paper §3.3.2): compacted slots are drawn from a
@@ -237,9 +278,10 @@ def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
 
         # functional freeze: in Jacobi mode the body reads the sweep-start R
         R, affected, RC, maxdr, edges = sweep(
-            g, R, affected, RC, ids, slot_mask, R, tile=tile,
-            expand=expand, jacobi=jacobi, alpha=alpha, tau=tau, tau_f=tau_f,
-            dtype_name=dtype_name)
+            g, R, affected, RC, ids, slot_mask, R,
+            jnp.asarray(alpha, dtype), jnp.asarray(tau, dtype),
+            jnp.asarray(tau_f, dtype), tile=tile, expand=expand,
+            jacobi=jacobi, dtype_name=dtype_name)
 
         edges_np = np.asarray(edges)
         mask_np = np.asarray(slot_mask)

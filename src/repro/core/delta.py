@@ -38,6 +38,19 @@ def random_batch(g: HostGraph, frac: float, *, seed: int = 0,
     return dels, ins
 
 
+def signed_edge_delta(deletions: np.ndarray, insertions: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Flatten a (deletions, insertions) batch into the signed coordinate
+    form the incremental block-sparse builder consumes, in *pull* layout
+    (rows = dst, cols = src): deletions carry -1, insertions +1."""
+    dels = np.asarray(deletions, np.int64).reshape(-1, 2)
+    ins = np.asarray(insertions, np.int64).reshape(-1, 2)
+    rows = np.concatenate([dels[:, 1], ins[:, 1]])
+    cols = np.concatenate([dels[:, 0], ins[:, 0]])
+    vals = np.concatenate([-np.ones(len(dels)), np.ones(len(ins))])
+    return rows, cols, vals
+
+
 def pure_deletion_batch(g: HostGraph, frac: float, *, seed: int = 0
                         ) -> np.ndarray:
     """For the stability experiment (§5.2.3): delete-only batch."""

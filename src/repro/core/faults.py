@@ -87,6 +87,28 @@ class FaultPlan:
         return float(np.max(np.where(alive, work_ms, 0.0)))
 
 
+    # -- device export (fused engine) ----------------------------------------
+    def device_tables(self, max_iterations: int):
+        """Precompute the per-(sweep, thread) fault schedule as dense arrays
+        so a fully on-device driver can apply fault masks with zero host
+        syncs: (participating, alive, delay_ms_row, any_crashed)."""
+        s = min(max_iterations, self.max_sweeps)
+        sweeps = np.arange(s)
+        alive = self._crash_at[None, :] > sweeps[:, None]
+        delayed = self._delays[:s] & alive
+        part = alive & ~delayed
+        delay_row = delayed * self.delay_ms
+        crashed = (~alive).any(axis=1)
+        if s < max_iterations:                      # clamp-extend final row
+            def ext(a):
+                return np.concatenate(
+                    [a, np.repeat(a[-1:], max_iterations - s, axis=0)], 0)
+            alive, part, delay_row, crashed = map(
+                ext, (alive, part, delay_row, crashed))
+        return (part.astype(bool), alive.astype(bool),
+                delay_row.astype(np.float32), crashed.astype(bool))
+
+
 NO_FAULTS = FaultPlan(n_threads=1)
 
 

@@ -103,6 +103,21 @@ def dt_affected(g_prev: GraphSnapshot, g_cur: GraphSnapshot,
     return affected
 
 
+def block_any(flags: jnp.ndarray, n_blocks: int, block_size: int
+              ) -> jnp.ndarray:
+    """Per-block OR over a [n_pad] vertex indicator → [n_blocks] bool.
+    Shared by the blocked engine's compaction and the fused Pallas driver."""
+    return flags[:n_blocks * block_size].reshape(n_blocks,
+                                                 block_size).any(axis=1)
+
+
+def compact_block_ids(act: jnp.ndarray, n_blocks: int) -> jnp.ndarray:
+    """Compacted active-block slot list: active ids first, then -1 padding.
+    jit-safe (static ``size=``); the Pallas kernels prefetch this list."""
+    return jnp.nonzero(act, size=n_blocks,
+                       fill_value=-1)[0].astype(jnp.int32)
+
+
 def expand_frontier(g: GraphSnapshot, changed: jnp.ndarray,
                     affected: jnp.ndarray, rc: jnp.ndarray
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -66,6 +66,20 @@ class GraphSnapshot:
     def m_pad(self) -> int:
         return int(self.src.shape[0])
 
+    def in_edges_host(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Host copies of the real (src, dst) in-edge arrays (self-loops
+        included) — the input to the block-sparse pull-matrix builder."""
+        return (np.asarray(self.src)[:self.m].astype(np.int64),
+                np.asarray(self.dst)[:self.m].astype(np.int64))
+
+    def block_in_edges(self) -> jnp.ndarray:
+        """[n_blocks] i32: in-edge count per dst-block (sweep work metric)."""
+        return self.in_block_ptr[1:] - self.in_block_ptr[:-1]
+
+    def block_out_edges(self) -> jnp.ndarray:
+        """[n_blocks] i32: out-edge count per src-block (expansion metric)."""
+        return self.out_block_ptr[1:] - self.out_block_ptr[:-1]
+
     def tree_flatten(self):  # pragma: no cover - registered below
         children = (self.src, self.dst, self.in_block_ptr, self.osrc,
                     self.odst, self.out_block_ptr, self.out_deg,

@@ -1,17 +1,19 @@
-"""Dynamic-Frontier generalized to GNN vertex programs (beyond-paper).
+"""Incremental maintenance of dynamic-graph state (beyond-paper).
 
-DESIGN.md §Arch-applicability: the paper's DF technique is a *vertex-program*
-acceleration, not PageRank-specific.  Its two ingredients —
-  (1) initial marking of update sources' out-neighborhoods, and
-  (2) incremental expansion gated by a frontier tolerance τ_f —
-apply verbatim to GNN inference on dynamic graphs: after a batch of edge
-updates, only nodes whose embeddings can change need recomputation, and a
-node whose embedding moved less than τ_f cuts off its receptive-field cone.
+Two members:
 
-``incremental_gnn_update`` re-embeds only the affected node set per layer,
-expanding the frontier between layers exactly like DF expands between
-PageRank iterations.  Exercised by examples/incremental_gnn.py and
-tests/test_incremental.py; this is the "DF applies to the GNN family" path.
+* :class:`IncrementalPullMatrix` — keeps the fused Pallas engine's
+  block-sparse pull matrix in sync with a dynamic edge stream by patching
+  only the tiles each batch touches (``ops.apply_delta``), instead of the
+  O(m) host rebuild per snapshot.  This is the state carrier that makes the
+  ``engine="pallas"`` path incremental end-to-end: frontier-proportional
+  *compute* per sweep and batch-proportional *build* per snapshot.
+
+* ``incremental_gnn_update`` — DF generalized to GNN vertex programs
+  (DESIGN.md §Arch-applicability): after a batch of edge updates only nodes
+  whose embeddings can change are re-embedded, with τ_f cutting off the
+  receptive-field cone.  Gated on the model zoo being importable (the GNN
+  stack needs :mod:`repro.dist`, which some builds omit).
 """
 from __future__ import annotations
 
@@ -21,7 +23,78 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models.gnn.common import GNNConfig, GraphBatch
+from repro.core.delta import signed_edge_delta
+from repro.core.graph import GraphSnapshot, HostGraph
+from repro.kernels.block_spmv import ops
+
+try:  # the GNN family needs the dist substrate; PageRank paths do not
+    from repro.models.gnn.common import GNNConfig, GraphBatch
+    HAVE_GNN = True
+except ImportError:  # pragma: no cover - depends on build flavor
+    GNNConfig = GraphBatch = None
+    HAVE_GNN = False
+
+
+class IncrementalPullMatrix:
+    """Block-sparse pull matrix maintained incrementally across snapshots.
+
+    Usage along a dynamic stream::
+
+        inc = IncrementalPullMatrix.from_snapshot(g0, dtype=np.float64)
+        ...
+        hg1 = hg0.apply_batch(dels, ins)
+        g1 = hg1.snapshot(...)
+        mat1 = inc.advance(hg0, g1, dels, ins)   # patches touched tiles only
+        res = df_pagerank(g0, g1, batch, r, engine="pallas",
+                          pallas_mat=mat1)
+
+    ``advance`` filters the batch against the previous host graph the same
+    way :meth:`HostGraph.apply_batch` does (drop deletions of absent edges,
+    insertions of present ones, self-loops), so tile values track edge
+    multiplicity exactly; self-loops never change (every vertex always has
+    one).  Structure grows monotonically — emptied tiles stay as zero
+    blocks — so a delete+reinsert round-trip reproduces the original matrix
+    values exactly (the paper's §5.2.3 stability property, at build level).
+    """
+
+    def __init__(self, mat: ops.BlockSparse):
+        self.mat = mat
+
+    @classmethod
+    def from_snapshot(cls, g: GraphSnapshot, dtype=np.float64
+                      ) -> "IncrementalPullMatrix":
+        from repro.core.pallas_engine import build_pull_matrix
+        return cls(build_pull_matrix(g, dtype=dtype))
+
+    def advance(self, hg_prev: HostGraph, g_new: GraphSnapshot,
+                deletions: np.ndarray, insertions: np.ndarray
+                ) -> ops.BlockSparse:
+        if g_new.n_pad > self.mat.n_rows:
+            raise ValueError("snapshot outgrew the matrix block grid; "
+                             "rebuild with from_snapshot")
+        n = np.int64(hg_prev.n)
+
+        def uniq(e):
+            e = np.asarray(e, np.int64).reshape(-1, 2)
+            e = e[e[:, 0] != e[:, 1]]
+            k = np.unique(e[:, 0] * n + e[:, 1])
+            return np.stack([k // n, k % n], 1), k
+
+        # mirror HostGraph.apply_batch exactly: dedupe, drop self-loops,
+        # deletions of absent edges are no-ops, insertions land in
+        # (prev − dels) — so an edge deleted and re-inserted in one batch
+        # nets to zero
+        dels, del_keys = uniq(deletions)
+        ins, ins_keys = uniq(insertions)
+        dels = dels[hg_prev.has_edges(dels)] if len(dels) else dels
+        if len(ins):
+            present = hg_prev.has_edges(ins)
+            redeleted = np.isin(ins_keys, del_keys) if len(del_keys) else \
+                np.zeros(len(ins), bool)
+            ins = ins[~present | (present & redeleted)]
+        rows, cols, vals = signed_edge_delta(dels, ins)
+        self.mat = ops.apply_delta(self.mat, rows, cols, vals)
+        return self.mat
 
 
 def edge_update_sources(n_pad: int, deletions: np.ndarray,

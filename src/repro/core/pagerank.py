@@ -1,11 +1,17 @@
 """PageRank variants — Static / ND / DT / DF × BB / LF (paper Algorithms 1-8).
 
-Two engines back every variant:
+Three engines back every variant (full matrix: docs/ENGINES.md):
   * ``dense``   — full-SpMV Jacobi / block-sequential Gauss–Seidel over all
                   blocks; simple, used for oracles and the distributed path;
-  * ``blocked`` — the frontier-compacted sweep engine (:mod:`.blocked`) with
-                  edge-proportional work and fault simulation; this is the
-                  production engine and what benchmarks measure.
+  * ``blocked`` — the frontier-compacted sweep engine (:mod:`.blocked`):
+                  Python driver, per-sweep host syncs, in-sweep Gauss–Seidel;
+                  the reference production engine and fault-model oracle;
+  * ``pallas``  — the fused frontier engine (:mod:`.pallas_engine`): the
+                  whole sweep loop inside one ``lax.while_loop`` with the
+                  MXU block-sparse SpMV pull and OR-semiring expansion —
+                  zero host syncs until convergence.  Default for
+                  blocked-class workloads on TPU; opt-in (interpret mode)
+                  on CPU containers.
 
 Variant = (initial ranks, initial affected set, expand?) × (mode):
     Static : R0 = 1/n,      affected = all,              expand = off
@@ -16,6 +22,7 @@ Variant = (initial ranks, initial affected set, expand?) × (mode):
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Optional, Tuple
 
@@ -26,6 +33,7 @@ import jax.numpy as jnp
 from repro.core import blocked as blk
 from repro.core import faults as flt
 from repro.core import frontier as fr
+from repro.core import pallas_engine as pe
 from repro.core.graph import (GraphSnapshot, initial_ranks, pull_all,
                               pad_ranks)
 
@@ -48,6 +56,20 @@ class PagerankResult:
 def default_dtype() -> jnp.dtype:
     return jnp.dtype(jnp.float64 if jax.config.jax_enable_x64
                      else jnp.float32)
+
+
+def default_engine() -> str:
+    """Engine used when a variant is called with ``engine=None``.
+
+    On TPU the fused Pallas engine is the production default for the
+    blocked-class workloads; on CPU containers the kernels would run in
+    interpret mode (validation-grade, not fast), so the blocked engine
+    stays the default.  Override with ``REPRO_ENGINE=dense|blocked|pallas``.
+    """
+    env = os.environ.get("REPRO_ENGINE")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "blocked"
 
 
 # ---------------------------------------------------------------------------
@@ -90,9 +112,15 @@ def dense_jacobi(g: GraphSnapshot, R0, affected0, *, expand: bool,
 # ---------------------------------------------------------------------------
 
 def _run(g: GraphSnapshot, R0, affected0, *, mode: str, expand: bool,
-         engine: str, alpha: float, tau: float, tau_f: Optional[float],
-         max_iterations: int, faults: Optional[flt.FaultPlan], tile: int,
-         active_policy: str = "affected") -> PagerankResult:
+         engine: Optional[str], alpha: float, tau: float,
+         tau_f: Optional[float], max_iterations: int,
+         faults: Optional[flt.FaultPlan], tile: int,
+         active_policy: str = "affected",
+         pallas_mat=None) -> PagerankResult:
+    engine = engine or default_engine()
+    if pallas_mat is not None and engine != "pallas":
+        raise ValueError("pallas_mat is only consumed by engine='pallas' "
+                         f"(resolved engine: {engine!r})")
     t0 = time.perf_counter()
     if engine == "dense":
         if mode == "bb":
@@ -116,6 +144,12 @@ def _run(g: GraphSnapshot, R0, affected0, *, mode: str, expand: bool,
             tau_f=tau_f, max_iterations=max_iterations, tile=tile,
             faults=faults, active_policy=active_policy)
         R = jax.block_until_ready(R)
+    elif engine == "pallas":
+        R, stats = pe.run_pallas(
+            g, R0, affected0, mode=mode, expand=expand, alpha=alpha, tau=tau,
+            tau_f=tau_f, max_iterations=max_iterations, faults=faults,
+            active_policy=active_policy, mat=pallas_mat)
+        R = jax.block_until_ready(R)
     else:
         raise ValueError(engine)
     return PagerankResult(ranks=R, stats=stats,
@@ -129,7 +163,7 @@ def _all_affected(g: GraphSnapshot) -> jnp.ndarray:
 # -- Static -----------------------------------------------------------------
 
 def static_pagerank(g: GraphSnapshot, *, mode: str = "bb",
-                    engine: str = "blocked", dtype=None, **kw
+                    engine: Optional[str] = None, dtype=None, **kw
                     ) -> PagerankResult:
     dtype = dtype or default_dtype()
     return _run(g, initial_ranks(g, dtype), _all_affected(g), mode=mode,
@@ -139,7 +173,7 @@ def static_pagerank(g: GraphSnapshot, *, mode: str = "bb",
 # -- Naive-dynamic ------------------------------------------------------------
 
 def nd_pagerank(g: GraphSnapshot, r_prev: jnp.ndarray, *, mode: str = "bb",
-                engine: str = "blocked", **kw) -> PagerankResult:
+                engine: Optional[str] = None, **kw) -> PagerankResult:
     return _run(g, pad_ranks(g, r_prev), _all_affected(g), mode=mode,
                 expand=False, engine=engine, **_defaults(kw))
 
@@ -148,7 +182,7 @@ def nd_pagerank(g: GraphSnapshot, r_prev: jnp.ndarray, *, mode: str = "bb",
 
 def dt_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
                 r_prev: jnp.ndarray, *, mode: str = "bb",
-                engine: str = "blocked", **kw) -> PagerankResult:
+                engine: Optional[str] = None, **kw) -> PagerankResult:
     affected = fr.dt_affected(g_prev, g, batch)
     return _run(g, pad_ranks(g, r_prev), affected, mode=mode, expand=False,
                 engine=engine, **_defaults(kw))
@@ -158,7 +192,7 @@ def dt_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
 
 def df_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
                 r_prev: jnp.ndarray, *, mode: str = "lf",
-                engine: str = "blocked",
+                engine: Optional[str] = None,
                 helping_first_pass: Optional[jnp.ndarray] = None,
                 **kw) -> PagerankResult:
     """DF_BB (mode="bb") / DF_LF (mode="lf"), Algorithms 1 & 2."""
@@ -174,7 +208,7 @@ def df_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
 def _defaults(kw: dict) -> dict:
     out = dict(alpha=DEFAULT_ALPHA, tau=DEFAULT_TAU, tau_f=None,
                max_iterations=MAX_ITERATIONS, faults=None, tile=512,
-               active_policy="affected")
+               active_policy="affected", pallas_mat=None)
     out.update(kw)
     return out
 

@@ -1,0 +1,255 @@
+"""Fused Pallas frontier engine — the whole DF_LF sweep loop on-device.
+
+The blocked engine (:mod:`repro.core.blocked`) drives its sweeps from Python:
+every iteration pays a host↔device round-trip for the active count, the
+convergence flag and the per-sweep stats, and the pull itself is a
+``segment_sum`` gather with no MXU mapping.  This engine removes both costs:
+
+  1. the pull runs through the block-sparse Pallas SpMV
+     (:func:`repro.kernels.block_spmv.block_spmv.block_spmv_active_pallas`)
+     over *scalar-prefetched active row-block ids* — a sweep touches only
+     frontier blocks and each touched block is a dense B×B MXU tile
+     (sum semiring);
+  2. Dynamic Frontier expansion is the same kernel in the OR semiring,
+     restricted to the *candidate* row-blocks whose tiles intersect a
+     changed column-block (tile-presence adjacency, precomputed once);
+  3. the driver is a single ``lax.while_loop`` containing compaction
+     (``nonzero(size=n_blocks)``), the sweep, the τ/RC convergence test and
+     fault-mask application.  Zero host syncs until convergence; stats come
+     back as one device array.
+
+Within a sweep the update is block-Jacobi (all active blocks read the
+sweep-start ranks) — the lock-free *scheduling* semantics of DF_LF (per-block
+work pool, per-vertex RC termination, τ_f-gated expansion, crash/delay
+masks) are preserved — as in the blocked engine, a delayed or crashed
+thread's slots are picked up by the surviving threads (charged to simulated
+time), never deferred — while the blocked engine's in-sweep Gauss–Seidel
+ordering is traded for barrier-free device execution.  Both converge to the
+same fixed point within the paper's τ_f error bound; the blocked engine
+remains as the Gauss–Seidel oracle.
+
+On CPU containers the kernels run in interpret mode (``interpret=True``),
+which validates semantics but not speed; on TPU the same driver compiles to
+one resident loop.  f64 ranks are supported in interpret/CPU mode only (the
+MXU has no f64 path) — see docs/ENGINES.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import faults as flt
+from repro.core import frontier as fr
+from repro.core.blocked import SweepStats
+from repro.core.graph import GraphSnapshot
+from repro.kernels.block_spmv import ops
+
+
+def build_pull_matrix(g: GraphSnapshot, dtype=np.float64) -> ops.BlockSparse:
+    """Block-sparse pull matrix for a snapshot: A[v, u] = 1 iff edge u→v
+    (self-loops included), padded to the snapshot's block grid so row-blocks
+    coincide with the engine's vertex blocks."""
+    src, dst = g.in_edges_host()
+    return ops.build_block_sparse(dst, src, g.n_pad, g.n_pad,
+                                  block=g.block_size, dtype=dtype)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode on anything that is not a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("mode", "expand", "active_policy",
+                                   "max_iterations", "interpret"))
+def _driver(g: GraphSnapshot, mat: ops.BlockSparse, R0, affected0,
+            alpha, tau, tau_f, part_table, alive_table, delay_table,
+            crashed_any, *, mode: str, expand: bool, active_policy: str,
+            max_iterations: int, interpret: bool):
+    """The fused loop.  Returns (ranks [n_pad], stats vector [7])."""
+    dtype = R0.dtype
+    B = g.block_size
+    n_rb = g.n_blocks
+    n_pad = g.n_pad
+    jacobi = mode == "bb"
+    cdt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+    valid = g.vertex_valid
+    deg = jnp.maximum(g.out_deg, 1).astype(dtype)
+    inv_deg = jnp.where(valid, 1.0 / deg, 0).astype(dtype)
+    base = ((1.0 - alpha) / g.n).astype(dtype)
+    alpha_c = alpha.astype(dtype)
+    tau_c = tau.astype(dtype)
+    tau_f_c = tau_f.astype(dtype)
+    rb_in = g.block_in_edges()
+    rb_out = g.block_out_edges()
+    bmat = ops.block_adjacency(mat)              # [n_rb, n_rb] tile presence
+    n_threads = part_table.shape[1]
+
+    R = jnp.where(valid, R0[:n_pad], 0).astype(dtype)
+    affected = affected0[:n_pad] & valid
+    RC = affected
+
+    def cond(state):
+        (_, _, _, it, converged, dnf, _) = state
+        return ~converged & ~dnf & (it < max_iterations)
+
+    def body(state):
+        R, affected, RC, it, converged, dnf, ctr = state
+        act_flags = affected if active_policy == "affected" else RC
+        act_rb = fr.block_any(act_flags, n_rb, B)
+        n_act = act_rb.sum()
+        no_work = n_act == 0
+
+        if jacobi:
+            participate = jnp.ones((n_threads,), bool)
+            crash_now = crashed_any[it] & ~no_work
+            asleep = jnp.asarray(False)
+        else:
+            participate = part_table[it]
+            crash_now = jnp.asarray(False)
+            asleep = ~participate.any() & ~no_work
+        do = ~no_work & ~crash_now & ~asleep
+
+        # -- compacted frontier sweep: pull over active row-blocks only -----
+        ids = jnp.where(do, fr.compact_block_ids(act_rb, n_rb), -1)
+        pulled = ops.block_spmv_active(mat, R * inv_deg, ids,
+                                       semiring="sum", interpret=interpret)
+        r_new = base + alpha_c * pulled
+        act_v = jnp.repeat(act_rb, B)
+        upd = affected & act_v & valid & do
+        r_fin = jnp.where(upd, r_new, R)
+        dr = jnp.where(upd, jnp.abs(r_fin - R), 0)
+        maxdr = dr.max()
+        RC1 = jnp.where(upd, dr > tau_c, RC)
+
+        # -- DF expansion: OR semiring over candidate row-blocks ------------
+        if expand:
+            changed = upd & (dr > tau_f_c)
+            ch_cb = fr.block_any(changed, n_rb, B)
+            cand_rb = (bmat & ch_cb[None, :]).any(axis=1)
+            cids = jnp.where(do, fr.compact_block_ids(cand_rb, n_rb), -1)
+            hitf = ops.block_spmv_active(mat, changed.astype(dtype), cids,
+                                         semiring="or", interpret=interpret)
+            hit = (hitf > 0) & jnp.repeat(cand_rb, B) & valid & do
+            affected1 = affected | hit
+            RC1 = RC1 | hit
+            out_rb = jnp.where(ch_cb, rb_out, 0)
+        else:
+            affected1 = affected
+            ch_cb = jnp.zeros((n_rb,), bool)
+            out_rb = jnp.zeros((n_rb,), rb_out.dtype)
+
+        # -- work accounting + fault-time model (paper §5.1.6) --------------
+        in_rb = jnp.where(act_rb, rb_in, 0)
+        e_sweep = jnp.where(do, (in_rb + out_rb).astype(cdt).sum(), 0)
+        ids_c = jnp.maximum(ids, 0)
+        real_slot = ids >= 0
+        slot_edges = jnp.where(
+            real_slot,
+            rb_in[ids_c] + jnp.where(ch_cb[ids_c], rb_out[ids_c], 0),
+            0).astype(jnp.float32)
+        pid = jnp.nonzero(participate, size=n_threads, fill_value=0)[0]
+        w = participate.sum()
+        tid = pid[jnp.arange(n_rb) % jnp.maximum(w, 1)]
+        th_edges = jax.ops.segment_sum(slot_edges, tid,
+                                       num_segments=n_threads)
+        th_blocks = jax.ops.segment_sum(real_slot.astype(jnp.float32), tid,
+                                        num_segments=n_threads)
+        work_ms = (th_edges * flt.T_EDGE_NS
+                   + th_blocks * flt.T_BLOCK_NS) * 1e-6
+        delay_row = delay_table[it]
+        alive = alive_table[it]
+        if jacobi:
+            step_ms = jnp.max(work_ms + delay_row)
+        else:
+            step_ms = jnp.where(
+                asleep, jnp.max(jnp.where(alive, delay_row, 0)),
+                jnp.max(jnp.where(alive, work_ms, 0)))
+        step_ms = jnp.where(do | asleep, step_ms, 0.0)
+
+        # -- convergence ----------------------------------------------------
+        if jacobi:
+            conv_after = do & (maxdr <= tau_c)
+        else:
+            conv_after = do & ~(RC1 & valid).any()
+        converged1 = converged | no_work | conv_after
+        dnf1 = dnf | crash_now
+
+        sweeps, iters, blocks, edges, sim = ctr
+        ctr1 = (sweeps + jnp.where(do | asleep, 1, 0).astype(cdt),
+                iters + jnp.where(do, 1, 0).astype(cdt),
+                blocks + jnp.where(do, n_act, 0).astype(cdt),
+                edges + e_sweep,
+                sim + step_ms.astype(jnp.float32))
+        return (r_fin, affected1, RC1, it + 1, converged1, dnf1, ctr1)
+
+    zero = jnp.zeros((), cdt)
+    init = (R, affected, RC, jnp.int32(0), jnp.asarray(False),
+            jnp.asarray(False), (zero, zero, zero, zero,
+                                 jnp.zeros((), jnp.float32)))
+    R, _, _, _, converged, dnf, ctr = lax.while_loop(cond, body, init)
+    sweeps, iters, blocks, edges, sim = ctr
+    fdt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    stats = jnp.stack([sweeps.astype(fdt), iters.astype(fdt),
+                       blocks.astype(fdt), edges.astype(fdt),
+                       sim.astype(fdt), converged.astype(fdt),
+                       dnf.astype(fdt)])
+    return R, stats
+
+
+def run_pallas(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
+               *, mode: str = "lf", expand: bool = True,
+               alpha: float = 0.85, tau: float = 1e-10,
+               tau_f: Optional[float] = None, max_iterations: int = 500,
+               faults: Optional[flt.FaultPlan] = None,
+               active_policy: str = "affected",
+               mat: Optional[ops.BlockSparse] = None,
+               interpret: Optional[bool] = None,
+               ) -> Tuple[jnp.ndarray, SweepStats]:
+    """Fused-engine entry point; signature mirrors ``blocked.run_blocked``.
+
+    ``mat`` may be supplied (e.g. maintained incrementally across a dynamic
+    stream via :class:`repro.core.incremental.IncrementalPullMatrix`);
+    otherwise it is built from the snapshot.  The convergence loop itself
+    performs **zero** host synchronisations — the only transfer is the final
+    (ranks, stats) fetch after the ``while_loop`` exits.
+    """
+    if mode not in ("lf", "bb"):
+        raise ValueError(mode)
+    if active_policy not in ("affected", "rc"):
+        raise ValueError(active_policy)
+    if tau_f is None:
+        tau_f = tau / 1000.0 if expand else float("inf")
+    if not expand:
+        tau_f = float("inf")
+    if interpret is None:
+        interpret = default_interpret()
+    plan = faults or flt.NO_FAULTS
+    dtype = R0.dtype
+    if mat is None:
+        mat = build_pull_matrix(g, dtype=np.dtype(dtype))
+    elif mat.block != g.block_size or mat.n_rows != g.n_pad:
+        raise ValueError(
+            f"pull matrix grid (block={mat.block}, n_rows={mat.n_rows}) "
+            f"does not match snapshot (block={g.block_size}, "
+            f"n_pad={g.n_pad}); rebuild with build_pull_matrix")
+
+    part, alive, delay, crashed = plan.device_tables(max_iterations)
+    f = jnp.asarray
+    R, stats_vec = _driver(
+        g, mat, R0, affected0[:g.n_pad],
+        f(alpha), f(tau), f(tau_f),
+        f(part), f(alive), f(delay), f(crashed),
+        mode=mode, expand=expand, active_policy=active_policy,
+        max_iterations=max_iterations, interpret=interpret)
+    sv = np.asarray(jax.block_until_ready(stats_vec))   # the single sync
+    stats = SweepStats(
+        sweeps=int(sv[0]), iterations=int(sv[1]), blocks_processed=int(sv[2]),
+        edges_processed=int(sv[3]), sim_time_ms=float(sv[4]),
+        converged=bool(sv[5] > 0), dnf=bool(sv[6] > 0))
+    return R[:g.n_pad], stats

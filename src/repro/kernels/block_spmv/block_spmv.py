@@ -30,14 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(idx_ref, cols_ref, tiles_ref, x_ref, o_ref, *, semiring: str):
-    j = pl.program_id(1)
-    valid = cols_ref[pl.program_id(0), j] >= 0
-    tile = tiles_ref[0]                       # [B, B]
-    x = x_ref[...]                            # [B, 1]
-    part = jnp.dot(tile, x, preferred_element_type=jnp.float32)
-    part = jnp.where(valid, part, 0.0).astype(o_ref.dtype)
-
+def _accumulate(o_ref, part, j, *, semiring: str):
     @pl.when(j == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -49,6 +42,37 @@ def _kernel(idx_ref, cols_ref, tiles_ref, x_ref, o_ref, *, semiring: str):
         o_ref[...] = jnp.maximum(o_ref[...], jnp.minimum(part, 1.0))
     else:
         raise ValueError(semiring)
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    """MXU accumulation dtype: f32 for f32/bf16 inputs, f64 for f64 ranks
+    (f64 is the CPU/interpret validation path — TPU MXU has no f64)."""
+    return jnp.dtype(jnp.float64) if dtype == jnp.float64 else jnp.float32
+
+
+def _kernel(idx_ref, cols_ref, tiles_ref, x_ref, o_ref, *, semiring: str):
+    j = pl.program_id(1)
+    valid = cols_ref[pl.program_id(0), j] >= 0
+    tile = tiles_ref[0]                       # [B, B]
+    x = x_ref[...]                            # [B, 1]
+    part = jnp.dot(tile, x, preferred_element_type=_acc_dtype(x.dtype))
+    part = jnp.where(valid, part, 0.0).astype(o_ref.dtype)
+    _accumulate(o_ref, part, j, semiring=semiring)
+
+
+def _active_kernel(act_ref, idx_ref, cols_ref, tiles_ref, x_ref, o_ref, *,
+                   semiring: str):
+    """Same body as :func:`_kernel` but row-blocks come from the compacted
+    ``act_ref`` slot list (-1 = padded slot → contributes nothing)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    rb = act_ref[i]
+    valid = (rb >= 0) & (cols_ref[jnp.maximum(rb, 0), j] >= 0)
+    tile = tiles_ref[0]                       # [B, B]
+    x = x_ref[...]                            # [B, 1]
+    part = jnp.dot(tile, x, preferred_element_type=_acc_dtype(x.dtype))
+    part = jnp.where(valid, part, 0.0).astype(o_ref.dtype)
+    _accumulate(o_ref, part, j, semiring=semiring)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "max_tiles",
@@ -86,3 +110,56 @@ def block_spmv_pallas(tile_idx: jnp.ndarray,    # [n_rb * max_tiles] i32
     if semiring == "or":
         y = (y > 0).astype(x.dtype)
     return y
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_tiles",
+                                             "semiring", "interpret"))
+def block_spmv_active_pallas(active_ids: jnp.ndarray,  # [n_rb] i32, -1 pad
+                             tile_idx: jnp.ndarray,    # [n_rb * max_tiles] i32
+                             tile_cols: jnp.ndarray,   # [n_rb, max_tiles] i32
+                             tiles: jnp.ndarray,       # [n_tiles, B, B]
+                             x: jnp.ndarray,           # [n_cb * B]
+                             *, block: int, max_tiles: int,
+                             semiring: str = "sum",
+                             interpret: bool = False) -> jnp.ndarray:
+    """Frontier-compacted SpMV: only the row-blocks named in ``active_ids``
+    are computed.  ``active_ids`` is a compacted slot list (active block ids
+    first, then -1 padding) so the grid walks frontier blocks only; padded
+    slots alias a trash output block and tile 0 — after the first padded step
+    their block indices stop changing, so the pipeline re-fetches nothing and
+    `pl.when` skips the compute (frontier-proportional work on hardware).
+
+    Rows in *inactive* blocks are left undefined — callers must mask with the
+    active-block indicator before use (the fused engine does).
+    """
+    n_rb = tile_cols.shape[0]
+    x2 = x.reshape(-1, 1)
+
+    def tile_map(i, j, act, idx, cols):
+        rb = jnp.maximum(act[i], 0)
+        return (idx[rb * max_tiles + j], 0, 0)
+
+    def x_map(i, j, act, idx, cols):
+        rb = jnp.maximum(act[i], 0)
+        return (jnp.maximum(cols[rb, j], 0), 0)
+
+    def o_map(i, j, act, idx, cols):
+        # padded slot → trash block n_rb (output is padded by one block)
+        return (jnp.where(act[i] >= 0, act[i], n_rb), 0)
+
+    gspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(active_ids.shape[0], max_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tiles.shape[1], tiles.shape[2]), tile_map),
+            pl.BlockSpec((block, 1), x_map),
+        ],
+        out_specs=pl.BlockSpec((block, 1), o_map),
+    )
+    out = pl.pallas_call(
+        functools.partial(_active_kernel, semiring=semiring),
+        grid_spec=gspec,
+        out_shape=jax.ShapeDtypeStruct(((n_rb + 1) * block, 1), x.dtype),
+        interpret=interpret,
+    )(active_ids, tile_idx, tile_cols, tiles, x2)
+    return out[:n_rb * block, 0]

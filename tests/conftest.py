@@ -3,3 +3,8 @@ import jax
 # Paper uses f64 ranks (§5.1.2); enable x64 for validation-grade tolerances.
 # Model code is dtype-explicit everywhere, so this does not change models.
 jax.config.update("jax_enable_x64", True)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (perf-trajectory recording)")

@@ -1,0 +1,39 @@
+"""Tier-1 wiring for the per-engine smoke benchmark (non-failing step).
+
+Runs ``benchmarks.run.smoke`` and sanity-checks the written
+``BENCH_smoke.json``.  Infrastructure failures skip rather than fail — the
+point is to *record* the perf trajectory on every tier-1 run, not to gate
+on container wall-clock — but correctness claims inside a successful run
+(convergence, frontier-proportionality of the Pallas engine) do assert.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.slow
+def test_smoke_report():
+    from benchmarks.run import smoke, SMOKE_OUT
+    try:
+        report = smoke()
+    except Exception as e:          # non-failing step: record, don't gate
+        pytest.skip(f"smoke benchmark infrastructure failed: {e!r}")
+    assert os.path.exists(SMOKE_OUT)
+    with open(SMOKE_OUT) as f:
+        on_disk = json.load(f)
+    assert on_disk["engines"].keys() == report["engines"].keys()
+
+    m = report["graph"]["m"]
+    for engine, row in report["engines"].items():
+        assert row["converged"], engine
+        assert row["sweeps"] > 0 and row["edges_processed"] > 0, engine
+        assert row["linf_vs_reference"] < 1e-8, engine
+    # the acceptance signal: the fused Pallas engine does
+    # frontier-proportional work — a small batch costs ≪ one full-graph
+    # pass per sweep (dense, by construction, pays m per sweep: ratio 1.0)
+    assert report["engines"]["pallas"]["frontier_work_ratio"] < 0.5
+    assert report["engines"]["dense"]["frontier_work_ratio"] >= 0.99

@@ -1,0 +1,63 @@
+"""jit-cache discipline of the blocked engine: traced hyperparameters and
+the bounded slot-capacity ladder."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocked as blk
+from repro.core import pagerank as pr
+from repro.core.delta import random_batch
+from repro.core.frontier import batch_to_device
+from repro.graphs.generators import rmat
+
+
+def test_slot_capacity_ladder():
+    assert blk.slot_buckets(100) == (16, 64, 100)
+    assert blk.slot_buckets(8) == (8,)
+    assert blk.slot_buckets(16) == (16,)
+    assert blk.slot_capacity(1, 100) == 16
+    assert blk.slot_capacity(17, 100) == 64
+    assert blk.slot_capacity(65, 100) == 100     # clamped to n_blocks
+    assert blk.slot_capacity(100, 100) == 100
+    # capacity shrinks when the frontier shrinks
+    assert blk.slot_capacity(70, 100) > blk.slot_capacity(10, 100)
+    # every reachable capacity is on the ladder → cache entries bounded
+    for n_act in range(1, 101):
+        assert blk.slot_capacity(n_act, 100) in blk.slot_buckets(100)
+
+
+def test_tau_alpha_sweep_hits_one_cache_entry():
+    """α/τ/τ_f are traced operands on sweep(): a hyperparameter sweep must
+    not add jit cache entries beyond the first compilation."""
+    hg = rmat(9, avg_degree=6, seed=2)
+    g = hg.snapshot(block_size=64)
+    r0 = jnp.asarray(pr.numpy_reference(g, iterations=200))
+    dels, ins = random_batch(hg, 5e-3, seed=4)
+    hg1 = hg.apply_batch(dels, ins)
+    g1 = hg1.snapshot(block_size=64)
+    batch = batch_to_device(g1, dels, ins)
+
+    pr.df_pagerank(g, g1, batch, r0, mode="lf", engine="blocked", tau=1e-8)
+    before = blk.sweep._cache_size()
+    for tau in (1e-9, 1e-10, 3e-10):
+        for alpha in (0.85, 0.9):
+            res = pr.df_pagerank(g, g1, batch, r0, mode="lf",
+                                 engine="blocked", tau=tau, alpha=alpha)
+            assert res.converged
+    after = blk.sweep._cache_size()
+    # new entries may only come from new K buckets, never hyperparameters;
+    # the warm-up run already visited this run's K ladder
+    assert after == before
+
+
+def test_cache_entries_bounded_by_ladder():
+    """A full static run (frontier decays from all blocks to none) may
+    compile at most one sweep per ladder bucket."""
+    hg = rmat(10, avg_degree=4, seed=5)
+    g = hg.snapshot(block_size=64)            # 16 blocks → ladder (16,)
+    n_ladder = len(blk.slot_buckets(g.n_blocks))
+    before = blk.sweep._cache_size()
+    res = pr.static_pagerank(g, mode="lf", engine="blocked", tau=1e-10)
+    assert res.converged
+    added = blk.sweep._cache_size() - before
+    assert added <= n_ladder
