@@ -66,7 +66,7 @@ def main(out: str = "results/bench_kernels.csv", *, quick: bool = False):
         x = jnp.asarray(rng.random(n), jnp.float32)
         for B in blocks:
             mat = ops.build_block_sparse(e[:, 1], e[:, 0], n, n, block=B)
-            y = ops.block_spmv(mat, x, interpret=True)
+            y = ops.block_spmv(mat, x, interpret=True, backend="pallas")
             y_ref = ref.spmv_ref(e[:, 1], e[:, 0], n, x)
             err = float(jnp.max(jnp.abs(y - y_ref[:y.shape[0]])))
             nnz = len(e)
@@ -82,7 +82,8 @@ def main(out: str = "results/bench_kernels.csv", *, quick: bool = False):
             # OR-semiring frontier expansion
             flags = jnp.zeros((n,), jnp.float32).at[
                 jnp.asarray(rng.integers(0, n, 32))].set(1.0)
-            hit = ops.block_spmv(mat, flags, semiring="or", interpret=True)
+            hit = ops.block_spmv(mat, flags, semiring="or", interpret=True,
+                                 backend="pallas")
             hit_ref = (ref.spmv_ref(e[:, 1], e[:, 0], n, flags) > 0)
             err_or = float(jnp.max(jnp.abs(
                 hit - hit_ref[:hit.shape[0]].astype(jnp.float32))))
@@ -97,7 +98,8 @@ def main(out: str = "results/bench_kernels.csv", *, quick: bool = False):
             ids[:len(sub)] = sub
             xp = jnp.zeros((mat.n_cb * B,), x.dtype).at[:n].set(x)
             ya = np.asarray(ops.block_spmv_active(
-                mat, xp, jnp.asarray(ids), interpret=True))
+                mat, xp, jnp.asarray(ids), interpret=True,
+                backend="pallas"))
             ya = np.concatenate(
                 [ya, np.zeros(n_rb * B - len(ya))]).reshape(n_rb, B)
             yf = np.asarray(y_ref)
@@ -108,6 +110,16 @@ def main(out: str = "results/bench_kernels.csv", *, quick: bool = False):
                             f"pallas_active_B{B}", B, 0.0, 0, nnz, err_act,
                             extra=f"active_blocks={len(sub)}/{n_rb}"))
             assert err_act < 1e-4, f"active SpMV mismatch: {err_act}"
+            # XLA tile path (the CPU production backend): parity + warm time
+            y_xla = ops.block_spmv(mat, x, backend="xla")
+            err_xla = float(jnp.max(jnp.abs(y_xla - y_ref[:y_xla.shape[0]])))
+            assert err_xla < 1e-4, f"xla tile SpMV mismatch: {err_xla}"
+            t0 = time.perf_counter()
+            jax.block_until_ready(ops.block_spmv(mat, x, backend="xla"))
+            t_xla = time.perf_counter() - t0
+            rows.append(Row("kernel_spmv", gname, f"xla_B{B}", B, t_xla, 0,
+                            nnz, err_xla,
+                            extra="backend=xla;warm_wall_time"))
         _bench_build(e, n, blocks[-1], gname, rows)
     emit(rows, out)
     print("# pallas kernels match oracles across block sizes")

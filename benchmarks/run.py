@@ -17,14 +17,70 @@ import traceback
 SMOKE_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_smoke.json")
 
 
+STREAM_SIZES = (12, 14)         # log2 vertex counts for the stream scenario
+STREAM_BATCHES = 6              # delta batches per stream
+STREAM_BATCH_EDGES = 8          # fixed batch size (edges) across sizes
+
+
+def _smoke_stream() -> dict:
+    """Streaming scenario: K fixed-size delta batches through the
+    recompile-free runtime (core/stream.py) at two graph sizes.  Records
+    per-batch p50/p95 latency, the post-warmup retrace count of the fused
+    driver (must be 0) and the large/small latency ratio — per-batch cost
+    tracking batch size, not graph size, is the streaming acceptance
+    signal."""
+    import jax.numpy as jnp
+    from repro.core import pagerank as pr
+    from repro.core.delta import random_batch
+    from repro.core.stream import run_stream
+    from repro.graphs.generators import kmer_chains
+
+    out = {"batch_edges": STREAM_BATCH_EDGES, "n_batches": STREAM_BATCHES,
+           "sizes": {}}
+    p50s = []
+    for lg in STREAM_SIZES:
+        hg = kmer_chains(1 << lg, seed=4)
+        g = hg.snapshot(block_size=64)
+        r0 = jnp.asarray(pr.numpy_reference(g, iterations=300))
+
+        # materialize the batch list once (and its final graph, for the
+        # parity oracle) — a single generation pass
+        batch_list = []
+        cur = hg
+        for i in range(STREAM_BATCHES):
+            dels, ins = random_batch(cur, STREAM_BATCH_EDGES / cur.m,
+                                     seed=70 + i)
+            batch_list.append((dels, ins))
+            cur = cur.apply_batch(dels, ins)
+
+        rep = run_stream(hg, batch_list, block_size=64, r0=r0,
+                         active_policy="rc")
+        ref = pr.numpy_reference(cur.snapshot(block_size=64), iterations=300)
+        p50s.append(rep.p50_s)
+        out["sizes"][str(1 << lg)] = {
+            "n": g.n, "m": g.m,
+            "p50_ms": round(rep.p50_s * 1e3, 3),
+            "p95_ms": round(rep.p95_s * 1e3, 3),
+            "retraces_post_warmup": rep.retraces_post_warmup,
+            "sweeps_last": rep.results[-1].stats.sweeps,
+            "linf_vs_reference": float(pr.linf(
+                rep.final_ranks[:g.n], jnp.asarray(ref[:g.n]))),
+        }
+    out["latency_ratio_large_over_small"] = round(p50s[-1] / p50s[0], 3)
+    return out
+
+
 def smoke(out: str = SMOKE_OUT) -> dict:
-    """Tiny per-engine perf snapshot: one DF_LF dynamic update per engine.
+    """Tiny per-engine perf snapshot: one DF_LF dynamic update per engine,
+    plus the streaming scenario (K delta batches, per-batch latency).
 
     Records sweeps, edges_processed, wall time and the frontier-work ratio
     edges_processed / (m · sweeps) — the Pallas engine's ratio ≪ 1 is the
-    "frontier-proportional work" acceptance signal.  Wired into tier-1 as a
-    non-failing step (tests/test_bench_smoke.py) so the perf trajectory is
-    recorded on every run.
+    "frontier-proportional work" acceptance signal; the stream section's
+    flat per-batch latency with 0 post-warmup retraces is the streaming
+    acceptance signal.  Wired into tier-1 as a non-failing step
+    (tests/test_bench_smoke.py) so the perf trajectory is recorded on
+    every run.
     """
     from benchmarks.common import updated_snapshots  # noqa: F401 (jax cfg)
     import jax.numpy as jnp
@@ -33,6 +89,7 @@ def smoke(out: str = SMOKE_OUT) -> dict:
     from repro.core.delta import random_batch
     from repro.core.frontier import batch_to_device
     from repro.graphs.generators import kmer_chains
+    from repro.kernels.block_spmv import ops
 
     # k-mer chains: the paper's locality-friendly class — a tiny batch's
     # perturbation stays inside the touched chains, so frontier work is
@@ -53,7 +110,9 @@ def smoke(out: str = SMOKE_OUT) -> dict:
     # the frontier engines run the paper's DF_LF with the per-chunk
     # converged-flag policy ("rc", §4.3).  The pallas pull matrix is built
     # once outside the timed calls (in production it is maintained
-    # incrementally), so the warm second call is true steady state.
+    # incrementally), so the warm second call is true steady state.  The
+    # pallas engine runs its platform tile backend (ops.default_backend():
+    # Pallas kernels on TPU, the XLA tile path on CPU containers).
     pmat = pe.build_pull_matrix(g1)
     for engine, mode in (("dense", "bb"), ("blocked", "lf"),
                          ("pallas", "lf")):
@@ -76,6 +135,11 @@ def smoke(out: str = SMOKE_OUT) -> dict:
             "linf_vs_reference": float(pr.linf(res.ranks[:g1.n],
                                                ref1[:g1.n])),
         }
+        if engine == "pallas":
+            report["engines"][engine]["backend"] = ops.default_backend()
+
+    report["stream"] = _smoke_stream()
+
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))

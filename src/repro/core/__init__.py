@@ -5,7 +5,8 @@ from repro.core.pagerank import (df_pagerank, dt_pagerank, nd_pagerank,
                                  numpy_reference, linf, PagerankResult,
                                  default_engine)
 from repro.core.pallas_engine import run_pallas, build_pull_matrix
-from repro.core.incremental import IncrementalPullMatrix
+from repro.core.incremental import IncrementalPullMatrix, MatrixAux
+from repro.core.stream import StreamRunner, StreamReport, run_stream
 from repro.core.faults import FaultPlan, NO_FAULTS
 
 __all__ = [
@@ -13,5 +14,6 @@ __all__ = [
     "nd_pagerank", "static_pagerank", "reference_pagerank",
     "numpy_reference", "linf", "PagerankResult", "FaultPlan", "NO_FAULTS",
     "default_engine", "run_pallas", "build_pull_matrix",
-    "IncrementalPullMatrix",
+    "IncrementalPullMatrix", "MatrixAux", "StreamRunner", "StreamReport",
+    "run_stream",
 ]

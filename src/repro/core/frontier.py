@@ -15,18 +15,25 @@ import jax.numpy as jnp
 from repro.core.graph import GraphSnapshot, out_neighbor_or
 
 
-def batch_to_device(g: GraphSnapshot, deletions: np.ndarray,
-                    insertions: np.ndarray, *, bucket: int = 1024
-                    ) -> jnp.ndarray:
+def pack_batch(n_pad: int, deletions: np.ndarray, insertions: np.ndarray,
+               *, bucket: int = 1024) -> jnp.ndarray:
     """Pack a batch update into a padded [b_pad, 2] i32 device array.
-    Padded rows use the phantom vertex ``n_pad`` as source."""
+    Padded rows use the phantom vertex ``n_pad`` as source.  Snapshot-free
+    variant for the streaming runtime (only the pad size is needed)."""
     b = np.concatenate([np.asarray(deletions, np.int64).reshape(-1, 2),
                         np.asarray(insertions, np.int64).reshape(-1, 2)], 0)
     b_pad = max(bucket, ((len(b) + bucket - 1) // bucket) * bucket)
-    out = np.full((b_pad, 2), g.n_pad, dtype=np.int32)
+    out = np.full((b_pad, 2), n_pad, dtype=np.int32)
     if len(b):
         out[:len(b)] = b
     return jnp.asarray(out)
+
+
+def batch_to_device(g: GraphSnapshot, deletions: np.ndarray,
+                    insertions: np.ndarray, *, bucket: int = 1024
+                    ) -> jnp.ndarray:
+    """Snapshot-keyed convenience wrapper around :func:`pack_batch`."""
+    return pack_batch(g.n_pad, deletions, insertions, bucket=bucket)
 
 
 def update_sources_indicator(g: GraphSnapshot, batch: jnp.ndarray

@@ -17,6 +17,7 @@ Two members:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -35,6 +36,82 @@ except ImportError:  # pragma: no cover - depends on build flavor
     HAVE_GNN = False
 
 
+def effective_batch(hg_prev: HostGraph, deletions: np.ndarray,
+                    insertions: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Filter a raw (deletions, insertions) batch down to the edges that
+    actually change the graph, mirroring :meth:`HostGraph.apply_batch`
+    exactly: dedupe, drop self-loops, deletions of absent edges are no-ops,
+    insertions land in (prev − dels) — so an edge deleted and re-inserted
+    in one batch nets to zero."""
+    n = np.int64(hg_prev.n)
+
+    def uniq(e):
+        e = np.asarray(e, np.int64).reshape(-1, 2)
+        e = e[e[:, 0] != e[:, 1]]
+        k = np.unique(e[:, 0] * n + e[:, 1])
+        return np.stack([k // n, k % n], 1), k
+
+    dels, del_keys = uniq(deletions)
+    ins, ins_keys = uniq(insertions)
+    dels = dels[hg_prev.has_edges(dels)] if len(dels) else dels
+    if len(ins):
+        present = hg_prev.has_edges(ins)
+        redeleted = np.isin(ins_keys, del_keys) if len(del_keys) else \
+            np.zeros(len(ins), bool)
+        ins = ins[~present | (present & redeleted)]
+    return dels, ins
+
+
+@dataclasses.dataclass
+class MatrixAux:
+    """Per-block engine operands cached alongside the pull matrix so a
+    stream never recomputes them from scratch per ``run_pallas`` call:
+
+    * ``bmat``   — tile-presence adjacency [n_rb, n_cb] (candidate-block
+      selection for the OR-pass); monotone under deltas.
+    * ``rb_in``  — in-edge count per dst-block (sweep work metric), equal
+      to ``GraphSnapshot.block_in_edges()`` of the current graph.
+    * ``rb_out`` — out-edge count per src-block (expansion work metric).
+
+    All three update in O(batch) from the signed delta coordinates.
+    """
+    bmat: np.ndarray     # [n_rb, n_cb] bool
+    rb_in: np.ndarray    # [n_rb] i32
+    rb_out: np.ndarray   # [n_rb] i32
+
+    @classmethod
+    def from_parts(cls, mat: ops.BlockSparse, g: GraphSnapshot
+                   ) -> "MatrixAux":
+        return cls(bmat=np.asarray(ops.block_adjacency(mat)).copy(),
+                   rb_in=np.asarray(g.block_in_edges()).copy(),
+                   rb_out=np.asarray(g.block_out_edges()).copy())
+
+    def apply_delta(self, block: int, rows: np.ndarray, cols: np.ndarray,
+                    vals: np.ndarray) -> None:
+        """O(batch) update from signed pull-layout coordinates (rows = dst,
+        cols = src, vals = ±1): block degrees move by the signed counts;
+        tile presence ORs in every touched pair.
+
+        Fields are *rebound* to fresh arrays, never mutated in place: on
+        CPU, ``jnp.asarray`` may alias a numpy buffer zero-copy (the stream
+        runner's device mirrors, ``run_pallas(aux=...)`` operands), and an
+        in-place write here would race the transfer and corrupt them."""
+        if len(rows) == 0:
+            return
+        rb = np.asarray(rows, np.int64) // block
+        cb = np.asarray(cols, np.int64) // block
+        v = np.asarray(vals)
+        n_rb = self.rb_in.shape[0]
+        self.rb_in = self.rb_in + np.bincount(
+            rb, weights=v, minlength=n_rb).astype(self.rb_in.dtype)
+        self.rb_out = self.rb_out + np.bincount(
+            cb, weights=v, minlength=n_rb).astype(self.rb_out.dtype)
+        bmat = self.bmat.copy()
+        bmat[rb, cb] = True
+        self.bmat = bmat
+
+
 class IncrementalPullMatrix:
     """Block-sparse pull matrix maintained incrementally across snapshots.
 
@@ -46,54 +123,55 @@ class IncrementalPullMatrix:
         g1 = hg1.snapshot(...)
         mat1 = inc.advance(hg0, g1, dels, ins)   # patches touched tiles only
         res = df_pagerank(g0, g1, batch, r, engine="pallas",
-                          pallas_mat=mat1)
+                          pallas_mat=mat1, pallas_aux=inc.aux)
 
     ``advance`` filters the batch against the previous host graph the same
-    way :meth:`HostGraph.apply_batch` does (drop deletions of absent edges,
-    insertions of present ones, self-loops), so tile values track edge
-    multiplicity exactly; self-loops never change (every vertex always has
-    one).  Structure grows monotonically — emptied tiles stay as zero
-    blocks — so a delete+reinsert round-trip reproduces the original matrix
-    values exactly (the paper's §5.2.3 stability property, at build level).
+    way :meth:`HostGraph.apply_batch` does (:func:`effective_batch`), so
+    tile values track edge multiplicity exactly; self-loops never change
+    (every vertex always has one).  Structure grows monotonically — emptied
+    tiles stay as zero blocks — so a delete+reinsert round-trip reproduces
+    the original matrix values exactly (the paper's §5.2.3 stability
+    property, at build level).
+
+    The per-block engine operands (tile-presence adjacency + block-degree
+    vectors, :class:`MatrixAux`) are cached and patched per batch instead
+    of being recomputed per ``run_pallas`` call; ``padded=True`` (the
+    default) builds the matrix capacity-padded so delta batches keep
+    ``tiles.shape`` / ``max_tiles`` stable — the recompile-free streaming
+    layout (see :mod:`repro.core.stream`).
     """
 
-    def __init__(self, mat: ops.BlockSparse):
+    def __init__(self, mat: ops.BlockSparse, aux: Optional[MatrixAux] = None):
         self.mat = mat
+        self.aux = aux
 
     @classmethod
-    def from_snapshot(cls, g: GraphSnapshot, dtype=np.float64
-                      ) -> "IncrementalPullMatrix":
+    def from_snapshot(cls, g: GraphSnapshot, dtype=np.float64,
+                      padded: bool = True) -> "IncrementalPullMatrix":
         from repro.core.pallas_engine import build_pull_matrix
-        return cls(build_pull_matrix(g, dtype=dtype))
+        mat = build_pull_matrix(g, dtype=dtype, padded=padded)
+        return cls(mat, MatrixAux.from_parts(mat, g))
 
-    def advance(self, hg_prev: HostGraph, g_new: GraphSnapshot,
-                deletions: np.ndarray, insertions: np.ndarray
+    def advance(self, hg_prev: HostGraph, g_new: Optional[GraphSnapshot],
+                deletions: np.ndarray, insertions: np.ndarray, *,
+                effective: Optional[Tuple[np.ndarray, np.ndarray]] = None
                 ) -> ops.BlockSparse:
-        if g_new.n_pad > self.mat.n_rows:
+        """Patch the matrix (and cached aux) with one edge batch.  ``g_new``
+        is only consulted for the grid check and may be None on a stream
+        (the grid is fixed; out-of-range coordinates are rejected by
+        ``ops.apply_delta`` regardless).  ``effective`` may carry an
+        already-filtered (dels, ins) pair so callers that need the
+        filtered batch themselves don't run :func:`effective_batch`
+        twice."""
+        if g_new is not None and g_new.n_pad > self.mat.n_rows:
             raise ValueError("snapshot outgrew the matrix block grid; "
                              "rebuild with from_snapshot")
-        n = np.int64(hg_prev.n)
-
-        def uniq(e):
-            e = np.asarray(e, np.int64).reshape(-1, 2)
-            e = e[e[:, 0] != e[:, 1]]
-            k = np.unique(e[:, 0] * n + e[:, 1])
-            return np.stack([k // n, k % n], 1), k
-
-        # mirror HostGraph.apply_batch exactly: dedupe, drop self-loops,
-        # deletions of absent edges are no-ops, insertions land in
-        # (prev − dels) — so an edge deleted and re-inserted in one batch
-        # nets to zero
-        dels, del_keys = uniq(deletions)
-        ins, ins_keys = uniq(insertions)
-        dels = dels[hg_prev.has_edges(dels)] if len(dels) else dels
-        if len(ins):
-            present = hg_prev.has_edges(ins)
-            redeleted = np.isin(ins_keys, del_keys) if len(del_keys) else \
-                np.zeros(len(ins), bool)
-            ins = ins[~present | (present & redeleted)]
+        dels, ins = (effective if effective is not None
+                     else effective_batch(hg_prev, deletions, insertions))
         rows, cols, vals = signed_edge_delta(dels, ins)
         self.mat = ops.apply_delta(self.mat, rows, cols, vals)
+        if self.aux is not None:
+            self.aux.apply_delta(self.mat.block, rows, cols, vals)
         return self.mat
 
 

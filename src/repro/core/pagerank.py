@@ -116,11 +116,17 @@ def _run(g: GraphSnapshot, R0, affected0, *, mode: str, expand: bool,
          tau_f: Optional[float], max_iterations: int,
          faults: Optional[flt.FaultPlan], tile: int,
          active_policy: str = "affected",
-         pallas_mat=None) -> PagerankResult:
+         pallas_mat=None, pallas_aux=None,
+         pallas_backend: Optional[str] = None) -> PagerankResult:
     engine = engine or default_engine()
-    if pallas_mat is not None and engine != "pallas":
-        raise ValueError("pallas_mat is only consumed by engine='pallas' "
-                         f"(resolved engine: {engine!r})")
+    if engine != "pallas":
+        for name, val in (("pallas_mat", pallas_mat),
+                          ("pallas_aux", pallas_aux),
+                          ("pallas_backend", pallas_backend)):
+            if val is not None:
+                raise ValueError(
+                    f"{name} is only consumed by engine='pallas' "
+                    f"(resolved engine: {engine!r})")
     t0 = time.perf_counter()
     if engine == "dense":
         if mode == "bb":
@@ -148,7 +154,8 @@ def _run(g: GraphSnapshot, R0, affected0, *, mode: str, expand: bool,
         R, stats = pe.run_pallas(
             g, R0, affected0, mode=mode, expand=expand, alpha=alpha, tau=tau,
             tau_f=tau_f, max_iterations=max_iterations, faults=faults,
-            active_policy=active_policy, mat=pallas_mat)
+            active_policy=active_policy, mat=pallas_mat, aux=pallas_aux,
+            backend=pallas_backend)
         R = jax.block_until_ready(R)
     else:
         raise ValueError(engine)
@@ -208,7 +215,8 @@ def df_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
 def _defaults(kw: dict) -> dict:
     out = dict(alpha=DEFAULT_ALPHA, tau=DEFAULT_TAU, tau_f=None,
                max_iterations=MAX_ITERATIONS, faults=None, tile=512,
-               active_policy="affected", pallas_mat=None)
+               active_policy="affected", pallas_mat=None, pallas_aux=None,
+               pallas_backend=None)
     out.update(kw)
     return out
 

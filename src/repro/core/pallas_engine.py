@@ -5,18 +5,33 @@ every iteration pays a host↔device round-trip for the active count, the
 convergence flag and the per-sweep stats, and the pull itself is a
 ``segment_sum`` gather with no MXU mapping.  This engine removes both costs:
 
-  1. the pull runs through the block-sparse Pallas SpMV
-     (:func:`repro.kernels.block_spmv.block_spmv.block_spmv_active_pallas`)
-     over *scalar-prefetched active row-block ids* — a sweep touches only
-     frontier blocks and each touched block is a dense B×B MXU tile
-     (sum semiring);
+  1. the pull runs through the block-sparse tile SpMV
+     (:mod:`repro.kernels.block_spmv`) over *compacted active row-block
+     ids* — a sweep touches only frontier blocks and each touched block is
+     a dense B×B tile (sum semiring).  Two backends share the layout: the
+     Pallas kernels (MXU on TPU, scalar-prefetched ids) and an XLA
+     gather/einsum path that makes CPU containers fast too
+     (``ops.default_backend`` picks per platform);
   2. Dynamic Frontier expansion is the same kernel in the OR semiring,
      restricted to the *candidate* row-blocks whose tiles intersect a
-     changed column-block (tile-presence adjacency, precomputed once);
-  3. the driver is a single ``lax.while_loop`` containing compaction
-     (``nonzero(size=n_blocks)``), the sweep, the τ/RC convergence test and
-     fault-mask application.  Zero host syncs until convergence; stats come
-     back as one device array.
+     changed column-block (tile-presence adjacency, maintained
+     incrementally across a stream);
+  3. the driver is a single ``lax.while_loop`` containing compaction,
+     the sweep, the τ/RC convergence test and fault-mask application.
+     Zero host syncs until convergence; stats come back as one device
+     array.  Kernel launches are *frontier-proportional*: the active-count
+     selects a bucket from a static doubling ladder via ``lax.switch``
+     (``ops.block_spmv_active_bucketed``), so the grid scales with the
+     actual frontier instead of ``n_rb``.
+
+The driver deliberately does **not** consume a :class:`GraphSnapshot`: its
+operands are the per-vertex vectors (``valid``, ``out_deg``), the per-block
+degree vectors (``rb_in``/``rb_out``), the tile-presence adjacency ``bmat``
+and the capacity-padded pull matrix.  All of those keep stable shapes (and
+stable pytree aux) across a dynamic stream, so after one warmup trace a
+stream of delta batches re-enters the compiled driver with **zero
+retraces** — a snapshot's ``m`` changing per batch would otherwise retrace
+on nearly every step (see :mod:`repro.core.stream`).
 
 Within a sweep the update is block-Jacobi (all active blocks read the
 sweep-start ranks) — the lock-free *scheduling* semantics of DF_LF (per-block
@@ -28,10 +43,10 @@ ordering is traded for barrier-free device execution.  Both converge to the
 same fixed point within the paper's τ_f error bound; the blocked engine
 remains as the Gauss–Seidel oracle.
 
-On CPU containers the kernels run in interpret mode (``interpret=True``),
-which validates semantics but not speed; on TPU the same driver compiles to
-one resident loop.  f64 ranks are supported in interpret/CPU mode only (the
-MXU has no f64 path) — see docs/ENGINES.md.
+On CPU containers the Pallas kernels would run in interpret mode
+(``interpret=True``, semantics-validating only) — production CPU runs use
+``backend="xla"`` instead.  f64 ranks are supported off-TPU only (the MXU
+has no f64 path) — see docs/ENGINES.md.
 """
 from __future__ import annotations
 
@@ -50,13 +65,16 @@ from repro.core.graph import GraphSnapshot
 from repro.kernels.block_spmv import ops
 
 
-def build_pull_matrix(g: GraphSnapshot, dtype=np.float64) -> ops.BlockSparse:
+def build_pull_matrix(g: GraphSnapshot, dtype=np.float64,
+                      padded: bool = False) -> ops.BlockSparse:
     """Block-sparse pull matrix for a snapshot: A[v, u] = 1 iff edge u→v
     (self-loops included), padded to the snapshot's block grid so row-blocks
-    coincide with the engine's vertex blocks."""
+    coincide with the engine's vertex blocks.  ``padded=True`` preallocates
+    the tile pool / slot tables on the growth ladder (streaming layout)."""
     src, dst = g.in_edges_host()
     return ops.build_block_sparse(dst, src, g.n_pad, g.n_pad,
-                                  block=g.block_size, dtype=dtype)
+                                  block=g.block_size, dtype=dtype,
+                                  padded=padded)
 
 
 def default_interpret() -> bool:
@@ -64,30 +82,38 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("mode", "expand", "active_policy",
-                                   "max_iterations", "interpret"))
-def _driver(g: GraphSnapshot, mat: ops.BlockSparse, R0, affected0,
-            alpha, tau, tau_f, part_table, alive_table, delay_table,
-            crashed_any, *, mode: str, expand: bool, active_policy: str,
-            max_iterations: int, interpret: bool):
-    """The fused loop.  Returns (ranks [n_pad], stats vector [7])."""
-    dtype = R0.dtype
-    B = g.block_size
-    n_rb = g.n_blocks
-    n_pad = g.n_pad
-    jacobi = mode == "bb"
-    cdt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+@partial(jax.jit, static_argnames=("n", "block_size", "mode", "expand",
+                                   "active_policy", "max_iterations",
+                                   "interpret", "backend"))
+def _driver(mat: ops.BlockSparse, R0, affected0, valid, out_deg,
+            rb_in, rb_out, bmat, alpha, tau, tau_f,
+            part_table, alive_table, delay_table, crashed_any, *,
+            n: int, block_size: int, mode: str, expand: bool,
+            active_policy: str, max_iterations: int, interpret: bool,
+            backend: str):
+    """The fused loop.  Returns (ranks [n_pad], stats vector [7]).
 
-    valid = g.vertex_valid
-    deg = jnp.maximum(g.out_deg, 1).astype(dtype)
+    Every operand keeps a stable shape across a dynamic stream (the pull
+    matrix is capacity-padded; the degree/adjacency vectors are per-block,
+    the grid is fixed), so a stream re-enters one compiled trace.
+    """
+    dtype = R0.dtype
+    B = block_size
+    n_pad = valid.shape[0]
+    n_rb = n_pad // B
+    jacobi = mode == "bb"
+    # counters accumulate in float: f64 (x64 on) is integer-exact to 2^53;
+    # without x64 an int32 would wrap past 2^31 edges whereas f32 degrades
+    # gracefully (and the returned stats vector is f32 there anyway)
+    cdt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    ladder = ops.active_ladder(n_rb)
+
+    deg = jnp.maximum(out_deg, 1).astype(dtype)
     inv_deg = jnp.where(valid, 1.0 / deg, 0).astype(dtype)
-    base = ((1.0 - alpha) / g.n).astype(dtype)
+    base = ((1.0 - alpha) / n).astype(dtype)
     alpha_c = alpha.astype(dtype)
     tau_c = tau.astype(dtype)
     tau_f_c = tau_f.astype(dtype)
-    rb_in = g.block_in_edges()
-    rb_out = g.block_out_edges()
-    bmat = ops.block_adjacency(mat)              # [n_rb, n_rb] tile presence
     n_threads = part_table.shape[1]
 
     R = jnp.where(valid, R0[:n_pad], 0).astype(dtype)
@@ -115,10 +141,13 @@ def _driver(g: GraphSnapshot, mat: ops.BlockSparse, R0, affected0,
             asleep = ~participate.any() & ~no_work
         do = ~no_work & ~crash_now & ~asleep
 
-        # -- compacted frontier sweep: pull over active row-blocks only -----
+        # -- compacted frontier sweep: pull over active row-blocks only,
+        #    launched at the smallest ladder bucket ≥ |active| -------------
         ids = jnp.where(do, fr.compact_block_ids(act_rb, n_rb), -1)
-        pulled = ops.block_spmv_active(mat, R * inv_deg, ids,
-                                       semiring="sum", interpret=interpret)
+        n_eff = jnp.where(do, n_act, 0)
+        pulled = ops.block_spmv_active_bucketed(
+            mat, R * inv_deg, ids, n_eff, semiring="sum",
+            interpret=interpret, backend=backend, ladder=ladder)
         r_new = base + alpha_c * pulled
         act_v = jnp.repeat(act_rb, B)
         upd = affected & act_v & valid & do
@@ -132,9 +161,11 @@ def _driver(g: GraphSnapshot, mat: ops.BlockSparse, R0, affected0,
             changed = upd & (dr > tau_f_c)
             ch_cb = fr.block_any(changed, n_rb, B)
             cand_rb = (bmat & ch_cb[None, :]).any(axis=1)
+            n_cand = jnp.where(do, cand_rb.sum(), 0)
             cids = jnp.where(do, fr.compact_block_ids(cand_rb, n_rb), -1)
-            hitf = ops.block_spmv_active(mat, changed.astype(dtype), cids,
-                                         semiring="or", interpret=interpret)
+            hitf = ops.block_spmv_active_bucketed(
+                mat, changed.astype(dtype), cids, n_cand, semiring="or",
+                interpret=interpret, backend=backend, ladder=ladder)
             hit = (hitf > 0) & jnp.repeat(cand_rb, B) & valid & do
             affected1 = affected | hit
             RC1 = RC1 | hit
@@ -202,6 +233,13 @@ def _driver(g: GraphSnapshot, mat: ops.BlockSparse, R0, affected0,
     return R, stats
 
 
+def _stats_from_vec(sv: np.ndarray) -> SweepStats:
+    return SweepStats(
+        sweeps=int(sv[0]), iterations=int(sv[1]), blocks_processed=int(sv[2]),
+        edges_processed=int(sv[3]), sim_time_ms=float(sv[4]),
+        converged=bool(sv[5] > 0), dnf=bool(sv[6] > 0))
+
+
 def run_pallas(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
                *, mode: str = "lf", expand: bool = True,
                alpha: float = 0.85, tau: float = 1e-10,
@@ -209,15 +247,23 @@ def run_pallas(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
                faults: Optional[flt.FaultPlan] = None,
                active_policy: str = "affected",
                mat: Optional[ops.BlockSparse] = None,
+               aux=None,
                interpret: Optional[bool] = None,
+               backend: Optional[str] = None,
                ) -> Tuple[jnp.ndarray, SweepStats]:
     """Fused-engine entry point; signature mirrors ``blocked.run_blocked``.
 
     ``mat`` may be supplied (e.g. maintained incrementally across a dynamic
     stream via :class:`repro.core.incremental.IncrementalPullMatrix`);
-    otherwise it is built from the snapshot.  The convergence loop itself
-    performs **zero** host synchronisations — the only transfer is the final
-    (ranks, stats) fetch after the ``while_loop`` exits.
+    otherwise it is built from the snapshot.  ``aux`` may carry the cached
+    per-block vectors (any object with ``bmat`` / ``rb_in`` / ``rb_out``
+    attributes, e.g. ``IncrementalPullMatrix.aux``) so a stream avoids
+    recomputing the tile-presence adjacency and block-degree vectors per
+    call.  ``backend`` picks the tile-SpMV backend
+    (:func:`repro.kernels.block_spmv.ops.default_backend` when None).  The
+    convergence loop itself performs **zero** host synchronisations — the
+    only transfer is the final (ranks, stats) fetch after the
+    ``while_loop`` exits.
     """
     if mode not in ("lf", "bb"):
         raise ValueError(mode)
@@ -229,6 +275,7 @@ def run_pallas(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
         tau_f = float("inf")
     if interpret is None:
         interpret = default_interpret()
+    backend = ops._resolve_backend(backend)
     plan = faults or flt.NO_FAULTS
     dtype = R0.dtype
     if mat is None:
@@ -239,17 +286,22 @@ def run_pallas(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
             f"does not match snapshot (block={g.block_size}, "
             f"n_pad={g.n_pad}); rebuild with build_pull_matrix")
 
+    if aux is not None:
+        rb_in, rb_out = jnp.asarray(aux.rb_in), jnp.asarray(aux.rb_out)
+        bmat = jnp.asarray(aux.bmat)
+    else:
+        rb_in, rb_out = g.block_in_edges(), g.block_out_edges()
+        bmat = ops.block_adjacency(mat)
+
     part, alive, delay, crashed = plan.device_tables(max_iterations)
     f = jnp.asarray
     R, stats_vec = _driver(
-        g, mat, R0, affected0[:g.n_pad],
+        mat, R0[:g.n_pad], affected0[:g.n_pad], g.vertex_valid, g.out_deg,
+        rb_in, rb_out, bmat,
         f(alpha), f(tau), f(tau_f),
         f(part), f(alive), f(delay), f(crashed),
-        mode=mode, expand=expand, active_policy=active_policy,
-        max_iterations=max_iterations, interpret=interpret)
+        n=g.n, block_size=g.block_size, mode=mode, expand=expand,
+        active_policy=active_policy, max_iterations=max_iterations,
+        interpret=interpret, backend=backend)
     sv = np.asarray(jax.block_until_ready(stats_vec))   # the single sync
-    stats = SweepStats(
-        sweeps=int(sv[0]), iterations=int(sv[1]), blocks_processed=int(sv[2]),
-        edges_processed=int(sv[3]), sim_time_ms=float(sv[4]),
-        converged=bool(sv[5] > 0), dnf=bool(sv[6] > 0))
-    return R[:g.n_pad], stats
+    return R[:g.n_pad], _stats_from_vec(sv)

@@ -162,4 +162,9 @@ def block_spmv_active_pallas(active_ids: jnp.ndarray,  # [n_rb] i32, -1 pad
         out_shape=jax.ShapeDtypeStruct(((n_rb + 1) * block, 1), x.dtype),
         interpret=interpret,
     )(active_ids, tile_idx, tile_cols, tiles, x2)
-    return out[:n_rb * block, 0]
+    y = out[:n_rb * block, 0]
+    if semiring == "or":
+        # normalize to a 0/1 indicator like block_spmv_pallas (and the XLA
+        # tile path) — weighted matrices would otherwise leak tile values
+        y = (y > 0).astype(x.dtype)
+    return y

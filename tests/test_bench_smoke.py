@@ -37,3 +37,14 @@ def test_smoke_report():
     # pass per sweep (dense, by construction, pays m per sweep: ratio 1.0)
     assert report["engines"]["pallas"]["frontier_work_ratio"] < 0.5
     assert report["engines"]["dense"]["frontier_work_ratio"] >= 0.99
+    # wall-clock numbers (pallas-vs-blocked ratio, per-batch latency
+    # flatness) are *recorded*, not asserted — tier-1 must not gate on
+    # container timing (see module docstring); the deterministic streaming
+    # acceptance signals below do assert
+    stream = report["stream"]
+    sizes = list(stream["sizes"].values())
+    assert len(sizes) >= 2
+    for row in sizes:
+        assert row["retraces_post_warmup"] == 0, row
+        assert row["p50_ms"] > 0
+        assert row["linf_vs_reference"] < 1e-8, row

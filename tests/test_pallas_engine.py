@@ -50,6 +50,36 @@ def test_static_matches_numpy_reference(mode):
     assert pr.linf(res.ranks, ref) < BAND64
 
 
+@pytest.mark.slow
+def test_static_pallas_kernel_backend_full_convergence():
+    """Full convergence through the *Pallas kernels* in interpret mode —
+    validates the kernel semantics end-to-end (the un-marked engine tests
+    run the platform default backend, i.e. the fast XLA tile path on CPU
+    containers)."""
+    hg = rmat(9, avg_degree=6, seed=1)
+    g = hg.snapshot(block_size=64)
+    ref = pr.numpy_reference(g, iterations=300)
+    res = pr.static_pagerank(g, mode="lf", engine="pallas", tau=TAU64,
+                             pallas_backend="pallas")
+    assert res.converged
+    assert pr.linf(res.ranks, ref) < BAND64
+
+
+@pytest.mark.slow
+def test_df_dynamic_pallas_kernel_backend(dyn):
+    """DF_LF dynamic batch through the Pallas kernels in interpret mode
+    must agree bitwise-tightly with the XLA tile path."""
+    _, g0, g1, batch, r_prev, ref1, _, _ = dyn
+    res_k = pr.df_pagerank(g0, g1, batch, r_prev, mode="lf",
+                           engine="pallas", pallas_backend="pallas")
+    res_x = pr.df_pagerank(g0, g1, batch, r_prev, mode="lf",
+                           engine="pallas", pallas_backend="xla")
+    assert res_k.converged and res_x.converged
+    assert pr.linf(res_k.ranks[:g1.n], ref1[:g1.n]) < BAND64
+    assert res_k.stats.sweeps == res_x.stats.sweeps
+    assert pr.linf(res_k.ranks, res_x.ranks) < 1e-12
+
+
 @pytest.mark.parametrize("mode", ["bb", "lf"])
 def test_df_dynamic_matches_oracles_f64(dyn, mode):
     _, g0, g1, batch, r_prev, ref1, _, _ = dyn
@@ -97,8 +127,10 @@ def test_nd_and_rc_policy(dyn):
     assert pr.linf(res_rc.ranks[:g1.n], ref1[:g1.n]) < BAND64
 
 
-def test_expand_op_matches_dense_frontier():
-    """OR-semiring Pallas expansion == fr.expand_frontier's dense marking."""
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_expand_op_matches_dense_frontier(backend):
+    """OR-semiring tile expansion == fr.expand_frontier's dense marking,
+    on both SpMV backends."""
     rng = np.random.default_rng(10)
     n = 256
     hg = HostGraph(n, np.stack([rng.integers(0, n, 1500),
@@ -109,7 +141,8 @@ def test_expand_op_matches_dense_frontier():
     affected0 = jnp.zeros(g.n_pad, bool)
     rc0 = jnp.zeros(g.n_pad, bool)
     aff, rc = fr.expand_frontier(g, changed, affected0, rc0)
-    hit = ops.frontier_expand_op(mat, changed, interpret=True) > 0
+    hit = ops.frontier_expand_op(mat, changed, interpret=True,
+                                 backend=backend) > 0
     assert bool(jnp.all(hit == aff))
     assert bool(jnp.all(hit == rc))
     # active-ids variant restricted to candidate blocks agrees too
@@ -117,9 +150,15 @@ def test_expand_op_matches_dense_frontier():
     cand = (ops.block_adjacency(mat) & ch_cb[None, :]).any(axis=1)
     cids = fr.compact_block_ids(cand, g.n_blocks)
     y = ops.block_spmv_active(mat, changed.astype(jnp.float32), cids,
-                              semiring="or", interpret=True)
+                              semiring="or", interpret=True, backend=backend)
     hit2 = (y > 0) & jnp.repeat(cand, g.block_size) & g.vertex_valid
     assert bool(jnp.all(hit2 == aff))
+    # bucketed dispatch (the fused driver's launch path) agrees as well
+    yb = ops.block_spmv_active_bucketed(
+        mat, changed.astype(jnp.float32), cids, cand.sum(), semiring="or",
+        interpret=True, backend=backend)
+    hit3 = (yb > 0) & jnp.repeat(cand, g.block_size) & g.vertex_valid
+    assert bool(jnp.all(hit3 == aff))
 
 
 class TestFaults:
@@ -218,10 +257,14 @@ def test_driver_has_no_per_sweep_host_syncs():
     plan = pr.flt.NO_FAULTS
     part, alive, delay, crashed = plan.device_tables(50)
     f = jnp.asarray
-    jax.eval_shape(
-        lambda *a: pe._driver(*a, mode="lf", expand=True,
-                              active_policy="affected", max_iterations=50,
-                              interpret=True),
-        g, mat, pr.initial_ranks(g), g.vertex_valid,
-        f(0.85), f(1e-10), f(1e-13),
-        f(part), f(alive), f(delay), f(crashed))
+    for backend in ("pallas", "xla"):
+        jax.eval_shape(
+            lambda *a, b=backend: pe._driver(
+                *a, n=g.n, block_size=g.block_size, mode="lf", expand=True,
+                active_policy="affected", max_iterations=50,
+                interpret=True, backend=b),
+            mat, pr.initial_ranks(g), g.vertex_valid, g.vertex_valid,
+            g.out_deg, g.block_in_edges(), g.block_out_edges(),
+            ops.block_adjacency(mat),
+            f(0.85), f(1e-10), f(1e-13),
+            f(part), f(alive), f(delay), f(crashed))

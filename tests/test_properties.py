@@ -3,7 +3,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property suite requires hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import frontier as fr
 from repro.core import pagerank as pr
