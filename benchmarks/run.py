@@ -21,6 +21,50 @@ STREAM_SIZES = (12, 14)         # log2 vertex counts for the stream scenario
 STREAM_BATCHES = 6              # delta batches per stream
 STREAM_BATCH_EDGES = 8          # fixed batch size (edges) across sizes
 
+SERVICE_SESSIONS = 3            # concurrent sessions in the service scenario
+SERVICE_BATCHES = 4             # update batches submitted per session
+SERVICE_BATCH_EDGES = 8         # edges per batch
+
+
+def _smoke_service() -> dict:
+    """Multi-session serving scenario: N concurrent dynamic streams behind
+    one shared batch queue (``repro.api.PageRankService``, the serve-engine
+    slot design).  Records per-session p50/p95 update latency and retrace
+    counts plus the service-level request latency (queue wait included).
+    Sessions share the jit caches, so post-warmup retraces must stay 0
+    across **all** sessions — the multi-tenant streaming acceptance
+    signal."""
+    import jax.numpy as jnp
+    from repro.api import EngineConfig, PageRankService
+    from repro.core import pagerank as pr
+    from repro.core.delta import random_batch
+    from repro.graphs.generators import kmer_chains
+
+    graphs = [kmer_chains(1 << 12, seed=30 + s)
+              for s in range(SERVICE_SESSIONS)]
+    svc = PageRankService(graphs, config=EngineConfig(
+        engine="pallas", block_size=64, active_policy="rc"))
+    cur = list(graphs)
+    for j in range(SERVICE_BATCHES):
+        for i in range(len(cur)):
+            dels, ins = random_batch(cur[i], SERVICE_BATCH_EDGES / cur[i].m,
+                                     seed=500 + 10 * i + j)
+            svc.submit(i, dels, ins)
+            cur[i] = cur[i].apply_batch(dels, ins)
+    svc.run_until_drained()
+    out = svc.report()
+    out["batches_per_session"] = SERVICE_BATCHES
+    # parity: every session's served ranks vs the independent oracle on its
+    # final graph
+    errs = []
+    for i, hg in enumerate(cur):
+        ref = pr.numpy_reference(hg.snapshot(block_size=64), iterations=300)
+        n = svc.sessions[i].n
+        errs.append(float(pr.linf(svc.sessions[i].R[:n],
+                                  jnp.asarray(ref[:n]))))
+    out["linf_vs_reference_max"] = max(errs)
+    return out
+
 
 def _smoke_stream() -> dict:
     """Streaming scenario: K fixed-size delta batches through the
@@ -72,7 +116,9 @@ def _smoke_stream() -> dict:
 
 def smoke(out: str = SMOKE_OUT) -> dict:
     """Tiny per-engine perf snapshot: one DF_LF dynamic update per engine,
-    plus the streaming scenario (K delta batches, per-batch latency).
+    plus the streaming scenario (K delta batches, per-batch latency) and
+    the service scenario (N concurrent sessions behind one batch queue,
+    per-session p50/p95).
 
     Records sweeps, edges_processed, wall time and the frontier-work ratio
     edges_processed / (m · sweeps) — the Pallas engine's ratio ≪ 1 is the
@@ -139,6 +185,7 @@ def smoke(out: str = SMOKE_OUT) -> dict:
             report["engines"][engine]["backend"] = ops.default_backend()
 
     report["stream"] = _smoke_stream()
+    report["service"] = _smoke_service()
 
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

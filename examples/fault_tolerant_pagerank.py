@@ -1,14 +1,17 @@
-"""Fault-tolerance demonstration (paper §5.3–5.4 live).
+"""Fault-tolerance demonstration (paper §5.3–5.4 live), session API.
 
 Runs DF_LF under increasingly hostile fault schedules — random thread
 delays, crash-stop failures up to 56/64 threads, and a partial first pass
 through the initial marking phase (exercising the helping mechanism) —
 and shows that the barrier-based DF_BB deadlocks where DF_LF completes
-with unchanged accuracy.
+with unchanged accuracy.  Each scenario is one ``PageRankSession`` whose
+``EngineConfig`` carries the fault plan; the base config is shared and
+``replace()``d per scenario.
 
     PYTHONPATH=src python examples/fault_tolerant_pagerank.py
 """
 import sys
+import warnings
 
 sys.path.insert(0, "src")
 
@@ -19,6 +22,7 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np                                           # noqa: E402
 import jax.numpy as jnp                                      # noqa: E402
 
+from repro.api import EngineConfig, PageRankSession          # noqa: E402
 from repro.core import frontier as fr                        # noqa: E402
 from repro.core import pagerank as pr                        # noqa: E402
 from repro.core.delta import random_batch                    # noqa: E402
@@ -28,18 +32,25 @@ from repro.graphs.generators import rmat                     # noqa: E402
 
 def main() -> None:
     hg = rmat(13, 16, seed=0)
-    cap = 1024 * ((hg.m * 3 + 2 * hg.n) // 1024 + 3)
     dels, ins = random_batch(hg, 1e-4, seed=1)
-    hg_cur = hg.apply_batch(dels, ins)
-    g_prev = hg.snapshot(edge_capacity=cap)
-    g_cur = hg_cur.snapshot(edge_capacity=cap)
-    batch = fr.batch_to_device(g_cur, dels, ins)
+    base = EngineConfig(engine="pallas", mode="lf", block_size=64)
+
+    # reference state: pre-batch ranks + post-batch oracle
+    g_prev = hg.snapshot(block_size=64)
     r_prev = pr.reference_pagerank(g_prev, iterations=250)
+    hg_cur = hg.apply_batch(dels, ins)
+    g_cur = hg_cur.snapshot(block_size=64)
     ref = pr.reference_pagerank(g_cur, iterations=250)
     print(f"|V|={hg.n:,} |E|={hg.m:,}  batch={len(dels) + len(ins)}\n")
 
+    def run(cfg: EngineConfig):
+        """One scenario = one session over the pre-batch graph, one DF
+        update under the scenario's fault plan."""
+        sess = PageRankSession.from_graph(hg, config=cfg, r0=r_prev)
+        return sess.update(dels, ins)
+
     print("-- no faults ------------------------------------------------")
-    res = pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode="lf")
+    res = run(base)
     base_ms = res.stats.sim_time_ms
     print(f"DF_LF: converged={res.stats.converged} "
           f"sweeps={res.stats.sweeps} "
@@ -48,20 +59,17 @@ def main() -> None:
     print("\n-- random thread delays (100 ms, p=1e-2/thread/sweep) -----")
     plan = FaultPlan(n_threads=64, delay_prob=1e-2, delay_ms=100, seed=3)
     for mode in ("bb", "lf"):
-        res = pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode=mode,
-                             faults=plan)
+        res = run(base.replace(mode=mode, faults=plan))
         print(f"DF_{mode.upper()}: converged={res.stats.converged} "
               f"sim_time={res.stats.sim_time_ms:8.1f} ms "
               f"err={pr.linf(res.ranks, ref[:res.ranks.shape[0]]):.2e}")
 
     print("\n-- crash-stop: 56 of 64 threads crash ----------------------")
     plan = FaultPlan(n_threads=64, n_crashed=56, crash_window=4, seed=5)
-    res_bb = pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode="bb",
-                            faults=plan)
+    res_bb = run(base.replace(mode="bb", faults=plan))
     print(f"DF_BB: converged={res_bb.stats.converged} "
           f"DNF={res_bb.stats.dnf}   <- barrier deadlocks")
-    res_lf = pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode="lf",
-                            faults=plan)
+    res_lf = run(base.replace(faults=plan))
     slow = res_lf.stats.sim_time_ms / max(base_ms, 1e-9)
     print(f"DF_LF: converged={res_lf.stats.converged} "
           f"sim_time={res_lf.stats.sim_time_ms:8.1f} ms "
@@ -70,10 +78,15 @@ def main() -> None:
     assert res_lf.stats.converged and res_bb.stats.dnf
 
     print("\n-- helping: first marking pass covers only 30% of Δ --------")
+    # the helping mechanism lives in the marking phase (paper Alg. 2 lines
+    # 5-16) and keeps its dedicated entry point on the legacy surface
+    batch = fr.batch_to_device(g_cur, dels, ins)
     rng = np.random.default_rng(7)
     first_pass = jnp.asarray(rng.random(batch.shape[0]) < 0.3)
-    res = pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode="lf",
-                         helping_first_pass=first_pass)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode="lf",
+                             helping_first_pass=first_pass)
     print(f"DF_LF+helping: converged={res.stats.converged} "
           f"err={pr.linf(res.ranks, ref[:res.ranks.shape[0]]):.2e} "
           f"(survivors re-marked the abandoned updates)")

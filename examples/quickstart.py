@@ -1,10 +1,11 @@
-"""Quickstart — the paper's workload end-to-end.
+"""Quickstart — the paper's workload end-to-end, on the session API.
 
-Maintains PageRank over a stream of batch updates on a dynamic graph with
-the lock-free Dynamic Frontier engine (DF_LF), validating every update
-against the reference and comparing work/time with the Naive-dynamic
-baseline (ND_LF).  This is the end-to-end driver for the paper's kind of
-system (dynamic graph-algorithm serving).
+Opens one :class:`repro.api.PageRankSession` over a dynamic road-network
+graph and maintains PageRank through a stream of batch updates with the
+lock-free Dynamic Frontier engine (DF_LF): each ``update`` is the
+recompile-free O(batch) hot path.  Every update is validated against the
+reference solver and compared with the Naive-dynamic baseline (ND_LF) run
+on a throwaway ``fork()`` of the same session — the what-if mechanism.
 
     PYTHONPATH=src python examples/quickstart.py [--batches 5]
 """
@@ -18,12 +19,10 @@ import jax
 
 jax.config.update("jax_enable_x64", True)   # paper-grade f64 validation
 
-import numpy as np                                          # noqa: E402
-
-from repro.core import frontier as fr                       # noqa: E402
-from repro.core import pagerank as pr                       # noqa: E402
-from repro.core.delta import random_batch                   # noqa: E402
-from repro.graphs.generators import grid_road               # noqa: E402
+from repro.api import EngineConfig, PageRankSession              # noqa: E402
+from repro.core import pagerank as pr                            # noqa: E402
+from repro.core.delta import random_batch                        # noqa: E402
+from repro.graphs.generators import grid_road                    # noqa: E402
 
 
 def main() -> None:
@@ -35,43 +34,46 @@ def main() -> None:
 
     print("building dynamic graph (road-network class)...")
     hg = grid_road(args.side, seed=0)
-    cap = 1024 * ((hg.m * 3 + 2 * hg.n) // 1024 + 3)
     print(f"  |V|={hg.n:,}  |E|={hg.m:,}")
 
-    g = hg.snapshot(edge_capacity=cap)
-    ranks = pr.reference_pagerank(g, iterations=250)
+    # one handle owns graph state, ranks and the incremental engine
+    # operands; construction runs the initial solve
+    sess = PageRankSession.from_graph(
+        hg, config=EngineConfig(engine="pallas", tau=1e-10, block_size=64))
+    sess.warmup()     # trace the per-batch pipeline → steady-state timings
     print("initial PageRank computed; streaming batch updates:\n")
 
     tot_df, tot_nd = 0.0, 0.0
     for step in range(args.batches):
-        dels, ins = random_batch(hg, args.batch_frac, seed=100 + step)
-        hg_new = hg.apply_batch(dels, ins)
-        g_prev, g_cur = g, hg_new.snapshot(edge_capacity=cap)
-        batch = fr.batch_to_device(g_cur, dels, ins)
+        dels, ins = random_batch(sess.hg, args.batch_frac, seed=100 + step)
+        nd_sess = sess.fork()           # what-if branch: same state, no copy
 
-        t0 = time.perf_counter()
-        df = pr.df_pagerank(g_prev, g_cur, batch, ranks, mode="lf")
-        t_df = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        nd = pr.nd_pagerank(g_cur, ranks, mode="lf")
-        t_nd = time.perf_counter() - t0
+        df = sess.update(dels, ins)                       # DF_LF hot path
+        nd = nd_sess.update(dels, ins, variant="nd")      # ND_LF baseline
 
-        ref = pr.reference_pagerank(g_cur, iterations=250)
+        ref = pr.reference_pagerank(sess.hg.snapshot(block_size=64),
+                                    iterations=250)
         err = pr.linf(df.ranks, ref[:df.ranks.shape[0]])
         assert err < 1e-9, f"error {err} out of the paper's band"
-        if step > 0:                      # skip jit warm-up timings
-            tot_df += t_df
-            tot_nd += t_nd
+        if step > 0:    # step 0 pays the ND path's (expand=False) jit trace
+            tot_df += df.wall_time_s
+            tot_nd += nd.wall_time_s
         print(f"batch {step}: |Δ|={len(dels) + len(ins):4d}  "
-              f"DF_LF {t_df:6.3f}s ({df.stats.sweeps} sweeps, "
+              f"DF_LF {df.wall_time_s:6.3f}s ({df.stats.sweeps} sweeps, "
               f"{df.stats.edges_processed / 1e6:6.2f}M edges)   "
-              f"ND_LF {t_nd:6.3f}s ({nd.stats.sweeps} sweeps, "
+              f"ND_LF {nd.wall_time_s:6.3f}s ({nd.stats.sweeps} sweeps, "
               f"{nd.stats.edges_processed / 1e6:6.2f}M edges)   "
               f"L_inf={err:.2e}")
-        hg, g, ranks = hg_new, g_cur, df.ranks
 
+    rep = sess.report()
+    vals, ids = sess.top_k(5)           # device-side: 5 values transferred
+    print(f"\nsession report: {rep.n_updates} updates, "
+          f"p50 {rep.p50_s * 1e3:.1f} ms, p95 {rep.p95_s * 1e3:.1f} ms, "
+          f"retraces post-warmup: {rep.retraces_post_warmup}")
+    print("top-5 vertices: "
+          + ", ".join(f"{i}={v:.2e}" for i, v in zip(ids, vals)))
     if tot_df > 0:
-        print(f"\nDF_LF vs ND_LF wall-time speedup "
+        print(f"DF_LF vs ND_LF wall-time speedup "
               f"(excl. warm-up): {tot_nd / tot_df:.2f}x")
     print("all updates stayed within the paper's 1e-9 error band ✓")
 

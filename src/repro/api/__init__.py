@@ -1,0 +1,31 @@
+"""repro.api — the session-centric public surface of the reproduction.
+
+One stateful handle (:class:`PageRankSession`) owns graph state, the
+resolved engine and the incremental operands; :class:`EngineConfig` is the
+single validated home for every knob; :mod:`repro.api.registry` maps engine
+names to engine code; :class:`PageRankService` drives N sessions from one
+shared batch queue.  The legacy ``repro.core.pagerank`` variant functions
+are deprecated shims over this surface (see docs/API.md for the migration
+table).
+
+The public surface below is snapshot-tested (``tests/test_api_surface.py``)
+— changes to it are deliberate.
+"""
+from repro.api.config import EngineConfig
+from repro.api import registry
+from repro.api.registry import Engine, register
+from repro.api.session import (PageRankSession, SessionReport,
+                               StreamBatchResult)
+from repro.api.service import PageRankService, UpdateRequest
+
+__all__ = [
+    "EngineConfig",
+    "Engine",
+    "PageRankService",
+    "PageRankSession",
+    "SessionReport",
+    "StreamBatchResult",
+    "UpdateRequest",
+    "register",
+    "registry",
+]

@@ -1,0 +1,140 @@
+"""`EngineConfig` — one frozen, validated home for every engine knob.
+
+The legacy variant functions threaded nine loose kwargs through
+``_defaults()``, which silently forwarded typos into the engine stack
+(surfacing as an opaque ``TypeError`` deep inside ``_run``).  The config
+object replaces that: every knob is a declared field, validation happens at
+*construction* (including the ``REPRO_ENGINE`` / ``REPRO_TILE_BACKEND``
+environment overrides, resolved eagerly through the engine registry), and
+unknown keys are rejected with the valid-key list in the message.
+
+A config is immutable and reusable: build one, hand it to any number of
+:class:`repro.api.PageRankSession` instances (or ``replace()`` a variant of
+it for a what-if fork).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+MODES = ("lf", "bb")
+ACTIVE_POLICIES = ("affected", "rc")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Validated, immutable engine configuration.
+
+    Fields
+    ------
+    alpha:          damping factor, in (0, 1) (paper uses 0.85).
+    tau:            per-vertex convergence threshold, > 0.
+    tau_f:          frontier-expansion threshold; ``None`` resolves to
+                    ``tau / 1000`` where expansion is on (paper §5.1.2).
+    mode:           ``"lf"`` (lock-free) or ``"bb"`` (barrier-based).
+    engine:         engine name resolved through :mod:`repro.api.registry`
+                    (``None`` → platform default, ``REPRO_ENGINE`` override).
+    backend:        tile-SpMV backend for the pallas engine
+                    (``None`` → platform default, ``REPRO_TILE_BACKEND``
+                    override; rejected at run time by other engines).
+    tile:           edge-tile size of the blocked engine's pull loop.
+    block_size:     vertices per block — the session's block grid (sessions
+                    built ``from_snapshot`` take the snapshot's grid).
+    active_policy:  ``"affected"`` (paper Alg. 2 line 19) or ``"rc"``
+                    (per-chunk converged flag, §4.3).
+    max_iterations: sweep budget before declaring non-convergence.
+    faults:         optional :class:`repro.core.faults.FaultPlan`.
+    dtype:          rank dtype (``None`` → f64 when x64 is enabled else f32).
+    """
+
+    alpha: float = 0.85
+    tau: float = 1e-10
+    tau_f: Optional[float] = None
+    mode: str = "lf"
+    engine: Optional[str] = None
+    backend: Optional[str] = None
+    tile: int = 512
+    block_size: int = 64
+    active_policy: str = "affected"
+    max_iterations: int = 500
+    faults: Optional[Any] = None
+    dtype: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"mode={self.mode!r} invalid; expected one of {MODES}")
+        if self.active_policy not in ACTIVE_POLICIES:
+            raise ValueError(f"active_policy={self.active_policy!r} invalid; "
+                             f"expected one of {ACTIVE_POLICIES}")
+        if not (0.0 < float(self.alpha) < 1.0):
+            raise ValueError(f"alpha={self.alpha} outside (0, 1)")
+        if float(self.tau) <= 0:
+            raise ValueError(f"tau={self.tau} must be > 0")
+        if self.tau_f is not None and float(self.tau_f) <= 0:
+            raise ValueError(f"tau_f={self.tau_f} must be > 0 (or None)")
+        for name in ("tile", "block_size", "max_iterations"):
+            if int(getattr(self, name)) <= 0:
+                raise ValueError(f"{name}={getattr(self, name)} must be > 0")
+        if self.faults is not None and not hasattr(self.faults,
+                                                  "device_tables"):
+            raise ValueError(
+                "faults must be a FaultPlan (needs .device_tables())")
+        # resolve engine + tile backend now: this validates explicit values
+        # AND the REPRO_ENGINE / REPRO_TILE_BACKEND env overrides eagerly —
+        # a bad value fails at construction, not mid-run
+        from repro.api import registry
+        registry.resolve(self.engine)
+        registry.resolve_backend(self.backend)
+
+    # -- resolution helpers --------------------------------------------------
+    @property
+    def resolved_engine(self) -> str:
+        """Engine name after default/env resolution (registry-validated)."""
+        from repro.api import registry
+        return registry.resolve(self.engine).name
+
+    @property
+    def resolved_backend(self) -> str:
+        """Tile-SpMV backend after default/env resolution."""
+        from repro.api import registry
+        return registry.resolve_backend(self.backend)
+
+    def resolved_tau_f(self, *, expand: bool) -> float:
+        if not expand:
+            return float("inf")
+        return float(self.tau_f) if self.tau_f is not None \
+            else float(self.tau) / 1000.0
+
+    def resolved_dtype(self):
+        import jax
+        import jax.numpy as jnp
+        if self.dtype is not None:
+            return jnp.dtype(self.dtype)
+        return jnp.dtype(jnp.float64 if jax.config.jax_enable_x64
+                         else jnp.float32)
+
+    # -- strict construction -------------------------------------------------
+    @classmethod
+    def valid_keys(cls) -> tuple:
+        return tuple(f.name for f in dataclasses.fields(cls))
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "EngineConfig":
+        """Build a config, rejecting unknown keys with the valid-key list
+        (the fix for ``_defaults()`` silently forwarding typos)."""
+        unknown = sorted(set(kw) - set(cls.valid_keys()))
+        if unknown:
+            raise TypeError(
+                f"unknown EngineConfig key(s) {unknown}; "
+                f"valid keys: {sorted(cls.valid_keys())}")
+        return cls(**kw)
+
+    def replace(self, **kw) -> "EngineConfig":
+        """``dataclasses.replace`` with the same strict key check."""
+        unknown = sorted(set(kw) - set(self.valid_keys()))
+        if unknown:
+            raise TypeError(
+                f"unknown EngineConfig key(s) {unknown}; "
+                f"valid keys: {sorted(self.valid_keys())}")
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,137 @@
+"""Engine registry — the one place engine names resolve to engine code.
+
+Each core engine module owns its adapter (``as_engine()`` in
+:mod:`repro.core.pagerank` (dense), :mod:`repro.core.blocked` and
+:mod:`repro.core.pallas_engine`); the registry imports and registers them
+lazily on first resolve, so the core modules stay import-cycle-free.
+External code can plug in additional engines with :func:`register`.
+
+``resolve(None)`` applies :func:`default_engine` — pallas on TPU, blocked
+elsewhere — and validates a ``REPRO_ENGINE`` environment override *through
+the registry*, failing with the registered-name list instead of the bare
+``ValueError(engine)`` the legacy ``_run`` raised mid-call.
+:func:`resolve_backend` does the same for the pallas engine's tile-SpMV
+backend and ``REPRO_TILE_BACKEND``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """One engine = a name plus a snapshot-level solve.
+
+    ``run`` converges one (R0, affected0) problem on a snapshot and returns
+    ``(ranks [n_pad], SweepStats)`` with the ranks already materialized
+    (``block_until_ready``).  ``mat`` / ``aux`` / ``backend`` carry the
+    pallas engine's incremental operands (engines that do not consume them
+    must reject non-None values); ``interpret`` is the pallas engine's
+    kernel-interpreter flag (``None`` → platform default; other engines
+    ignore it).
+    """
+
+    name: str
+
+    def run(self, g, R0, affected0, *, mode: str, expand: bool,
+            alpha: float, tau: float, tau_f: Optional[float],
+            max_iterations: int, faults, tile: int, active_policy: str,
+            mat=None, aux=None, backend: Optional[str] = None,
+            interpret: Optional[bool] = None):
+        ...
+
+
+_REGISTRY: Dict[str, Engine] = {}
+_BUILTINS = ("repro.core.pagerank",        # dense
+             "repro.core.blocked",         # blocked
+             "repro.core.pallas_engine")   # pallas
+_builtins_loaded = False
+
+
+def register(engine: Engine, *, overwrite: bool = False) -> Engine:
+    """Register an engine adapter under ``engine.name``."""
+    name = getattr(engine, "name", None)
+    if not isinstance(name, str) or not name:
+        raise ValueError("engine must carry a non-empty string .name")
+    if not callable(getattr(engine, "run", None)):
+        raise ValueError(f"engine {name!r} must define a callable .run")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"engine {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[name] = engine
+    return engine
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    _builtins_loaded = True
+    import importlib
+    for modname in _BUILTINS:
+        mod = importlib.import_module(modname)
+        eng = mod.as_engine()
+        if eng.name not in _REGISTRY:
+            register(eng)
+
+
+def names() -> Tuple[str, ...]:
+    """Registered engine names (builtin engines are loaded first)."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def default_engine() -> str:
+    """Engine used when a caller passes ``engine=None``: pallas on TPU
+    (the fused production path), blocked elsewhere.  A ``REPRO_ENGINE``
+    override is validated against the registry *here* — eagerly, with the
+    valid-name list — rather than surfacing as a bare error mid-run."""
+    env = os.environ.get("REPRO_ENGINE")
+    if env:
+        _ensure_builtins()
+        if env not in _REGISTRY:
+            raise ValueError(
+                f"REPRO_ENGINE={env!r} is not a registered engine; "
+                f"registered engines: {sorted(_REGISTRY)}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "blocked"
+
+
+def resolve(name: Optional[str] = None) -> Engine:
+    """Resolve an engine name (``None`` → :func:`default_engine`) to its
+    registered adapter, with a clear error on unknown names."""
+    _ensure_builtins()
+    name = name or default_engine()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered engines: "
+            f"{sorted(_REGISTRY)} (register custom engines via "
+            "repro.api.registry.register)") from None
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve the pallas engine's tile-SpMV backend (``None`` → platform
+    default), validating an explicit value or a ``REPRO_TILE_BACKEND``
+    override eagerly with a clear message.  Delegates to the kernel layer
+    (:func:`repro.kernels.block_spmv.ops._resolve_backend`) so there is one
+    source of truth for the backend set."""
+    from repro.kernels.block_spmv import ops
+    return ops._resolve_backend(backend)
+
+
+def reject_tile_operands(engine_name: str, mat, aux,
+                         backend: Optional[str]) -> None:
+    """Shared guard for engines that do not consume the pallas engine's
+    incremental operands (prebuilt pull matrix / cached aux / tile
+    backend)."""
+    for name, val in (("pallas_mat", mat), ("pallas_aux", aux),
+                      ("pallas_backend", backend)):
+        if val is not None:
+            raise ValueError(
+                f"{name} is only consumed by engine='pallas' "
+                f"(resolved engine: {engine_name!r})")

@@ -1,0 +1,164 @@
+"""`PageRankService` — N concurrent sessions behind one shared batch queue.
+
+The serve-while-updating setting (Bahmani et al., arXiv:1006.2880): many
+independent dynamic graphs (tenants / shards / what-if branches), each with
+its own :class:`~repro.api.session.PageRankSession`, fed from one queue of
+edge-update batches while rank queries are served between ticks.
+
+The slot design mirrors :class:`repro.serve.engine.ServeEngine`: each
+session is a slot; a tick admits at most one queued batch per slot
+(continuous batching — a busy stream never starves the others), runs the
+admitted updates, and retires them with their wait/exec latency split.
+All sessions share the jit caches: after the first session warms the fused
+driver, the remaining sessions' updates at the same operand shapes re-enter
+the compiled trace with zero additional retraces (asserted in
+``tests/test_api_session.py``; recorded per session in the smoke bench's
+``service`` scenario).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.api.config import EngineConfig
+from repro.api.session import PageRankSession, StreamBatchResult
+from repro.core.graph import HostGraph
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    """One queued edge-update batch for one session slot."""
+    uid: int
+    stream: int                   # session/slot index
+    deletions: np.ndarray
+    insertions: np.ndarray
+    submitted_s: float = 0.0
+    started_s: float = 0.0
+    done_s: float = 0.0
+    result: Optional[StreamBatchResult] = None
+    done: bool = False
+
+    @property
+    def wait_s(self) -> float:
+        return self.started_s - self.submitted_s
+
+    @property
+    def latency_s(self) -> float:
+        """Queue wait + execution (submit → converged ranks visible)."""
+        return self.done_s - self.submitted_s
+
+
+class PageRankService:
+    """Drive N PageRank sessions from one shared update queue.
+
+    ``graphs`` may be host graphs (sessions are opened over them with the
+    shared ``config``) or pre-built sessions.  ``warmup=True`` traces each
+    session's per-batch pipeline up front so recorded latencies are
+    steady-state."""
+
+    def __init__(self, graphs: Sequence[Union[HostGraph, PageRankSession]],
+                 *, config: Optional[EngineConfig] = None,
+                 warmup: bool = True):
+        if not graphs:
+            raise ValueError("need at least one graph or session")
+        self.sessions: List[PageRankSession] = [
+            g if isinstance(g, PageRankSession)
+            else PageRankSession.from_graph(g, config=config)
+            for g in graphs]
+        if warmup:
+            for s in self.sessions:
+                s.warmup()
+        self.queue: List[UpdateRequest] = []
+        self.finished: List[UpdateRequest] = []
+        self._uid = 0
+
+    @property
+    def slots(self) -> int:
+        return len(self.sessions)
+
+    # -- queue management ----------------------------------------------------
+    def submit(self, stream: int, deletions, insertions) -> int:
+        """Enqueue one batch for session ``stream``; returns its uid."""
+        if not (0 <= stream < self.slots):
+            raise ValueError(f"stream {stream} out of range "
+                             f"(service has {self.slots} sessions)")
+        self._uid += 1
+        self.queue.append(UpdateRequest(
+            uid=self._uid, stream=stream,
+            deletions=np.asarray(deletions, np.int64).reshape(-1, 2),
+            insertions=np.asarray(insertions, np.int64).reshape(-1, 2),
+            submitted_s=time.perf_counter()))
+        return self._uid
+
+    # -- ticking -------------------------------------------------------------
+    def step(self) -> int:
+        """One service tick: admit at most one queued batch per slot (FIFO
+        within a stream), run the admitted updates, retire them.  Returns
+        the number of batches processed."""
+        admitted: Dict[int, UpdateRequest] = {}
+        for req in self.queue:
+            if req.stream not in admitted:
+                admitted[req.stream] = req
+        taken = set(r.uid for r in admitted.values())
+        self.queue = [r for r in self.queue if r.uid not in taken]
+        for req in admitted.values():
+            req.started_s = time.perf_counter()
+            req.result = self.sessions[req.stream].update(
+                req.deletions, req.insertions)
+            req.done_s = time.perf_counter()
+            req.done = True
+            self.finished.append(req)
+        return len(admitted)
+
+    def run_until_drained(self, max_ticks: int = 10_000
+                          ) -> List[UpdateRequest]:
+        """Tick until the queue is empty; returns the retired requests."""
+        for _ in range(max_ticks):
+            if not self.queue:
+                break
+            self.step()
+        return self.finished
+
+    # -- serving reads -------------------------------------------------------
+    def query(self, stream: int, vertices) -> np.ndarray:
+        return self.sessions[stream].query(vertices)
+
+    def top_k(self, stream: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        return self.sessions[stream].top_k(k)
+
+    # -- reporting -----------------------------------------------------------
+    def report(self) -> dict:
+        """Per-session p50/p95 update latency + retrace counts, plus the
+        service-level request latency (queue wait included).  Dict-shaped
+        so the smoke bench can serialize it directly."""
+        per_session = []
+        for i, s in enumerate(self.sessions):
+            rep = s.report()
+            per_session.append({
+                "stream": i,
+                "n": s.n,
+                "engine": rep.engine,
+                "n_updates": rep.n_updates,
+                "p50_ms": round(rep.p50_s * 1e3, 3),
+                "p95_ms": round(rep.p95_s * 1e3, 3),
+                "retraces_post_warmup": rep.retraces_post_warmup,
+                "total_sweeps": rep.total_sweeps,
+                "queries_served": rep.queries_served,
+            })
+        lat = [r.latency_s for r in self.finished]
+        waits = [r.wait_s for r in self.finished]
+        return {
+            "n_sessions": self.slots,
+            "requests_done": len(self.finished),
+            "requests_queued": len(self.queue),
+            "request_p50_ms": (round(float(np.percentile(lat, 50)) * 1e3, 3)
+                               if lat else 0.0),
+            "request_p95_ms": (round(float(np.percentile(lat, 95)) * 1e3, 3)
+                               if lat else 0.0),
+            "queue_wait_p50_ms": (round(float(np.percentile(waits, 50))
+                                        * 1e3, 3) if waits else 0.0),
+            "sessions": per_session,
+        }

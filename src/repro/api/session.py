@@ -1,0 +1,607 @@
+"""`PageRankSession` — one stateful handle for snapshots, streams, serving.
+
+The paper's DF_LF algorithm is stateful: ranks, the affected frontier and
+the incremental pull matrix persist across update batches.  The session
+owns all of that behind one object::
+
+    from repro.api import PageRankSession, EngineConfig
+
+    sess = PageRankSession.from_graph(hg, config=EngineConfig(tau=1e-10))
+    sess.update(dels, ins)          # DF_LF step: recompile-free, O(batch)
+    sess.query([3, 17, 42])         # device-resident partial read
+    sess.top_k(10)                  # device-side top-k, k values transferred
+    sess.recompute(variant="nd")    # re-solve the current graph
+    twin = sess.fork()              # what-if branch sharing the tile pool
+    sess.report()                   # latency / retrace / work statistics
+
+Two operating modes, picked at construction:
+
+* **stream mode** (``from_graph`` + the pallas engine): the PR-2 streaming
+  machinery lives here — the graph is snapshotted **once**, the
+  capacity-padded pull matrix and the per-vertex/per-block engine operands
+  are maintained as device-resident mirrors patched in O(batch), and
+  ``update`` re-enters the fused driver with zero post-warmup retraces
+  (asserted in ``tests/test_api_surface.py``).
+
+* **snapshot mode** (``from_snapshot``, or any non-pallas engine): the
+  session holds a :class:`~repro.core.graph.GraphSnapshot` and converges
+  through the engine adapter resolved from :mod:`repro.api.registry`.
+  The legacy ``static/nd/dt/df_pagerank`` functions are deprecated shims
+  over exactly this path (bit-for-bit parity,
+  ``tests/test_api_session.py``).
+
+The vertex set (and hence the block grid) is fixed for the lifetime of a
+session; growing past it requires a new session.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import registry
+from repro.api.config import EngineConfig
+from repro.core import faults as flt
+from repro.core import frontier as fr
+from repro.core import pallas_engine as pe
+from repro.core.blocked import SweepStats
+from repro.core.delta import signed_edge_delta
+from repro.core.graph import (GraphSnapshot, HostGraph, initial_ranks,
+                              pad_ranks)
+from repro.core.incremental import (IncrementalPullMatrix, MatrixAux,
+                                    effective_batch)
+from repro.core.pagerank import PagerankResult
+from repro.kernels.block_spmv import ops
+
+VARIANTS = ("static", "nd", "dt", "df")
+
+
+# ---------------------------------------------------------------------------
+# streaming machinery (moved here from repro.core.stream in PR 3; the
+# per-batch hot path is session state now — core.stream re-exports these
+# for compatibility)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block_size", "interpret", "backend"))
+def _seed_affected(mat_prev: ops.BlockSparse, mat_new: ops.BlockSparse,
+                   bmat, batch, valid, *, block_size: int, interpret: bool,
+                   backend: str) -> jnp.ndarray:
+    """Initial DF frontier for one batch (paper Alg. 1 lines 4-6): mark the
+    out-neighbors of every update source in G^{t-1} *and* G^t.
+
+    Both graphs are queried through their pull matrices (A[v,u] ≥ 1 iff
+    edge u→v, self-loops included — the same edge set a snapshot's
+    ``out_neighbor_or`` walks), so the stream needs no snapshot edge
+    arrays.  Launches are restricted to the candidate row-blocks that own a
+    tile in a source's column-block; ``mat_new``'s structure is a superset
+    of ``mat_prev``'s (growth is monotone), so one candidate set covers
+    both passes."""
+    n_pad = valid.shape[0]
+    n_rb = n_pad // block_size
+    ind = jnp.zeros((n_pad + 1,), bool)
+    ind = ind.at[jnp.minimum(batch[:, 0], n_pad)].set(True)
+    f = ind[:n_pad] & valid
+    sb = fr.block_any(f, n_rb, block_size)
+    cand = (bmat & sb[None, :]).any(axis=1)
+    n_cand = cand.sum()
+    cids = fr.compact_block_ids(cand, n_rb)
+    fx = f.astype(mat_new.tiles.dtype)
+    h_prev = ops.block_spmv_active_bucketed(
+        mat_prev, fx, cids, n_cand, semiring="or", interpret=interpret,
+        backend=backend)
+    h_new = ops.block_spmv_active_bucketed(
+        mat_new, fx, cids, n_cand, semiring="or", interpret=interpret,
+        backend=backend)
+    return (((h_prev > 0) | (h_new > 0))
+            & jnp.repeat(cand, block_size) & valid)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _apply_operand_delta(out_deg, rb_in, rb_out, bmat,
+                         rows, cols, vals, *, block: int):
+    """O(batch) device-side update of the engine-operand mirrors from the
+    signed pull-layout delta (rows = dst, cols = src, vals = ±1; padded
+    entries carry val 0 and are inert).  Mirrors
+    :meth:`repro.core.incremental.MatrixAux.apply_delta` plus the
+    out-degree update, so a stream never re-uploads the graph-sized
+    operand vectors — only the bucketed batch crosses to the device."""
+    n_pad = out_deg.shape[0]
+    n_rb = rb_in.shape[0]
+    real = vals != 0
+    v = jnp.where(real, vals, 0).astype(rb_in.dtype)
+    rb = jnp.minimum(rows // block, n_rb - 1)
+    cb = jnp.minimum(cols // block, n_rb - 1)
+    out_deg = out_deg.at[jnp.minimum(cols, n_pad - 1)].add(
+        v.astype(out_deg.dtype))
+    rb_in = rb_in.at[rb].add(v)
+    rb_out = rb_out.at[cb].add(v)
+    # OR-scatter: padded entries contribute max(existing, False) == existing
+    bmat = bmat.at[rb, cb].max(real)
+    return out_deg, rb_in, rb_out, bmat
+
+
+def _driver_cache_size() -> int:
+    try:
+        return int(pe._driver._cache_size())
+    except Exception:           # pragma: no cover - older jax fallback
+        return -1
+
+
+@dataclasses.dataclass
+class StreamBatchResult:
+    """Outcome of one update step."""
+    ranks: jnp.ndarray            # [n_pad] post-batch converged ranks
+    stats: SweepStats
+    wall_time_s: float            # full step: delta + seed + converge
+    batch_edges: int              # raw batch size (before no-op filtering)
+    driver_cache_size: int        # jit cache entries of the fused driver
+    driver_retraces: int = 0      # cache growth DURING this step (-1 n/a) —
+    #                               unlike the global cache size, immune to
+    #                               other sessions/forks compiling variants
+
+
+@dataclasses.dataclass
+class SessionReport:
+    """Aggregate latency / retrace / work statistics of a session."""
+    engine: str
+    backend: Optional[str]        # tile backend (pallas engine), else None
+    mode: str
+    n_updates: int
+    p50_s: float
+    p95_s: float
+    retraces_post_warmup: int     # driver cache growth after warmup (-1 n/a)
+    total_sweeps: int
+    total_edges_processed: int
+    queries_served: int
+    wall_times_s: List[float]
+
+
+class PageRankSession:
+    """Stateful PageRank handle owning graph state, the resolved engine and
+    the incremental operands.  Construct via :meth:`from_graph` (dynamic
+    streams + serving) or :meth:`from_snapshot` (one-shot solves over an
+    existing device snapshot)."""
+
+    def __init__(self, *, hg: Optional[HostGraph] = None,
+                 g: Optional[GraphSnapshot] = None,
+                 config: Optional[EngineConfig] = None,
+                 r0=None, interpret: Optional[bool] = None):
+        if config is None:
+            config = EngineConfig()
+        if not isinstance(config, EngineConfig):
+            raise TypeError(
+                f"config must be an EngineConfig, got {type(config).__name__}"
+                " — build one with repro.api.EngineConfig(...)")
+        if hg is None and g is None:
+            raise ValueError("need a HostGraph (from_graph) or a "
+                             "GraphSnapshot (from_snapshot)")
+        self.config = config
+        self.engine = registry.resolve(config.engine)
+        self.engine_name = self.engine.name
+        self.hg = hg
+        self._dtype = config.resolved_dtype()
+        self.interpret = (pe.default_interpret() if interpret is None
+                          else interpret)
+        self.backend = (config.resolved_backend
+                        if self.engine_name == "pallas" else config.backend)
+        self._stream = (self.engine_name == "pallas" and hg is not None
+                        and g is None)
+        self._history: List[StreamBatchResult] = []
+        self._warm_idx: Optional[int] = None
+        self._queries = 0
+        # replay state for recompute("dt"/"df"): the last applied batch,
+        # the pre-batch host graph / snapshot, and the pre-batch ranks
+        self._last_batch: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._hg_prev: Optional[HostGraph] = None
+        self._g_prev: Optional[GraphSnapshot] = None
+        self._r_prev = None
+
+        if self._stream:
+            self._init_stream(r0)
+        else:
+            self._init_snapshot(g, r0)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_graph(cls, hg: HostGraph, *,
+                   config: Optional[EngineConfig] = None, r0=None,
+                   interpret: Optional[bool] = None) -> "PageRankSession":
+        """Open a session over a host graph.  With the pallas engine this is
+        **stream mode**: the graph is snapshotted once and every engine
+        operand is maintained incrementally (O(batch) per update, zero
+        post-warmup driver retraces).  ``r0=None`` runs one initial solve
+        (``variant="static"`` semantics) so the session is born serving."""
+        return cls(hg=hg, config=config, r0=r0, interpret=interpret)
+
+    @classmethod
+    def from_snapshot(cls, g: GraphSnapshot, *,
+                      config: Optional[EngineConfig] = None, r0=None,
+                      hg: Optional[HostGraph] = None,
+                      interpret: Optional[bool] = None) -> "PageRankSession":
+        """Wrap an existing device snapshot (snapshot mode; the block grid
+        comes from the snapshot, not ``config.block_size``).  Pass ``hg``
+        as well to enable ``update``."""
+        return cls(hg=hg, g=g, config=config, r0=r0, interpret=interpret)
+
+    # -- init paths ----------------------------------------------------------
+    def _init_stream(self, r0) -> None:
+        cfg = self.config
+        # the ONLY snapshot stream mode ever builds; not retained — the
+        # scalars + operand mirrors below carry everything the hot path needs
+        g0 = self.hg.snapshot(block_size=cfg.block_size)
+        self.g = None
+        self.n, self.n_pad = g0.n, g0.n_pad
+        self.block_size, self.n_rb = g0.block_size, g0.n_blocks
+        dt = self._dtype
+        # traced hyperparameter operands, created once so dtypes (and the
+        # jit cache key) are identical across every step
+        self._alpha = jnp.asarray(cfg.alpha, dt)
+        self._tau = jnp.asarray(cfg.tau, dt)
+        self._tau_f = jnp.asarray(cfg.resolved_tau_f(expand=True), dt)
+        plan = cfg.faults or flt.NO_FAULTS
+        t = plan.device_tables(cfg.max_iterations)
+        self._fault_tables = tuple(jnp.asarray(a) for a in t)
+
+        self.inc = IncrementalPullMatrix.from_snapshot(
+            g0, dtype=np.dtype(dt), padded=True)
+        self.valid = g0.vertex_valid
+        # device-resident engine operands, patched in place per batch by
+        # _apply_operand_delta (the host-side numpy twins live in inc.aux
+        # for non-stream callers)
+        self._out_deg = jnp.asarray(g0.out_deg)
+        self._rb_in = jnp.asarray(self.inc.aux.rb_in)
+        self._rb_out = jnp.asarray(self.inc.aux.rb_out)
+        self._bmat = jnp.asarray(self.inc.aux.bmat)
+        if r0 is None:
+            r0, _ = pe.run_pallas(
+                g0, initial_ranks(g0, dt), g0.vertex_valid, mode=cfg.mode,
+                expand=False, alpha=cfg.alpha, tau=cfg.tau,
+                max_iterations=cfg.max_iterations,
+                active_policy=cfg.active_policy,
+                mat=self.inc.mat, aux=self.inc.aux,
+                interpret=self.interpret, backend=self.backend)
+        self.R = jnp.asarray(r0, dt)[:self.n_pad]
+
+    def _init_snapshot(self, g: Optional[GraphSnapshot], r0) -> None:
+        cfg = self.config
+        if g is None:
+            g = self.hg.snapshot(block_size=cfg.block_size)
+        self.g = g
+        self.n, self.n_pad = g.n, g.n_pad
+        self.block_size, self.n_rb = g.block_size, g.n_blocks
+        self.valid = g.vertex_valid
+        self.inc = None
+        if r0 is None:
+            res = self._converge(initial_ranks(g, self._dtype),
+                                 g.vertex_valid, expand=False)
+            self.R = res.ranks
+        else:
+            # keep the caller's dtype: engines key their compute dtype off
+            # R0.dtype (an f32 rank vector must stay f32)
+            self.R = pad_ranks(g, jnp.asarray(r0))
+
+    # -- the snapshot-level solve (registry-dispatched) ----------------------
+    def _converge(self, R0, affected0, *, expand: bool,
+                  mode: Optional[str] = None, mat=None, aux=None,
+                  g: Optional[GraphSnapshot] = None) -> PagerankResult:
+        """Converge one (R0, affected0) problem through the resolved engine
+        adapter and adopt the result as the session's ranks.  This is the
+        exact path the deprecated ``*_pagerank`` functions shim onto."""
+        cfg = self.config
+        g = g if g is not None else self.g
+        if g is None:
+            raise ValueError("snapshot-level solve needs a GraphSnapshot "
+                             "(stream-mode sessions use update/recompute)")
+        t0 = time.perf_counter()
+        R, stats = self.engine.run(
+            g, R0, affected0, mode=mode or cfg.mode, expand=expand,
+            alpha=cfg.alpha, tau=cfg.tau, tau_f=cfg.tau_f,
+            max_iterations=cfg.max_iterations, faults=cfg.faults,
+            tile=cfg.tile, active_policy=cfg.active_policy,
+            mat=mat, aux=aux, backend=cfg.backend,
+            interpret=self.interpret)
+        self.R = R
+        return PagerankResult(ranks=R, stats=stats,
+                              wall_time_s=time.perf_counter() - t0)
+
+    # -- the stream-mode fused solve ----------------------------------------
+    def _drive(self, R0, affected, *, expand: bool
+               ) -> Tuple[jnp.ndarray, SweepStats]:
+        """Run the fused driver over the device-resident operand mirrors
+        (stream mode; one host sync for the stats vector)."""
+        cfg = self.config
+        part, alive, delay, crashed = self._fault_tables
+        R, stats_vec = pe._driver(
+            self.inc.mat, R0, affected, self.valid, self._out_deg,
+            self._rb_in, self._rb_out, self._bmat,
+            self._alpha, self._tau, self._tau_f,
+            part, alive, delay, crashed,
+            n=self.n, block_size=self.block_size, mode=cfg.mode,
+            expand=expand, active_policy=cfg.active_policy,
+            max_iterations=cfg.max_iterations, interpret=self.interpret,
+            backend=self.backend)
+        sv = np.asarray(jax.block_until_ready(stats_vec))  # the single sync
+        return R, pe._stats_from_vec(sv)
+
+    # -- updates -------------------------------------------------------------
+    def update(self, deletions, insertions, *, variant: str = "df"
+               ) -> StreamBatchResult:
+        """Apply one edge batch and reconverge.
+
+        ``variant`` selects the dynamic marking: ``"df"`` (Dynamic Frontier,
+        the paper's algorithm — the default and the recompile-free hot
+        path), ``"dt"`` (reachability marking), ``"nd"`` (warm start, all
+        affected) or ``"static"`` (cold start, all affected).  In stream
+        mode everything except the ``dt`` marking stays snapshot-free."""
+        if variant not in VARIANTS:
+            raise ValueError(f"variant={variant!r} invalid; "
+                             f"expected one of {VARIANTS}")
+        if self.hg is None:
+            raise ValueError(
+                "this session wraps a bare snapshot (from_snapshot without "
+                "hg=); build it with PageRankSession.from_graph to stream "
+                "updates")
+        if self._stream:
+            res = self._update_stream(deletions, insertions, variant)
+        else:
+            res = self._update_snapshot(deletions, insertions, variant)
+        self._history.append(res)
+        return res
+
+    def _update_stream(self, deletions, insertions, variant: str = "df"
+                       ) -> StreamBatchResult:
+        """Stream-mode step: delta scatter → frontier seed → fused
+        convergence loop, all device-side after the O(batch) host
+        bookkeeping."""
+        t0 = time.perf_counter()
+        cache0 = _driver_cache_size()
+        g_prev_snap = (self.hg.snapshot(block_size=self.block_size)
+                       if variant == "dt" else None)
+        mat_prev = self.inc.mat
+        dels_eff, ins_eff = effective_batch(self.hg, deletions, insertions)
+        mat_new = self.inc.advance(self.hg, None, deletions, insertions,
+                                   effective=(dels_eff, ins_eff))
+        self._hg_prev, self._g_prev = self.hg, None
+        self._last_batch = (np.asarray(deletions, np.int64).reshape(-1, 2),
+                            np.asarray(insertions, np.int64).reshape(-1, 2))
+        self._r_prev = self.R
+        self.hg = self.hg.apply_batch(deletions, insertions)
+
+        # patch the device-resident operand mirrors in O(batch): only the
+        # bucketed signed delta crosses host→device, never the graph-sized
+        # vectors
+        rows, cols, vals = signed_edge_delta(dels_eff, ins_eff)
+        if len(rows):
+            b_pad = ops.capacity_bucket(len(rows), ops.DELTA_BATCH_BUCKET)
+            z = np.zeros(b_pad - len(rows), np.int32)
+            self._out_deg, self._rb_in, self._rb_out, self._bmat = \
+                _apply_operand_delta(
+                    self._out_deg, self._rb_in, self._rb_out, self._bmat,
+                    jnp.asarray(np.concatenate(
+                        [rows.astype(np.int32), z])),
+                    jnp.asarray(np.concatenate(
+                        [cols.astype(np.int32), z])),
+                    jnp.asarray(np.concatenate(
+                        [vals.astype(np.int32), z])),
+                    block=self.block_size)
+
+        batch_dev = fr.pack_batch(self.n_pad, deletions, insertions)
+        if variant == "df":
+            affected = _seed_affected(
+                mat_prev, mat_new, self._bmat, batch_dev, self.valid,
+                block_size=self.block_size, interpret=self.interpret,
+                backend=self.backend)
+            R0, expand = self.R, True
+        elif variant == "dt":
+            g_new_snap = self.hg.snapshot(block_size=self.block_size)
+            affected = fr.dt_affected(g_prev_snap, g_new_snap, batch_dev)
+            R0, expand = self.R, False
+        elif variant == "nd":
+            affected, R0, expand = self.valid, self.R, False
+        else:   # static
+            affected = self.valid
+            R0 = jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype)
+            expand = False
+
+        R, stats = self._drive(R0, affected, expand=expand)
+        self.R = R
+        raw = (np.asarray(deletions).reshape(-1, 2).shape[0]
+               + np.asarray(insertions).reshape(-1, 2).shape[0])
+        cache1 = _driver_cache_size()
+        return StreamBatchResult(
+            ranks=R, stats=stats,
+            wall_time_s=time.perf_counter() - t0, batch_edges=raw,
+            driver_cache_size=cache1,
+            driver_retraces=(cache1 - cache0
+                             if cache0 >= 0 and cache1 >= 0 else -1))
+
+    def _update_snapshot(self, deletions, insertions, variant: str
+                         ) -> StreamBatchResult:
+        """Snapshot-mode step: rebuild the snapshot (O(m) host work — the
+        legacy path, kept for the oracle engines) and converge through the
+        engine adapter."""
+        t0 = time.perf_counter()
+        cache0 = _driver_cache_size() if self.engine_name == "pallas" else -1
+        g_prev = self.g
+        hg_new = self.hg.apply_batch(deletions, insertions)
+        g_new = hg_new.snapshot(block_size=self.block_size)
+        batch_dev = fr.batch_to_device(g_new, deletions, insertions)
+        if variant == "df":
+            affected = fr.initial_affected(g_prev, g_new, batch_dev)
+            R0, expand = pad_ranks(g_new, self.R), True
+        elif variant == "dt":
+            affected = fr.dt_affected(g_prev, g_new, batch_dev)
+            R0, expand = pad_ranks(g_new, self.R), False
+        elif variant == "nd":
+            affected, expand = g_new.vertex_valid, False
+            R0 = pad_ranks(g_new, self.R)
+        else:   # static
+            affected, expand = g_new.vertex_valid, False
+            R0 = initial_ranks(g_new, self._dtype)
+        self._hg_prev, self._g_prev = self.hg, g_prev
+        self._last_batch = (np.asarray(deletions, np.int64).reshape(-1, 2),
+                            np.asarray(insertions, np.int64).reshape(-1, 2))
+        self._r_prev = self.R
+        self.hg, self.g = hg_new, g_new
+        self.n, self.n_pad = g_new.n, g_new.n_pad
+        self.valid = g_new.vertex_valid
+        res = self._converge(R0, affected, expand=expand, g=g_new)
+        raw = (np.asarray(deletions).reshape(-1, 2).shape[0]
+               + np.asarray(insertions).reshape(-1, 2).shape[0])
+        cache1 = _driver_cache_size() if self.engine_name == "pallas" else -1
+        return StreamBatchResult(
+            ranks=res.ranks, stats=res.stats,
+            wall_time_s=time.perf_counter() - t0, batch_edges=raw,
+            driver_cache_size=cache1,
+            driver_retraces=(cache1 - cache0
+                             if cache0 >= 0 and cache1 >= 0 else -1))
+
+    # -- recompute -----------------------------------------------------------
+    def recompute(self, variant: str = "static") -> PagerankResult:
+        """Re-solve the session's **current** graph.
+
+        ``"static"`` starts from uniform ranks, ``"nd"`` warm-starts from
+        the session's ranks (both with every vertex affected).  ``"dt"`` /
+        ``"df"`` *replay the last update batch* with that variant's marking
+        from the pre-batch ranks — the what-if tool for comparing variants
+        on the same step (requires at least one prior ``update``)."""
+        if variant not in VARIANTS:
+            raise ValueError(f"variant={variant!r} invalid; "
+                             f"expected one of {VARIANTS}")
+        if variant in ("static", "nd"):
+            R0 = (self.R if variant == "nd" else
+                  jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype))
+            if self._stream:
+                t0 = time.perf_counter()
+                R, stats = self._drive(R0, self.valid, expand=False)
+                self.R = R
+                return PagerankResult(ranks=R, stats=stats,
+                                      wall_time_s=time.perf_counter() - t0)
+            return self._converge(R0, self.valid, expand=False)
+
+        # dt / df: replay the last batch's marking from the pre-batch state
+        if self._last_batch is None:
+            raise ValueError(
+                f"recompute({variant!r}) replays the last update batch, but "
+                "no batch has been applied yet — call update() first or use "
+                "variant='static'/'nd'")
+        g_prev = (self._g_prev if self._g_prev is not None
+                  else self._hg_prev.snapshot(block_size=self.block_size))
+        g_cur = (self.g if self.g is not None
+                 else self.hg.snapshot(block_size=self.block_size))
+        batch_dev = fr.batch_to_device(g_cur, *self._last_batch)
+        if variant == "df":
+            affected = fr.initial_affected(g_prev, g_cur, batch_dev)
+        else:
+            affected = fr.dt_affected(g_prev, g_cur, batch_dev)
+        R0 = pad_ranks(g_cur, self._r_prev)
+        mat = aux = None
+        if self._stream:    # reuse the incrementally maintained operands
+            mat, aux = self.inc.mat, self.inc.aux
+        return self._converge(R0, affected, expand=(variant == "df"),
+                              g=g_cur, mat=mat, aux=aux)
+
+    # -- serving reads (device-resident, no full-rank host transfer) ---------
+    def query(self, vertices: Union[Sequence[int], np.ndarray]
+              ) -> np.ndarray:
+        """Ranks of the given vertices: one device gather, only ``len(
+        vertices)`` values cross to the host.  Out-of-range ids read 0."""
+        idx = jnp.asarray(np.asarray(vertices, np.int64).reshape(-1))
+        safe = jnp.clip(idx, 0, self.n_pad - 1)
+        vals = jnp.where((idx >= 0) & (idx < self.n_pad), self.R[safe], 0)
+        self._queries += int(idx.shape[0])
+        return np.asarray(vals)
+
+    def top_k(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(values, vertex ids) of the k highest-ranked vertices — computed
+        device-side, only 2k scalars transferred."""
+        k = int(min(k, self.n))
+        if k <= 0:
+            raise ValueError(f"k={k} must be >= 1")
+        masked = jnp.where(self.valid, self.R, -jnp.inf)
+        vals, idx = jax.lax.top_k(masked, k)
+        self._queries += k
+        return np.asarray(vals), np.asarray(idx)
+
+    @property
+    def ranks(self) -> np.ndarray:
+        """Full host copy of the rank vector (the expensive full read —
+        prefer :meth:`query` / :meth:`top_k` for serving)."""
+        return np.asarray(self.R)
+
+    # -- warmup / reporting --------------------------------------------------
+    def warmup(self) -> None:
+        """Trace the full per-batch pipeline at the stream's operand shapes
+        without perturbing graph or rank state: a zero-value delta against
+        vertex 0's (always present) self-loop tile warms the device scatter
+        at the base batch bucket, and an empty-batch step warms the frontier
+        seed and the fused driver.  Batches larger than the base bucket
+        still pay one compile per new bucket they reach.  Snapshot-mode
+        sessions are already warm from their initial solve."""
+        if self._stream:
+            z = np.zeros(1, np.int64)
+            self.inc.mat = ops.apply_delta(self.inc.mat, z, z, np.zeros(1))
+            empty = np.zeros((0, 2), np.int64)
+            # not recorded in history, and the dt/df replay state must not
+            # see the empty warmup batch as "the last update"
+            saved = (self._last_batch, self._hg_prev, self._g_prev,
+                     self._r_prev)
+            self._update_stream(empty, empty)
+            (self._last_batch, self._hg_prev, self._g_prev,
+             self._r_prev) = saved
+        self._warm_idx = len(self._history)
+
+    def report(self) -> SessionReport:
+        """Latency / retrace / work statistics over the update history.
+
+        ``retraces_post_warmup`` sums the driver-cache growth observed
+        *during this session's own updates* (after :meth:`warmup`, or after
+        the first — expected — trace when warmup was skipped), so sessions
+        sharing one process don't count each other's compiles."""
+        walls = [r.wall_time_s for r in self._history]
+        growth = [r.driver_retraces for r in self._history]
+        if (self.engine_name != "pallas" or not growth
+                or any(gr < 0 for gr in growth)):
+            retraces = -1
+        else:
+            start = self._warm_idx if self._warm_idx is not None else 1
+            retraces = sum(growth[start:])
+        return SessionReport(
+            engine=self.engine_name,
+            backend=self.backend if self.engine_name == "pallas" else None,
+            mode=self.config.mode,
+            n_updates=len(self._history),
+            p50_s=float(np.percentile(walls, 50)) if walls else 0.0,
+            p95_s=float(np.percentile(walls, 95)) if walls else 0.0,
+            retraces_post_warmup=retraces,
+            total_sweeps=sum(r.stats.sweeps for r in self._history),
+            total_edges_processed=sum(r.stats.edges_processed
+                                      for r in self._history),
+            queries_served=self._queries,
+            wall_times_s=walls)
+
+    # -- what-if branching ---------------------------------------------------
+    def fork(self) -> "PageRankSession":
+        """Cheap what-if branch: the new session shares every device array
+        with its parent — including the tile pool — until one side's
+        updates diverge them (jax arrays are immutable; deltas patch
+        functionally).  Host-side mutable state (the aux twins, history,
+        replay state) is copied so the branches are fully independent."""
+        new = object.__new__(PageRankSession)
+        new.__dict__.update(self.__dict__)
+        new._history = []
+        new._warm_idx = 0 if self._warm_idx is not None else None
+        new._queries = 0
+        if self.inc is not None:
+            aux = self.inc.aux
+            new.inc = IncrementalPullMatrix(
+                self.inc.mat,
+                MatrixAux(bmat=aux.bmat.copy(), rb_in=aux.rb_in.copy(),
+                          rb_out=aux.rb_out.copy())
+                if aux is not None else None)
+        return new

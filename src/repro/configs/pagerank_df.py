@@ -26,6 +26,24 @@ def smoke_cfg():
     return build_cfg(tau=1e-9)
 
 
+def engine_config(cfg=None, **overrides):
+    """Bridge an arch cfg dict (from :func:`build_cfg` / the sweep registry)
+    into a validated :class:`repro.api.EngineConfig` for session-level runs:
+    ``PageRankSession.from_graph(hg, config=engine_config(smoke_cfg()))``.
+    ``tau_f_ratio`` is resolved to an absolute ``tau_f``; unknown overrides
+    are rejected by ``EngineConfig.from_kwargs``."""
+    from repro.api import EngineConfig
+    cfg = dict(cfg or build_cfg())
+    cfg.update(overrides)
+    tau = cfg.pop("tau", 1e-10)
+    kw = dict(alpha=cfg.pop("alpha", 0.85), tau=tau,
+              tau_f=tau * cfg.pop("tau_f_ratio", 1e-3),
+              block_size=cfg.pop("block_size", 256))
+    cfg.pop("exchange", None)   # distributed-sweep knob, not a session knob
+    kw.update(cfg)              # the rest must be EngineConfig keys
+    return EngineConfig.from_kwargs(**kw)
+
+
 register(ArchSpec(
     arch_id="pagerank-df",
     family="pagerank",

@@ -307,3 +307,29 @@ def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
                 break
 
     return R[:n_pad], stats
+
+
+# ---------------------------------------------------------------------------
+# repro.api engine adapter (Engine protocol; discovered lazily by
+# repro.api.registry so this module never imports the api package)
+# ---------------------------------------------------------------------------
+
+class BlockedEngine:
+    """Registry adapter for the blocked frontier sweep engine."""
+
+    name = "blocked"
+
+    def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
+            max_iterations, faults, tile, active_policy,
+            mat=None, aux=None, backend=None, interpret=None):
+        from repro.api.registry import reject_tile_operands
+        reject_tile_operands(self.name, mat, aux, backend)
+        R, stats = run_blocked(
+            g, R0, affected0, mode=mode, expand=expand, alpha=alpha,
+            tau=tau, tau_f=tau_f, max_iterations=max_iterations, tile=tile,
+            faults=faults, active_policy=active_policy)
+        return jax.block_until_ready(R), stats
+
+
+def as_engine() -> BlockedEngine:
+    return BlockedEngine()

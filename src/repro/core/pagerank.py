@@ -22,8 +22,7 @@ Variant = (initial ranks, initial affected set, expand?) × (mode):
 from __future__ import annotations
 
 import dataclasses
-import os
-import time
+import warnings
 from typing import Optional, Tuple
 
 import numpy as np
@@ -31,9 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blocked as blk
-from repro.core import faults as flt
+from repro.core import faults as flt   # noqa: F401  (re-export: tests and
+#                                        callers reach FaultPlan as pr.flt)
 from repro.core import frontier as fr
-from repro.core import pallas_engine as pe
 from repro.core.graph import (GraphSnapshot, initial_ranks, pull_all,
                               pad_ranks)
 
@@ -64,12 +63,11 @@ def default_engine() -> str:
     On TPU the fused Pallas engine is the production default for the
     blocked-class workloads; on CPU containers the kernels would run in
     interpret mode (validation-grade, not fast), so the blocked engine
-    stays the default.  Override with ``REPRO_ENGINE=dense|blocked|pallas``.
-    """
-    env = os.environ.get("REPRO_ENGINE")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "blocked"
+    stays the default.  Override with ``REPRO_ENGINE=dense|blocked|pallas``
+    — the override is validated against :mod:`repro.api.registry` eagerly,
+    with the registered-name list in the error."""
+    from repro.api import registry
+    return registry.default_engine()
 
 
 # ---------------------------------------------------------------------------
@@ -108,59 +106,44 @@ def dense_jacobi(g: GraphSnapshot, R0, affected0, *, expand: bool,
 
 
 # ---------------------------------------------------------------------------
-# unified runner
+# legacy variant functions — deprecated shims over repro.api.PageRankSession
 # ---------------------------------------------------------------------------
+#
+# Each builds the session the call routes through (snapshot mode, the
+# registry-resolved engine) and converges through it — the session path IS
+# the implementation; parity is bit-for-bit (tests/test_api_session.py).
+# Unknown kwargs are rejected here with the valid-key list instead of being
+# silently forwarded into the engine stack (the old ``_defaults()`` hole).
 
-def _run(g: GraphSnapshot, R0, affected0, *, mode: str, expand: bool,
-         engine: Optional[str], alpha: float, tau: float,
-         tau_f: Optional[float], max_iterations: int,
-         faults: Optional[flt.FaultPlan], tile: int,
-         active_policy: str = "affected",
-         pallas_mat=None, pallas_aux=None,
-         pallas_backend: Optional[str] = None) -> PagerankResult:
-    engine = engine or default_engine()
-    if engine != "pallas":
-        for name, val in (("pallas_mat", pallas_mat),
-                          ("pallas_aux", pallas_aux),
-                          ("pallas_backend", pallas_backend)):
-            if val is not None:
-                raise ValueError(
-                    f"{name} is only consumed by engine='pallas' "
-                    f"(resolved engine: {engine!r})")
-    t0 = time.perf_counter()
-    if engine == "dense":
-        if mode == "bb":
-            R, iters, conv = dense_jacobi(
-                g, R0, affected0, expand=expand, alpha=alpha, tau=tau,
-                tau_f=tau_f, max_iterations=max_iterations)
-            R = jax.block_until_ready(R)
-            stats = blk.SweepStats(sweeps=iters, iterations=iters,
-                                   converged=conv,
-                                   edges_processed=iters * g.m)
-        else:
-            # dense LF == blocked engine with every block active; reuse it
-            R, stats = blk.run_blocked(
-                g, R0, affected0, mode="lf", expand=expand, alpha=alpha,
-                tau=tau, tau_f=tau_f, max_iterations=max_iterations,
-                tile=tile, faults=faults, active_policy=active_policy)
-            R = jax.block_until_ready(R)
-    elif engine == "blocked":
-        R, stats = blk.run_blocked(
-            g, R0, affected0, mode=mode, expand=expand, alpha=alpha, tau=tau,
-            tau_f=tau_f, max_iterations=max_iterations, tile=tile,
-            faults=faults, active_policy=active_policy)
-        R = jax.block_until_ready(R)
-    elif engine == "pallas":
-        R, stats = pe.run_pallas(
-            g, R0, affected0, mode=mode, expand=expand, alpha=alpha, tau=tau,
-            tau_f=tau_f, max_iterations=max_iterations, faults=faults,
-            active_policy=active_policy, mat=pallas_mat, aux=pallas_aux,
-            backend=pallas_backend)
-        R = jax.block_until_ready(R)
-    else:
-        raise ValueError(engine)
-    return PagerankResult(ranks=R, stats=stats,
-                          wall_time_s=time.perf_counter() - t0)
+_LEGACY_KEYS = ("alpha", "tau", "tau_f", "max_iterations", "faults", "tile",
+                "active_policy", "pallas_mat", "pallas_aux", "pallas_backend")
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.pagerank.{old}() is deprecated; use repro.api.{new} "
+        "instead (docs/API.md has the migration table)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _legacy_session(g: GraphSnapshot, R0, *, mode: str,
+                    engine: Optional[str], dtype=None, kw: dict):
+    """The session a legacy variant call routes through, plus the pallas
+    engine's per-call operands split out of the legacy kwargs."""
+    unknown = sorted(set(kw) - set(_LEGACY_KEYS))
+    if unknown:
+        raise TypeError(
+            f"unknown keyword argument(s) {unknown} for a PageRank "
+            f"variant; valid keys: {sorted(_LEGACY_KEYS)}")
+    kw = dict(kw)
+    mat = kw.pop("pallas_mat", None)
+    aux = kw.pop("pallas_aux", None)
+    backend = kw.pop("pallas_backend", None)
+    from repro.api import EngineConfig, PageRankSession
+    cfg = EngineConfig.from_kwargs(mode=mode, engine=engine,
+                                   backend=backend, dtype=dtype, **kw)
+    sess = PageRankSession.from_snapshot(g, config=cfg, r0=R0)
+    return sess, mat, aux
 
 
 def _all_affected(g: GraphSnapshot) -> jnp.ndarray:
@@ -172,17 +155,25 @@ def _all_affected(g: GraphSnapshot) -> jnp.ndarray:
 def static_pagerank(g: GraphSnapshot, *, mode: str = "bb",
                     engine: Optional[str] = None, dtype=None, **kw
                     ) -> PagerankResult:
-    dtype = dtype or default_dtype()
-    return _run(g, initial_ranks(g, dtype), _all_affected(g), mode=mode,
-                expand=False, engine=engine, **_defaults(kw))
+    """Deprecated: use ``PageRankSession.recompute(variant="static")``."""
+    _deprecated("static_pagerank", 'PageRankSession.recompute("static")')
+    R0 = initial_ranks(g, dtype or default_dtype())
+    sess, mat, aux = _legacy_session(g, R0, mode=mode, engine=engine,
+                                     dtype=dtype, kw=kw)
+    return sess._converge(R0, _all_affected(g), expand=False,
+                          mat=mat, aux=aux)
 
 
 # -- Naive-dynamic ------------------------------------------------------------
 
 def nd_pagerank(g: GraphSnapshot, r_prev: jnp.ndarray, *, mode: str = "bb",
                 engine: Optional[str] = None, **kw) -> PagerankResult:
-    return _run(g, pad_ranks(g, r_prev), _all_affected(g), mode=mode,
-                expand=False, engine=engine, **_defaults(kw))
+    """Deprecated: use ``PageRankSession.recompute(variant="nd")``."""
+    _deprecated("nd_pagerank", 'PageRankSession.recompute("nd")')
+    R0 = pad_ranks(g, r_prev)
+    sess, mat, aux = _legacy_session(g, R0, mode=mode, engine=engine, kw=kw)
+    return sess._converge(R0, _all_affected(g), expand=False,
+                          mat=mat, aux=aux)
 
 
 # -- Dynamic Traversal ---------------------------------------------------------
@@ -190,9 +181,12 @@ def nd_pagerank(g: GraphSnapshot, r_prev: jnp.ndarray, *, mode: str = "bb",
 def dt_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
                 r_prev: jnp.ndarray, *, mode: str = "bb",
                 engine: Optional[str] = None, **kw) -> PagerankResult:
+    """Deprecated: use ``PageRankSession.update(..., variant="dt")``."""
+    _deprecated("dt_pagerank", 'PageRankSession.update(variant="dt")')
     affected = fr.dt_affected(g_prev, g, batch)
-    return _run(g, pad_ranks(g, r_prev), affected, mode=mode, expand=False,
-                engine=engine, **_defaults(kw))
+    R0 = pad_ranks(g, r_prev)
+    sess, mat, aux = _legacy_session(g, R0, mode=mode, engine=engine, kw=kw)
+    return sess._converge(R0, affected, expand=False, mat=mat, aux=aux)
 
 
 # -- Dynamic Frontier (the paper's contribution) -------------------------------
@@ -202,23 +196,19 @@ def df_pagerank(g_prev: GraphSnapshot, g: GraphSnapshot, batch: jnp.ndarray,
                 engine: Optional[str] = None,
                 helping_first_pass: Optional[jnp.ndarray] = None,
                 **kw) -> PagerankResult:
-    """DF_BB (mode="bb") / DF_LF (mode="lf"), Algorithms 1 & 2."""
+    """DF_BB (mode="bb") / DF_LF (mode="lf"), Algorithms 1 & 2.
+
+    Deprecated: use ``PageRankSession.update`` (the recompile-free
+    streaming hot path) for dynamic streams."""
+    _deprecated("df_pagerank", "PageRankSession.update")
     if helping_first_pass is not None:
         affected, _, _ = fr.initial_affected_with_helping(
             g_prev, g, batch, helping_first_pass)
     else:
         affected = fr.initial_affected(g_prev, g, batch)
-    return _run(g, pad_ranks(g, r_prev), affected, mode=mode, expand=True,
-                engine=engine, **_defaults(kw))
-
-
-def _defaults(kw: dict) -> dict:
-    out = dict(alpha=DEFAULT_ALPHA, tau=DEFAULT_TAU, tau_f=None,
-               max_iterations=MAX_ITERATIONS, faults=None, tile=512,
-               active_policy="affected", pallas_mat=None, pallas_aux=None,
-               pallas_backend=None)
-    out.update(kw)
-    return out
+    R0 = pad_ranks(g, r_prev)
+    sess, mat, aux = _legacy_session(g, R0, mode=mode, engine=engine, kw=kw)
+    return sess._converge(R0, affected, expand=True, mat=mat, aux=aux)
 
 
 # ---------------------------------------------------------------------------
@@ -256,3 +246,40 @@ def numpy_reference(g: GraphSnapshot, *, alpha: float = DEFAULT_ALPHA,
 
 def linf(a, b) -> float:
     return float(jnp.max(jnp.abs(a - b)))
+
+
+# ---------------------------------------------------------------------------
+# repro.api engine adapter (Engine protocol; discovered lazily by
+# repro.api.registry so this module never imports the api package at
+# import time)
+# ---------------------------------------------------------------------------
+
+class DenseEngine:
+    """Registry adapter for the oracle-grade dense engine: masked full-SpMV
+    Jacobi in BB mode; LF mode reuses the blocked engine (dense LF ==
+    blocked with every block active)."""
+
+    name = "dense"
+
+    def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
+            max_iterations, faults, tile, active_policy,
+            mat=None, aux=None, backend=None, interpret=None):
+        from repro.api.registry import reject_tile_operands
+        reject_tile_operands(self.name, mat, aux, backend)
+        if mode == "bb":
+            R, iters, conv = dense_jacobi(
+                g, R0, affected0, expand=expand, alpha=alpha, tau=tau,
+                tau_f=tau_f, max_iterations=max_iterations)
+            stats = blk.SweepStats(sweeps=iters, iterations=iters,
+                                   converged=conv,
+                                   edges_processed=iters * g.m)
+            return jax.block_until_ready(R), stats
+        R, stats = blk.run_blocked(
+            g, R0, affected0, mode="lf", expand=expand, alpha=alpha,
+            tau=tau, tau_f=tau_f, max_iterations=max_iterations,
+            tile=tile, faults=faults, active_policy=active_policy)
+        return jax.block_until_ready(R), stats
+
+
+def as_engine() -> DenseEngine:
+    return DenseEngine()

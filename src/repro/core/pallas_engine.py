@@ -305,3 +305,32 @@ def run_pallas(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
         interpret=interpret, backend=backend)
     sv = np.asarray(jax.block_until_ready(stats_vec))   # the single sync
     return R[:g.n_pad], _stats_from_vec(sv)
+
+
+# ---------------------------------------------------------------------------
+# repro.api engine adapter (Engine protocol; discovered lazily by
+# repro.api.registry so this module never imports the api package)
+# ---------------------------------------------------------------------------
+
+class PallasEngine:
+    """Registry adapter for the fused frontier engine.  ``mat`` / ``aux``
+    carry the incrementally maintained pull matrix + per-block operands
+    (:class:`repro.core.incremental.IncrementalPullMatrix`); ``backend``
+    picks the tile-SpMV backend."""
+
+    name = "pallas"
+
+    def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
+            max_iterations, faults, tile, active_policy,
+            mat=None, aux=None, backend=None, interpret=None):
+        del tile    # blocked-engine knob; the fused driver launches tiles
+        R, stats = run_pallas(
+            g, R0, affected0, mode=mode, expand=expand, alpha=alpha,
+            tau=tau, tau_f=tau_f, max_iterations=max_iterations,
+            faults=faults, active_policy=active_policy, mat=mat, aux=aux,
+            backend=backend, interpret=interpret)
+        return jax.block_until_ready(R), stats
+
+
+def as_engine() -> PallasEngine:
+    return PallasEngine()

@@ -1,127 +1,54 @@
-"""Streaming DF_LF runtime — recompile-free dynamic streams.
+"""Streaming DF_LF runtime — now a thin layer over `repro.api`.
 
-The paper's setting is a *stream*: batches of edge updates interleave with
-PageRank recomputation, and the promise of Dynamic Frontier is that the
-cost of a step tracks the batch, not the graph.  Two fixed costs defeat
-that promise if a stream is driven naively through snapshots:
+The recompile-free streaming machinery introduced here in PR 2 (capacity-
+padded incremental pull matrix, device-resident operand mirrors patched by
+one O(batch) scatter, tile-matrix frontier seeding, the snapshot-free fused
+driver re-entry) moved into :class:`repro.api.session.PageRankSession` —
+the session *is* the stream state now, and also serves queries, forks
+what-if branches and reports latency.  This module keeps the historical
+stream-driving surface:
 
-* rebuilding a :class:`GraphSnapshot` per batch is O(m) host work, and the
-  snapshot's edge count ``m`` lives in its pytree aux — so the fused driver
-  retraces on nearly every batch;
-* a freshly built pull matrix changes ``tiles.shape`` / ``max_tiles`` per
-  batch, retracing again.
+* :class:`StreamRunner` — wraps one stream-mode session; ``step`` delegates
+  to :meth:`PageRankSession.update` (every PR-2 guarantee — zero
+  post-warmup driver retraces, frontier-proportional per-batch work —
+  is preserved through the session and asserted in ``tests/test_stream.py``
+  and ``tests/test_api_surface.py``);
+* :func:`run_stream` — drive a whole batch stream and aggregate p50/p95
+  latency + post-warmup retrace counts;
+* re-exports of the jitted hot-path pieces (``_seed_affected``,
+  ``_apply_operand_delta``) and :class:`StreamBatchResult` for existing
+  importers.
 
-:class:`StreamRunner` removes both.  It snapshots the graph **once**, then
-maintains every engine operand incrementally in O(batch) per step:
-
-* the capacity-padded pull matrix via
-  :class:`repro.core.incremental.IncrementalPullMatrix` (tile pool and slot
-  tables on the growth ladder → stable shapes; values patched by one jitted
-  device scatter);
-* the per-vertex out-degree vector, the per-block degree vectors and the
-  tile-presence adjacency as *device-resident mirrors* patched by one
-  jitted O(batch) scatter (:func:`_apply_operand_delta`) — graph-sized
-  operands never re-cross the host↔device boundary (the numpy twins in
-  ``IncrementalPullMatrix.aux`` stay maintained for non-stream callers);
-* the initial affected frontier (paper Alg. 1 lines 4-6) by OR-semiring
-  tile SpMVs over the pre- and post-batch matrices
-  (:func:`_seed_affected`) — no snapshot edge arrays needed, and the
-  launch is restricted to the batch's candidate blocks.
-
-After the first batch warms the jit caches, a stream of equally-bucketed
-batches re-enters the compiled ``pallas_engine._driver`` with **zero
-retraces** (asserted in ``tests/test_stream.py``), and per-batch latency is
-frontier-proportional: delta scatter O(batch), frontier seed O(candidate
-blocks), convergence sweeps O(active blocks) — nothing scales with ``m``
-except the (host-side, numpy) edge-set bookkeeping.
+New code should use :class:`repro.api.PageRankSession` directly (for one
+stream) or :class:`repro.api.PageRankService` (for many).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import faults as flt
-from repro.core import frontier as fr
-from repro.core import pallas_engine as pe
-from repro.core.blocked import SweepStats
-from repro.core.delta import signed_edge_delta
-from repro.core.graph import HostGraph, initial_ranks
-from repro.core.incremental import IncrementalPullMatrix, effective_batch
-from repro.kernels.block_spmv import ops
+from repro.core.graph import HostGraph
+
+__all__ = [
+    "StreamRunner", "StreamBatchResult", "StreamReport", "run_stream",
+    "_seed_affected", "_apply_operand_delta", "_driver_cache_size",
+]
+
+# session members re-exported here for existing importers; resolved lazily
+# (PEP 562) because repro.api.session imports repro.core — an eager import
+# would cycle through repro.core.__init__ during api-first imports
+_SESSION_EXPORTS = ("StreamBatchResult", "_seed_affected",
+                    "_apply_operand_delta", "_driver_cache_size")
 
 
-@partial(jax.jit, static_argnames=("block_size", "interpret", "backend"))
-def _seed_affected(mat_prev: ops.BlockSparse, mat_new: ops.BlockSparse,
-                   bmat, batch, valid, *, block_size: int, interpret: bool,
-                   backend: str) -> jnp.ndarray:
-    """Initial DF frontier for one batch (paper Alg. 1 lines 4-6): mark the
-    out-neighbors of every update source in G^{t-1} *and* G^t.
-
-    Both graphs are queried through their pull matrices (A[v,u] ≥ 1 iff
-    edge u→v, self-loops included — the same edge set a snapshot's
-    ``out_neighbor_or`` walks), so the stream needs no snapshot edge
-    arrays.  Launches are restricted to the candidate row-blocks that own a
-    tile in a source's column-block; ``mat_new``'s structure is a superset
-    of ``mat_prev``'s (growth is monotone), so one candidate set covers
-    both passes."""
-    n_pad = valid.shape[0]
-    n_rb = n_pad // block_size
-    ind = jnp.zeros((n_pad + 1,), bool)
-    ind = ind.at[jnp.minimum(batch[:, 0], n_pad)].set(True)
-    f = ind[:n_pad] & valid
-    sb = fr.block_any(f, n_rb, block_size)
-    cand = (bmat & sb[None, :]).any(axis=1)
-    n_cand = cand.sum()
-    cids = fr.compact_block_ids(cand, n_rb)
-    fx = f.astype(mat_new.tiles.dtype)
-    h_prev = ops.block_spmv_active_bucketed(
-        mat_prev, fx, cids, n_cand, semiring="or", interpret=interpret,
-        backend=backend)
-    h_new = ops.block_spmv_active_bucketed(
-        mat_new, fx, cids, n_cand, semiring="or", interpret=interpret,
-        backend=backend)
-    return (((h_prev > 0) | (h_new > 0))
-            & jnp.repeat(cand, block_size) & valid)
-
-
-@partial(jax.jit, static_argnames=("block",))
-def _apply_operand_delta(out_deg, rb_in, rb_out, bmat,
-                         rows, cols, vals, *, block: int):
-    """O(batch) device-side update of the engine-operand mirrors from the
-    signed pull-layout delta (rows = dst, cols = src, vals = ±1; padded
-    entries carry val 0 and are inert).  Mirrors
-    :meth:`repro.core.incremental.MatrixAux.apply_delta` plus the
-    out-degree update, so a stream never re-uploads the graph-sized
-    operand vectors — only the bucketed batch crosses to the device."""
-    n_pad = out_deg.shape[0]
-    n_rb = rb_in.shape[0]
-    real = vals != 0
-    v = jnp.where(real, vals, 0).astype(rb_in.dtype)
-    rb = jnp.minimum(rows // block, n_rb - 1)
-    cb = jnp.minimum(cols // block, n_rb - 1)
-    out_deg = out_deg.at[jnp.minimum(cols, n_pad - 1)].add(
-        v.astype(out_deg.dtype))
-    rb_in = rb_in.at[rb].add(v)
-    rb_out = rb_out.at[cb].add(v)
-    # OR-scatter: padded entries contribute max(existing, False) == existing
-    bmat = bmat.at[rb, cb].max(real)
-    return out_deg, rb_in, rb_out, bmat
-
-
-@dataclasses.dataclass
-class StreamBatchResult:
-    """Outcome of one stream step."""
-    ranks: jnp.ndarray            # [n_pad] post-batch converged ranks
-    stats: SweepStats
-    wall_time_s: float            # full step: delta + seed + converge
-    batch_edges: int              # raw batch size (before no-op filtering)
-    driver_cache_size: int        # jit cache entries of the fused driver
+def __getattr__(name: str):
+    if name in _SESSION_EXPORTS:
+        from repro.api import session as _session
+        return getattr(_session, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -138,13 +65,6 @@ class StreamReport:
         return self.results[-1].ranks
 
 
-def _driver_cache_size() -> int:
-    try:
-        return int(pe._driver._cache_size())
-    except Exception:           # pragma: no cover - older jax fallback
-        return -1
-
-
 class StreamRunner:
     """Drives DF_LF PageRank along a dynamic edge stream with a
     recompile-free, frontier-proportional per-batch hot path.
@@ -156,11 +76,13 @@ class StreamRunner:
             res = runner.step(dels, ins)     # converged ranks + latency
         # or: report = run_stream(hg0, batches)
 
-    The vertex set (and hence the block grid) is fixed for the lifetime of
-    the runner; growing past it requires a new runner.  Rank state warm
-    starts each batch from the previous converged vector (the dynamic
-    PageRank setting).  ``r0=None`` runs one static solve on the initial
-    graph (also serving as the engine warmup).
+    This is a compatibility wrapper: it opens one stream-mode
+    :class:`repro.api.PageRankSession` (``self.session``) and forwards to
+    it.  The vertex set (and hence the block grid) is fixed for the
+    lifetime of the runner; growing past it requires a new runner.  Rank
+    state warm starts each batch from the previous converged vector (the
+    dynamic PageRank setting).  ``r0=None`` runs one static solve on the
+    initial graph (also serving as the engine warmup).
     """
 
     def __init__(self, hg0: HostGraph, *, block_size: int = 64,
@@ -170,116 +92,96 @@ class StreamRunner:
                  tau_f: Optional[float] = None, max_iterations: int = 500,
                  interpret: Optional[bool] = None,
                  backend: Optional[str] = None):
-        if mode not in ("lf", "bb"):
-            raise ValueError(mode)
-        self.hg = hg0
-        # the ONLY snapshot the runner ever builds; not retained — the
-        # scalars + per-vertex/per-block operand mirrors below carry
-        # everything the hot path needs
-        g0 = hg0.snapshot(block_size=block_size)
-        self.n, self.n_pad = g0.n, g0.n_pad
-        self.block_size, self.n_rb = g0.block_size, g0.n_blocks
-        self.mode, self.active_policy = mode, active_policy
-        self.max_iterations = max_iterations
-        self.interpret = (pe.default_interpret() if interpret is None
-                          else interpret)
-        self.backend = ops._resolve_backend(backend)
-        dt = jnp.dtype(dtype)
-        if tau_f is None:
-            tau_f = tau / 1000.0
-        # traced hyperparameter operands, created once so dtypes (and the
-        # jit cache key) are identical across every step
-        self._alpha = jnp.asarray(alpha, dt)
-        self._tau = jnp.asarray(tau, dt)
-        self._tau_f = jnp.asarray(tau_f, dt)
-        t = flt.NO_FAULTS.device_tables(max_iterations)
-        self._fault_tables = tuple(jnp.asarray(a) for a in t)
-
-        self.inc = IncrementalPullMatrix.from_snapshot(
-            g0, dtype=np.dtype(dtype), padded=True)
-        self.valid = g0.vertex_valid
-        # device-resident engine operands, patched in place per batch by
-        # _apply_operand_delta (the host-side numpy twins live in
-        # inc.aux for non-stream callers)
-        self._out_deg = jnp.asarray(g0.out_deg)
-        self._rb_in = jnp.asarray(self.inc.aux.rb_in)
-        self._rb_out = jnp.asarray(self.inc.aux.rb_out)
-        self._bmat = jnp.asarray(self.inc.aux.bmat)
-        if r0 is None:
-            r0, _ = pe.run_pallas(
-                g0, initial_ranks(g0, dt), g0.vertex_valid, mode=mode,
-                expand=False, alpha=alpha, tau=tau,
-                max_iterations=max_iterations, active_policy=active_policy,
-                mat=self.inc.mat, aux=self.inc.aux,
-                interpret=self.interpret, backend=self.backend)
-        self.R = jnp.asarray(r0, dt)[:self.n_pad]
+        from repro.api import EngineConfig, PageRankSession
+        cfg = EngineConfig(engine="pallas", mode=mode,
+                           active_policy=active_policy, alpha=alpha,
+                           tau=tau, tau_f=tau_f,
+                           max_iterations=max_iterations, backend=backend,
+                           block_size=block_size, dtype=dtype)
+        self.session = PageRankSession.from_graph(
+            hg0, config=cfg, r0=r0, interpret=interpret)
 
     def warmup(self) -> None:
         """Trace the full per-batch pipeline at the stream's operand shapes
-        without perturbing graph or rank state: a zero-value delta against
-        vertex 0's (always present) self-loop tile warms the device scatter
-        at the base batch bucket, and an empty-batch step warms the frontier
-        seed and the fused driver.  Batches larger than the base bucket
-        (64 edges) still pay one compile per new bucket they reach."""
-        z = np.zeros(1, np.int64)
-        self.inc.mat = ops.apply_delta(self.inc.mat, z, z, np.zeros(1))
-        empty = np.zeros((0, 2), np.int64)
-        self.step(empty, empty)
+        without perturbing graph or rank state (see
+        :meth:`PageRankSession.warmup`)."""
+        self.session.warmup()
 
     def step(self, deletions: np.ndarray, insertions: np.ndarray
              ) -> StreamBatchResult:
         """Apply one edge batch and reconverge: delta scatter → frontier
         seed → fused convergence loop, all device-side after the O(batch)
         host bookkeeping.  Returns the converged ranks and latency stats."""
-        t0 = time.perf_counter()
-        mat_prev = self.inc.mat
-        dels_eff, ins_eff = effective_batch(self.hg, deletions, insertions)
-        mat_new = self.inc.advance(self.hg, None, deletions, insertions,
-                                   effective=(dels_eff, ins_eff))
-        self.hg = self.hg.apply_batch(deletions, insertions)
+        return self.session.update(deletions, insertions)
 
-        # patch the device-resident operand mirrors in O(batch): only the
-        # bucketed signed delta crosses host→device, never the graph-sized
-        # vectors
-        rows, cols, vals = signed_edge_delta(dels_eff, ins_eff)
-        if len(rows):
-            b_pad = ops.capacity_bucket(len(rows), ops.DELTA_BATCH_BUCKET)
-            z = np.zeros(b_pad - len(rows), np.int32)
-            self._out_deg, self._rb_in, self._rb_out, self._bmat = \
-                _apply_operand_delta(
-                    self._out_deg, self._rb_in, self._rb_out, self._bmat,
-                    jnp.asarray(np.concatenate(
-                        [rows.astype(np.int32), z])),
-                    jnp.asarray(np.concatenate(
-                        [cols.astype(np.int32), z])),
-                    jnp.asarray(np.concatenate(
-                        [vals.astype(np.int32), z])),
-                    block=self.block_size)
+    # -- state passthroughs (the session owns the stream state) -------------
+    @property
+    def hg(self) -> HostGraph:
+        return self.session.hg
 
-        batch_dev = fr.pack_batch(self.n_pad, deletions, insertions)
-        affected = _seed_affected(
-            mat_prev, mat_new, self._bmat, batch_dev, self.valid,
-            block_size=self.block_size, interpret=self.interpret,
-            backend=self.backend)
+    @property
+    def R(self):
+        return self.session.R
 
-        part, alive, delay, crashed = self._fault_tables
-        R, stats_vec = pe._driver(
-            mat_new, self.R, affected, self.valid, self._out_deg,
-            self._rb_in, self._rb_out, self._bmat,
-            self._alpha, self._tau, self._tau_f,
-            part, alive, delay, crashed,
-            n=self.n, block_size=self.block_size, mode=self.mode,
-            expand=True, active_policy=self.active_policy,
-            max_iterations=self.max_iterations, interpret=self.interpret,
-            backend=self.backend)
-        sv = np.asarray(jax.block_until_ready(stats_vec))  # the single sync
-        self.R = R
-        raw = (np.asarray(deletions).reshape(-1, 2).shape[0]
-               + np.asarray(insertions).reshape(-1, 2).shape[0])
-        return StreamBatchResult(
-            ranks=R, stats=pe._stats_from_vec(sv),
-            wall_time_s=time.perf_counter() - t0, batch_edges=raw,
-            driver_cache_size=_driver_cache_size())
+    @property
+    def inc(self):
+        return self.session.inc
+
+    @property
+    def valid(self):
+        return self.session.valid
+
+    @property
+    def n(self) -> int:
+        return self.session.n
+
+    @property
+    def n_pad(self) -> int:
+        return self.session.n_pad
+
+    @property
+    def block_size(self) -> int:
+        return self.session.block_size
+
+    @property
+    def n_rb(self) -> int:
+        return self.session.n_rb
+
+    @property
+    def mode(self) -> str:
+        return self.session.config.mode
+
+    @property
+    def active_policy(self) -> str:
+        return self.session.config.active_policy
+
+    @property
+    def max_iterations(self) -> int:
+        return self.session.config.max_iterations
+
+    @property
+    def interpret(self) -> bool:
+        return self.session.interpret
+
+    @property
+    def backend(self) -> str:
+        return self.session.backend
+
+    @property
+    def _out_deg(self):
+        return self.session._out_deg
+
+    @property
+    def _rb_in(self):
+        return self.session._rb_in
+
+    @property
+    def _rb_out(self):
+        return self.session._rb_out
+
+    @property
+    def _bmat(self):
+        return self.session._bmat
 
 
 def run_stream(hg0: HostGraph,
@@ -294,6 +196,7 @@ def run_stream(hg0: HostGraph,
     without perturbing the graph, so recorded latencies are steady-state
     (up to batches reaching a not-yet-seen size bucket) and the retrace
     count covers **every** recorded batch, including the first."""
+    from repro.api.session import _driver_cache_size
     runner = StreamRunner(hg0, **runner_kwargs)
     if warmup:
         runner.warmup()

@@ -324,22 +324,32 @@ def apply_delta(mat: BlockSparse, rows: np.ndarray, cols: np.ndarray,
 # SpMV backends
 # ---------------------------------------------------------------------------
 
+BACKENDS = ("pallas", "xla")
+
+
 def default_backend() -> str:
     """Tile-SpMV backend when a caller passes ``backend=None``: the Pallas
     kernels on TPU, the XLA gather/einsum path elsewhere (CPU containers
     would otherwise pay the ~200× interpret-mode penalty).  Override with
-    ``REPRO_TILE_BACKEND=pallas|xla``."""
+    ``REPRO_TILE_BACKEND=pallas|xla`` — an invalid override fails here,
+    eagerly, with the valid-value list (it is also checked at
+    ``repro.api.EngineConfig`` construction) instead of surfacing only when
+    a kernel is launched."""
     env = os.environ.get("REPRO_TILE_BACKEND")
     if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"REPRO_TILE_BACKEND={env!r} is not a valid tile backend; "
+                f"expected one of {list(BACKENDS)}")
         return env
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
 def _resolve_backend(backend: Optional[str]) -> str:
     backend = backend or default_backend()
-    if backend not in ("pallas", "xla"):
+    if backend not in BACKENDS:
         raise ValueError(f"unknown tile backend {backend!r} "
-                         "(expected 'pallas' or 'xla')")
+                         f"(expected one of {list(BACKENDS)})")
     return backend
 
 

@@ -10,6 +10,11 @@ A production-shaped (if compact) engine:
 
 The engine is mesh-agnostic: under a mesh + rules context the same code path
 serves the sharded model (launch/serve.py wires that up).
+
+The slot pattern here (fixed slots, shared queue, one unit of work per live
+slot per tick) is reused by the PageRank serving layer:
+:class:`repro.api.service.PageRankService` drives N dynamic-graph sessions
+the same way a decode batch drives N requests.
 """
 from __future__ import annotations
 

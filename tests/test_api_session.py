@@ -1,0 +1,343 @@
+"""PageRankSession lifecycle, EngineConfig/registry validation, deprecation
+shims (warning + bit-for-bit routing parity), fork semantics, and the
+multi-session service."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.api import (EngineConfig, PageRankService, PageRankSession,
+                       registry)
+from repro.core import pagerank as pr
+from repro.core.delta import random_batch
+from repro.core.frontier import batch_to_device
+from repro.graphs.generators import rmat
+
+
+@pytest.fixture(scope="module")
+def dyn():
+    hg0 = rmat(9, avg_degree=6, seed=5)
+    g0 = hg0.snapshot(block_size=64)
+    r_prev = jnp.asarray(pr.numpy_reference(g0, iterations=300))
+    dels, ins = random_batch(hg0, 5e-3, seed=21)
+    hg1 = hg0.apply_batch(dels, ins)
+    g1 = hg1.snapshot(block_size=64)
+    batch = batch_to_device(g1, dels, ins)
+    return hg0, g0, hg1, g1, batch, r_prev, dels, ins
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig validation
+# ---------------------------------------------------------------------------
+
+class TestEngineConfig:
+    def test_defaults_valid(self):
+        cfg = EngineConfig()
+        assert cfg.resolved_engine in registry.names()
+        assert cfg.resolved_backend in ("pallas", "xla")
+
+    @pytest.mark.parametrize("kw", [
+        dict(mode="nope"), dict(active_policy="nope"), dict(alpha=0.0),
+        dict(alpha=1.5), dict(tau=-1e-9), dict(tau_f=0.0), dict(tile=0),
+        dict(block_size=-64), dict(max_iterations=0),
+        dict(engine="not-an-engine"), dict(backend="not-a-backend"),
+        dict(faults=object()),
+    ])
+    def test_bad_values_rejected_at_construction(self, kw):
+        with pytest.raises(ValueError):
+            EngineConfig(**kw)
+
+    def test_unknown_keys_rejected_with_valid_list(self):
+        with pytest.raises(TypeError, match="taau.*valid keys"):
+            EngineConfig.from_kwargs(taau=1e-9)
+        with pytest.raises(TypeError, match="valid keys"):
+            EngineConfig().replace(engin="blocked")
+
+    def test_replace_builds_validated_variant(self):
+        cfg = EngineConfig(tau=1e-8)
+        cfg2 = cfg.replace(alpha=0.9)
+        assert cfg2.alpha == 0.9 and cfg2.tau == 1e-8
+        with pytest.raises(ValueError):
+            cfg.replace(mode="nope")
+
+    def test_tau_f_resolution(self):
+        cfg = EngineConfig(tau=1e-6)
+        assert cfg.resolved_tau_f(expand=True) == pytest.approx(1e-9)
+        assert cfg.resolved_tau_f(expand=False) == float("inf")
+        assert EngineConfig(tau_f=1e-4).resolved_tau_f(expand=True) == 1e-4
+
+    def test_env_overrides_validated_eagerly(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ENGINE", "bogus")
+        with pytest.raises(ValueError, match="REPRO_ENGINE.*registered"):
+            EngineConfig()
+        monkeypatch.delenv("REPRO_ENGINE")
+        monkeypatch.setenv("REPRO_TILE_BACKEND", "bogus")
+        with pytest.raises(ValueError, match="REPRO_TILE_BACKEND"):
+            EngineConfig()
+        monkeypatch.setenv("REPRO_TILE_BACKEND", "xla")
+        assert EngineConfig().resolved_backend == "xla"
+
+    def test_env_override_accepts_registered_engine(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ENGINE", "dense")
+        assert EngineConfig().resolved_engine == "dense"
+        assert pr.default_engine() == "dense"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_unknown_engine_error_lists_registered(self):
+        with pytest.raises(ValueError, match="blocked.*dense.*pallas"):
+            registry.resolve("not-an-engine")
+
+    def test_custom_engine_registers_and_resolves(self):
+        class EchoEngine:
+            name = "echo-test"
+
+            def run(self, g, R0, affected0, **kw):
+                from repro.core.blocked import SweepStats
+                return R0, SweepStats(converged=True)
+
+        registry.register(EchoEngine())
+        try:
+            assert "echo-test" in registry.names()
+            assert registry.resolve("echo-test").name == "echo-test"
+            with pytest.raises(ValueError, match="already registered"):
+                registry.register(EchoEngine())
+        finally:
+            registry._REGISTRY.pop("echo-test", None)
+
+    def test_invalid_adapters_rejected(self):
+        class NoName:
+            def run(self):
+                pass
+
+        with pytest.raises(ValueError, match="name"):
+            registry.register(NoName())
+
+    def test_non_pallas_engines_reject_tile_operands(self, dyn):
+        _, g0, _, _, _, r_prev, _, _ = dyn
+        with pytest.raises(ValueError, match="only consumed by "
+                                             "engine='pallas'"):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                pr.nd_pagerank(g0, r_prev, engine="blocked",
+                               pallas_backend="xla")
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warning + bit-for-bit session parity
+# ---------------------------------------------------------------------------
+
+class TestDeprecationShims:
+    """Each legacy variant function must emit DeprecationWarning, route
+    through PageRankSession, and match the session call bit-for-bit."""
+
+    ENGINE = "blocked"      # deterministic + fast on CPU containers
+
+    def _cfg(self, mode):
+        return EngineConfig(mode=mode, engine=self.ENGINE)
+
+    def test_static(self, dyn):
+        _, g0, _, _, _, _, _, _ = dyn
+        with pytest.warns(DeprecationWarning, match="static_pagerank"):
+            res = pr.static_pagerank(g0, mode="bb", engine=self.ENGINE)
+        sess = PageRankSession.from_snapshot(g0, config=self._cfg("bb"))
+        out = sess.recompute("static")
+        assert np.array_equal(np.asarray(res.ranks), np.asarray(out.ranks))
+        assert res.stats.sweeps == out.stats.sweeps
+
+    def test_nd(self, dyn):
+        _, g0, _, _, _, r_prev, _, _ = dyn
+        with pytest.warns(DeprecationWarning, match="nd_pagerank"):
+            res = pr.nd_pagerank(g0, r_prev, mode="lf", engine=self.ENGINE)
+        sess = PageRankSession.from_snapshot(g0, config=self._cfg("lf"),
+                                             r0=r_prev)
+        out = sess.recompute("nd")
+        assert np.array_equal(np.asarray(res.ranks), np.asarray(out.ranks))
+        assert res.stats.sweeps == out.stats.sweeps
+
+    def test_dt(self, dyn):
+        hg0, g0, _, g1, batch, r_prev, dels, ins = dyn
+        with pytest.warns(DeprecationWarning, match="dt_pagerank"):
+            res = pr.dt_pagerank(g0, g1, batch, r_prev, mode="lf",
+                                 engine=self.ENGINE)
+        sess = PageRankSession.from_graph(hg0, config=self._cfg("lf"),
+                                          r0=r_prev)
+        out = sess.update(dels, ins, variant="dt")
+        assert np.array_equal(np.asarray(res.ranks), np.asarray(out.ranks))
+        assert res.stats.sweeps == out.stats.sweeps
+
+    def test_df(self, dyn):
+        hg0, g0, _, g1, batch, r_prev, dels, ins = dyn
+        with pytest.warns(DeprecationWarning, match="df_pagerank"):
+            res = pr.df_pagerank(g0, g1, batch, r_prev, mode="lf",
+                                 engine=self.ENGINE)
+        sess = PageRankSession.from_graph(hg0, config=self._cfg("lf"),
+                                          r0=r_prev)
+        out = sess.update(dels, ins, variant="df")
+        assert np.array_equal(np.asarray(res.ranks), np.asarray(out.ranks))
+        assert res.stats.sweeps == out.stats.sweeps
+
+    def test_df_recompute_replays_last_batch(self, dyn):
+        """recompute('df') after update == the update itself (same marking,
+        same pre-batch ranks)."""
+        hg0, _, _, _, _, r_prev, dels, ins = dyn
+        sess = PageRankSession.from_graph(hg0, config=self._cfg("lf"),
+                                          r0=r_prev)
+        out = sess.update(dels, ins, variant="df")
+        replay = sess.recompute("df")
+        assert np.array_equal(np.asarray(out.ranks),
+                              np.asarray(replay.ranks))
+
+    def test_recompute_dt_df_require_a_batch(self, dyn):
+        hg0, _, _, _, _, r_prev, _, _ = dyn
+        sess = PageRankSession.from_graph(hg0, config=self._cfg("lf"),
+                                          r0=r_prev)
+        with pytest.raises(ValueError, match="no batch"):
+            sess.recompute("df")
+        # warmup's internal empty batch must not count as "the last update"
+        stream = PageRankSession.from_graph(
+            hg0, config=EngineConfig(engine="pallas", block_size=64),
+            r0=r_prev)
+        stream.warmup()
+        with pytest.raises(ValueError, match="no batch"):
+            stream.recompute("dt")
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle
+# ---------------------------------------------------------------------------
+
+class TestSessionLifecycle:
+    def test_from_graph_initial_solve_matches_reference(self, dyn):
+        hg0, g0, _, _, _, _, _, _ = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(engine="pallas", block_size=64))
+        ref = pr.numpy_reference(g0, iterations=300)
+        assert pr.linf(sess.R[:g0.n], jnp.asarray(ref[:g0.n])) < 1e-8
+
+    def test_bare_snapshot_session_cannot_update(self, dyn):
+        _, g0, _, _, _, r_prev, dels, ins = dyn
+        sess = PageRankSession.from_snapshot(
+            g0, config=EngineConfig(engine="blocked"), r0=r_prev)
+        with pytest.raises(ValueError, match="from_graph"):
+            sess.update(dels, ins)
+
+    def test_bad_variant_rejected(self, dyn):
+        hg0, _, _, _, _, r_prev, dels, ins = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(engine="blocked"), r0=r_prev)
+        with pytest.raises(ValueError, match="variant"):
+            sess.update(dels, ins, variant="nope")
+        with pytest.raises(ValueError, match="variant"):
+            sess.recompute("nope")
+
+    def test_config_type_checked(self, dyn):
+        hg0 = dyn[0]
+        with pytest.raises(TypeError, match="EngineConfig"):
+            PageRankSession.from_graph(hg0, config={"alpha": 0.9})
+
+    def test_stream_variants_match_snapshot_oracles(self, dyn):
+        """nd/static variants through the stream-mode hot path agree with
+        the legacy snapshot-based route."""
+        hg0, g0, hg1, g1, batch, r_prev, dels, ins = dyn
+        for variant, oracle in (
+                ("nd", lambda: pr.nd_pagerank(g1, r_prev, mode="lf",
+                                              engine="pallas")),
+                ("static", lambda: pr.static_pagerank(g1, mode="lf",
+                                                      engine="pallas"))):
+            sess = PageRankSession.from_graph(
+                hg0, config=EngineConfig(engine="pallas", block_size=64),
+                r0=r_prev)
+            res = sess.update(dels, ins, variant=variant)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                ref = oracle()
+            assert res.stats.converged
+            assert pr.linf(res.ranks, ref.ranks) < 1e-12, variant
+
+    def test_fork_branches_are_independent(self, dyn):
+        hg0, _, _, _, _, r_prev, dels, ins = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(engine="pallas", block_size=64),
+            r0=r_prev)
+        base_m = sess.hg.m
+        base_R = np.asarray(sess.R).copy()
+        twin = sess.fork()
+        assert twin.inc.mat.tiles is sess.inc.mat.tiles  # shared tile pool
+        twin.update(dels, ins)
+        # parent untouched by the fork's update
+        assert sess.hg.m == base_m
+        np.testing.assert_array_equal(np.asarray(sess.R), base_R)
+        np.testing.assert_array_equal(np.asarray(sess._out_deg),
+                                      np.asarray(
+                                          sess.hg.snapshot(
+                                              block_size=64).out_deg))
+        # both branches keep converging independently
+        d2, i2 = random_batch(sess.hg, 5e-3, seed=77)
+        assert sess.update(d2, i2).stats.converged
+        assert twin.report().n_updates == 1
+        assert sess.report().n_updates == 1
+
+
+# ---------------------------------------------------------------------------
+# service: N sessions, one queue
+# ---------------------------------------------------------------------------
+
+class TestService:
+    def test_drains_and_reports_per_session(self):
+        graphs = [rmat(8, avg_degree=4, seed=s) for s in (0, 1)]
+        svc = PageRankService(
+            graphs, config=EngineConfig(engine="pallas", block_size=64))
+        cur = list(graphs)
+        for j in range(2):
+            for i in range(len(cur)):
+                dels, ins = random_batch(cur[i], 1e-2, seed=50 + 10 * i + j)
+                svc.submit(i, dels, ins)
+                cur[i] = cur[i].apply_batch(dels, ins)
+        done = svc.run_until_drained()
+        assert len(done) == 4
+        assert all(r.done and r.result.stats.converged for r in done)
+        assert all(r.latency_s >= r.wait_s >= 0 for r in done)
+        rep = svc.report()
+        assert rep["requests_done"] == 4 and rep["requests_queued"] == 0
+        for row in rep["sessions"]:
+            assert row["n_updates"] == 2
+            # sessions share the jit caches → no session retraces after
+            # the service-level warmup
+            assert row["retraces_post_warmup"] == 0
+        # session ranks match an independent oracle on the final graphs
+        for i, hg in enumerate(cur):
+            ref = pr.numpy_reference(hg.snapshot(block_size=64),
+                                     iterations=300)
+            n = svc.sessions[i].n
+            assert pr.linf(svc.sessions[i].R[:n],
+                           jnp.asarray(ref[:n])) < 1e-8
+
+    def test_fifo_per_stream_one_batch_per_tick(self):
+        hg = rmat(8, avg_degree=4, seed=2)
+        svc = PageRankService(
+            [hg], config=EngineConfig(engine="pallas", block_size=64))
+        cur = hg
+        for j in range(3):
+            dels, ins = random_batch(cur, 1e-2, seed=90 + j)
+            svc.submit(0, dels, ins)
+            cur = cur.apply_batch(dels, ins)
+        assert svc.step() == 1          # one batch per slot per tick
+        assert len(svc.queue) == 2
+        assert [r.uid for r in svc.finished] == [1]
+        svc.run_until_drained()
+        assert [r.uid for r in svc.finished] == [1, 2, 3]
+
+    def test_submit_bad_stream_rejected(self):
+        svc = PageRankService(
+            [rmat(7, avg_degree=4, seed=0)],
+            config=EngineConfig(engine="pallas", block_size=64),
+            warmup=False)
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit(3, np.zeros((0, 2)), np.zeros((0, 2)))

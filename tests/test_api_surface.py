@@ -1,0 +1,139 @@
+"""Public-API surface snapshot + the session-level streaming guarantees.
+
+The ``repro.api`` surface (``__all__``, the ``EngineConfig`` field set, the
+registered builtin engines) is snapshotted here so changes to it are
+deliberate — update the expected sets in the same PR that changes the
+surface, with a docs/API.md entry to match.
+
+Also asserts the PR-2 streaming acceptance criteria *through the new
+surface*: ``PageRankSession.update`` must re-enter the fused driver with
+zero post-warmup retraces, and its ranks must match the from-scratch
+rebuild path bit-tightly.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro.api as api
+from repro.api import EngineConfig, PageRankSession, registry
+from repro.core import pagerank as pr
+from repro.core.delta import random_batch
+from repro.graphs.generators import rmat
+
+EXPECTED_API = {
+    "EngineConfig",
+    "Engine",
+    "PageRankService",
+    "PageRankSession",
+    "SessionReport",
+    "StreamBatchResult",
+    "UpdateRequest",
+    "register",
+    "registry",
+}
+
+EXPECTED_CONFIG_FIELDS = {
+    "alpha", "tau", "tau_f", "mode", "engine", "backend", "tile",
+    "block_size", "active_policy", "max_iterations", "faults", "dtype",
+}
+
+EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas"}
+
+
+def test_api_all_snapshot():
+    assert set(api.__all__) == EXPECTED_API
+    for name in api.__all__:        # every exported name must resolve
+        assert getattr(api, name) is not None
+
+
+def test_engine_config_field_snapshot():
+    import dataclasses
+    assert set(f.name for f in dataclasses.fields(EngineConfig)) == \
+        EXPECTED_CONFIG_FIELDS
+    assert set(EngineConfig.valid_keys()) == EXPECTED_CONFIG_FIELDS
+
+
+def test_builtin_engines_registered():
+    assert EXPECTED_BUILTIN_ENGINES <= set(registry.names())
+
+
+def test_session_core_methods_exist():
+    for m in ("from_graph", "from_snapshot", "update", "recompute",
+              "query", "top_k", "report", "fork", "warmup"):
+        assert callable(getattr(PageRankSession, m)), m
+
+
+# ---------------------------------------------------------------------------
+# streaming guarantees through the session surface
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def stream_setup():
+    hg = rmat(9, avg_degree=6, seed=3)
+    g = hg.snapshot(block_size=64)
+    r0 = jnp.asarray(pr.numpy_reference(g, iterations=300))
+    batches = []
+    cur = hg
+    for i in range(4):
+        dels, ins = random_batch(cur, 5e-3, seed=300 + i)
+        batches.append((dels, ins))
+        cur = cur.apply_batch(dels, ins)
+    return hg, g, r0, batches, cur
+
+
+def test_session_update_zero_retraces_post_warmup(stream_setup):
+    """The tentpole acceptance bar: after warmup, a ≥3-batch stream of
+    session updates must not retrace the fused driver."""
+    hg, g, r0, batches, _ = stream_setup
+    sess = PageRankSession.from_graph(
+        hg, config=EngineConfig(engine="pallas", block_size=64), r0=r0)
+    sess.warmup()
+    sizes = [sess.update(dels, ins).driver_cache_size
+             for dels, ins in batches]
+    assert len(sizes) >= 3
+    assert sizes[0] >= 0, "jit cache stats unavailable"
+    assert sizes[-1] == sizes[0], f"driver retraced during stream: {sizes}"
+    rep = sess.report()
+    assert rep.retraces_post_warmup == 0
+    assert rep.n_updates == len(batches)
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_session_update_matches_rebuild(stream_setup):
+    """Stream-mode session results must match the rebuild-everything path
+    (same engine, same hyperparameters) on insertion+deletion batches."""
+    hg, g, r0, batches, _ = stream_setup
+    sess = PageRankSession.from_graph(
+        hg, config=EngineConfig(engine="pallas", block_size=64), r0=r0)
+    cur, r_ref = hg, r0
+    for dels, ins in batches:
+        res = sess.update(dels, ins)
+        g_prev = cur.snapshot(block_size=64)
+        cur = cur.apply_batch(dels, ins)
+        g_new = cur.snapshot(block_size=64)
+        from repro.core.frontier import batch_to_device
+        oracle = pr.df_pagerank(
+            g_prev, g_new, batch_to_device(g_new, dels, ins), r_ref,
+            mode="lf", engine="pallas")
+        r_ref = oracle.ranks
+        assert res.stats.converged
+        assert pr.linf(res.ranks, oracle.ranks) < 1e-12
+    ref = pr.numpy_reference(cur.snapshot(block_size=64), iterations=300)
+    assert pr.linf(sess.R[:cur.n], jnp.asarray(ref[:cur.n])) < 1e-9
+
+
+def test_session_partial_reads_match_full_ranks(stream_setup):
+    hg, g, r0, batches, _ = stream_setup
+    sess = PageRankSession.from_graph(
+        hg, config=EngineConfig(engine="pallas", block_size=64), r0=r0)
+    sess.update(*batches[0])
+    full = sess.ranks
+    ids = np.array([0, 1, sess.n - 1, sess.n_pad + 5, -3])
+    got = sess.query(ids)
+    np.testing.assert_allclose(got[:3], full[[0, 1, sess.n - 1]])
+    assert got[3] == 0 and got[4] == 0      # out-of-range reads 0
+    vals, idx = sess.top_k(5)
+    order = np.argsort(full[:sess.n])[::-1][:5]
+    np.testing.assert_allclose(vals, full[order])
+    assert (np.diff(vals) <= 0).all()
+    assert sess.report().queries_served == len(ids) + 5

@@ -48,3 +48,16 @@ def test_smoke_report():
         assert row["retraces_post_warmup"] == 0, row
         assert row["p50_ms"] > 0
         assert row["linf_vs_reference"] < 1e-8, row
+    # the service scenario (N concurrent sessions, one shared batch queue):
+    # every session must drain its batches with zero post-warmup retraces
+    # (the jit caches are shared across sessions) and serve accurate ranks
+    service = report["service"]
+    assert service["n_sessions"] >= 2
+    assert service["requests_done"] == (service["n_sessions"]
+                                        * service["batches_per_session"])
+    assert service["requests_queued"] == 0
+    assert service["request_p50_ms"] > 0
+    for row in service["sessions"]:
+        assert row["retraces_post_warmup"] == 0, row
+        assert row["n_updates"] == service["batches_per_session"], row
+    assert service["linf_vs_reference_max"] < 1e-8
