@@ -9,7 +9,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
+import textwrap
 import time
 import traceback
 
@@ -24,6 +26,10 @@ STREAM_BATCH_EDGES = 8          # fixed batch size (edges) across sizes
 SERVICE_SESSIONS = 3            # concurrent sessions in the service scenario
 SERVICE_BATCHES = 4             # update batches submitted per session
 SERVICE_BATCH_EDGES = 8         # edges per batch
+
+SHARDED_DEVICES = 8             # forced host devices for the sharded scenario
+SHARDED_BATCHES = 6             # DF batches per partitioner
+SHARDED_LOG2_N = 10             # graph size (subprocess recompiles per part.)
 
 
 def _smoke_service() -> dict:
@@ -64,6 +70,78 @@ def _smoke_service() -> dict:
                                   jnp.asarray(ref[:n]))))
     out["linf_vs_reference_max"] = max(errs)
     return out
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import json
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np, jax.numpy as jnp
+    from repro.api import EngineConfig, PageRankSession
+    from repro.core import pagerank as pr
+    from repro.core.delta import random_batch
+    from repro.graphs.generators import rmat
+
+    N_DEV, N_BATCHES, LOG2_N = %(n_dev)d, %(n_batches)d, %(log2_n)d
+    hg0 = rmat(LOG2_N, avg_degree=6, seed=3)
+    r0 = jnp.asarray(pr.numpy_reference(hg0.snapshot(block_size=64),
+                                        iterations=300))
+    batches = []
+    cur = hg0
+    for i in range(N_BATCHES):
+        dels, ins = random_batch(cur, 2e-3, seed=700 + i)
+        batches.append((dels, ins))
+        cur = cur.apply_batch(dels, ins)
+    ref = pr.numpy_reference(cur.snapshot(block_size=64), iterations=300)
+
+    out = {"n_devices": N_DEV, "n": hg0.n, "batches": N_BATCHES,
+           "partitioners": {}}
+    for part in ("contiguous", "hash", "bfs_blocks"):
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(topology="sharded", n_shards=N_DEV,
+                                     partitioner=part), r0=r0)
+        sess.warmup()
+        for dels, ins in batches:
+            assert sess.update(dels, ins).stats.converged
+        rep = sess.report()
+        out["partitioners"][part] = {
+            "edge_cut": round(rep.edge_cut, 4),
+            "p50_ms": round(rep.p50_s * 1e3, 3),
+            "p95_ms": round(rep.p95_s * 1e3, 3),
+            "retraces_post_warmup": rep.retraces_post_warmup,
+            "total_sweeps": rep.total_sweeps,
+            "collective_bytes_per_sweep": rep.collective_bytes_per_sweep,
+            "linf_vs_reference": float(np.max(np.abs(
+                sess.ranks[:sess.n] - ref[:sess.n]))),
+        }
+        sess.close()
+    print("SHARDED-JSON:" + json.dumps(out))
+""")
+
+
+def _smoke_sharded() -> dict:
+    """Sharded-topology scenario: the same DF stream through a
+    ``topology="sharded"`` session on an 8-host-device mesh, once per
+    partitioner.  Runs in a subprocess (the XLA device count is locked at
+    first jax init — the benchmark process must keep its single device)
+    and records per-partitioner edge-cut, p50/p95 update latency,
+    post-warmup retraces (must be 0) and oracle parity."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d" \
+        % SHARDED_DEVICES
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    script = _SHARDED_SCRIPT % {"n_dev": SHARDED_DEVICES,
+                                "n_batches": SHARDED_BATCHES,
+                                "log2_n": SHARDED_LOG2_N}
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError("sharded smoke subprocess failed:\n"
+                           + out.stderr[-3000:])
+    payload = [ln for ln in out.stdout.splitlines()
+               if ln.startswith("SHARDED-JSON:")]
+    return json.loads(payload[-1][len("SHARDED-JSON:"):])
 
 
 def _smoke_stream() -> dict:
@@ -116,9 +194,10 @@ def _smoke_stream() -> dict:
 
 def smoke(out: str = SMOKE_OUT) -> dict:
     """Tiny per-engine perf snapshot: one DF_LF dynamic update per engine,
-    plus the streaming scenario (K delta batches, per-batch latency) and
-    the service scenario (N concurrent sessions behind one batch queue,
-    per-session p50/p95).
+    plus the streaming scenario (K delta batches, per-batch latency), the
+    service scenario (N concurrent sessions behind one batch queue,
+    per-session p50/p95) and the sharded scenario (a topology="sharded"
+    session on an 8-host-device mesh, per-partitioner edge-cut/latency).
 
     Records sweeps, edges_processed, wall time and the frontier-work ratio
     edges_processed / (m · sweeps) — the Pallas engine's ratio ≪ 1 is the
@@ -186,6 +265,7 @@ def smoke(out: str = SMOKE_OUT) -> dict:
 
     report["stream"] = _smoke_stream()
     report["service"] = _smoke_service()
+    report["sharded"] = _smoke_sharded()
 
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

@@ -19,6 +19,9 @@ from typing import Any, Optional
 
 MODES = ("lf", "bb")
 ACTIVE_POLICIES = ("affected", "rc")
+TOPOLOGIES = ("single", "sharded")
+# contribution-exchange variants the sharded session runtime supports
+EXCHANGES = ("full", "bf16", "delta")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +48,17 @@ class EngineConfig:
     max_iterations: sweep budget before declaring non-convergence.
     faults:         optional :class:`repro.core.faults.FaultPlan`.
     dtype:          rank dtype (``None`` → f64 when x64 is enabled else f32).
+    topology:       ``"single"`` (one device — every engine) or
+                    ``"sharded"`` (vertex-partitioned over a device mesh;
+                    resolves the ``distributed`` engine).
+    n_shards:       mesh size under ``topology="sharded"`` (``None`` → all
+                    visible devices); rejected under ``"single"``.
+    partitioner:    vertex→shard map: ``"contiguous"`` / ``"hash"`` /
+                    ``"bfs_blocks"`` (:mod:`repro.graphs.partition`);
+                    observable via ``session.report().edge_cut``.
+    exchange:       per-sweep contribution collective: ``"full"`` /
+                    ``"bf16"`` (half wire bytes) / ``"delta"`` (sparse
+                    frontier-sized gather with full fallback).
     """
 
     alpha: float = 0.85
@@ -59,6 +73,10 @@ class EngineConfig:
     max_iterations: int = 500
     faults: Optional[Any] = None
     dtype: Optional[Any] = None
+    topology: str = "single"
+    n_shards: Optional[int] = None
+    partitioner: str = "contiguous"
+    exchange: str = "full"
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -80,19 +98,81 @@ class EngineConfig:
                                                   "device_tables"):
             raise ValueError(
                 "faults must be a FaultPlan (needs .device_tables())")
+        # -- topology axis ----------------------------------------------------
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"topology={self.topology!r} invalid; "
+                             f"expected one of {TOPOLOGIES}")
+        from repro.graphs.partition import PARTITIONERS
+        if self.partitioner not in PARTITIONERS:
+            raise ValueError(f"partitioner={self.partitioner!r} invalid; "
+                             f"expected one of {PARTITIONERS}")
+        if self.exchange not in EXCHANGES:
+            raise ValueError(f"exchange={self.exchange!r} invalid; "
+                             f"expected one of {EXCHANGES}")
+        if self.n_shards is not None and int(self.n_shards) <= 0:
+            raise ValueError(f"n_shards={self.n_shards} must be > 0 "
+                             "(or None for all visible devices)")
+        if self.topology == "single":
+            if self.n_shards is not None:
+                raise ValueError(
+                    "n_shards is only meaningful with topology='sharded' "
+                    f"(got topology='single', n_shards={self.n_shards})")
+            if self.engine == "distributed":
+                raise ValueError(
+                    "engine='distributed' requires topology='sharded' — "
+                    "topology is the config axis that selects it")
+        else:
+            if self.engine not in (None, "distributed"):
+                raise ValueError(
+                    f"topology='sharded' resolves engine='distributed'; "
+                    f"engine={self.engine!r} cannot run sharded (leave "
+                    "engine=None)")
+            if self.faults is not None:
+                raise ValueError(
+                    "fault simulation is not supported with "
+                    "topology='sharded' (stragglers are the model: stale "
+                    "contributions, no crash tables) — use a single-device "
+                    "engine with a FaultPlan")
+            import jax
+            avail = len(jax.devices())
+            ns = int(self.n_shards) if self.n_shards else avail
+            if ns > avail:
+                raise ValueError(
+                    f"n_shards={ns} exceeds the {avail} visible device(s) — "
+                    "for host testing set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N")
         # resolve engine + tile backend now: this validates explicit values
         # AND the REPRO_ENGINE / REPRO_TILE_BACKEND env overrides eagerly —
         # a bad value fails at construction, not mid-run
         from repro.api import registry
-        registry.resolve(self.engine)
+        registry.resolve(self._engine_for_resolution())
         registry.resolve_backend(self.backend)
+
+    def _engine_for_resolution(self) -> Optional[str]:
+        """Topology-aware engine name: sharded configs always resolve the
+        ``distributed`` engine (env/platform defaults apply to ``single``)."""
+        if self.topology == "sharded":
+            return self.engine or "distributed"
+        return self.engine
 
     # -- resolution helpers --------------------------------------------------
     @property
     def resolved_engine(self) -> str:
-        """Engine name after default/env resolution (registry-validated)."""
+        """Engine name after topology/default/env resolution
+        (registry-validated)."""
         from repro.api import registry
-        return registry.resolve(self.engine).name
+        return registry.resolve(self._engine_for_resolution()).name
+
+    @property
+    def resolved_n_shards(self) -> Optional[int]:
+        """Mesh size under ``topology="sharded"`` (``None`` → all visible
+        devices); ``None`` for single-device configs."""
+        if self.topology != "sharded":
+            return None
+        if self.n_shards is not None:
+            return int(self.n_shards)
+        import jax
+        return len(jax.devices())
 
     @property
     def resolved_backend(self) -> str:

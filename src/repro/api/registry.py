@@ -31,7 +31,11 @@ class Engine(Protocol):
     pallas engine's incremental operands (engines that do not consume them
     must reject non-None values); ``interpret`` is the pallas engine's
     kernel-interpreter flag (``None`` → platform default; other engines
-    ignore it).
+    ignore it); ``shards`` carries the distributed engine's topology
+    request (a :class:`repro.core.distributed.ShardSpec` — engines that do
+    not consume it must reject non-None values via
+    :func:`reject_shard_spec`).  Callers only pass the operand kwargs they
+    actually set, so adapters predating a kwarg keep working.
     """
 
     name: str
@@ -40,14 +44,15 @@ class Engine(Protocol):
             alpha: float, tau: float, tau_f: Optional[float],
             max_iterations: int, faults, tile: int, active_policy: str,
             mat=None, aux=None, backend: Optional[str] = None,
-            interpret: Optional[bool] = None):
+            interpret: Optional[bool] = None, shards=None):
         ...
 
 
 _REGISTRY: Dict[str, Engine] = {}
 _BUILTINS = ("repro.core.pagerank",        # dense
              "repro.core.blocked",         # blocked
-             "repro.core.pallas_engine")   # pallas
+             "repro.core.pallas_engine",   # pallas
+             "repro.core.distributed")     # distributed (sharded)
 _builtins_loaded = False
 
 
@@ -135,3 +140,13 @@ def reject_tile_operands(engine_name: str, mat, aux,
             raise ValueError(
                 f"{name} is only consumed by engine='pallas' "
                 f"(resolved engine: {engine_name!r})")
+
+
+def reject_shard_spec(engine_name: str, shards) -> None:
+    """Shared guard for engines that do not consume the distributed
+    engine's topology operand (``ShardSpec``)."""
+    if shards is not None:
+        raise ValueError(
+            "shards is only consumed by engine='distributed' "
+            f"(resolved engine: {engine_name!r}) — set "
+            "EngineConfig(topology='sharded') to route through it")

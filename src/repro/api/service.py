@@ -64,10 +64,12 @@ class PageRankService:
                  warmup: bool = True):
         if not graphs:
             raise ValueError("need at least one graph or session")
-        self.sessions: List[PageRankSession] = [
+        self.sessions: List[Optional[PageRankSession]] = [
             g if isinstance(g, PageRankSession)
             else PageRankSession.from_graph(g, config=config)
             for g in graphs]
+        for s in self.sessions:
+            s._service = self       # close() unregisters through this
         if warmup:
             for s in self.sessions:
                 s.warmup()
@@ -79,12 +81,33 @@ class PageRankService:
     def slots(self) -> int:
         return len(self.sessions)
 
+    # -- placement -----------------------------------------------------------
+    def placements(self) -> Dict[int, Tuple[int, ...]]:
+        """Device footprint declared by each live session (sharded sessions
+        span their mesh; single-device sessions one device).  The queue
+        still schedules one batch per slot per tick — the placement map is
+        what an external scheduler packs against."""
+        return {i: s.device_footprint
+                for i, s in enumerate(self.sessions) if s is not None}
+
+    def _detach(self, sess: PageRankSession) -> None:
+        """Unregister a closing session: its slot empties and its queued
+        batches are dropped (slot indices of other streams are stable)."""
+        for i, s in enumerate(self.sessions):
+            if s is sess:
+                self.sessions[i] = None
+                self.queue = [r for r in self.queue if r.stream != i]
+                return
+
     # -- queue management ----------------------------------------------------
     def submit(self, stream: int, deletions, insertions) -> int:
         """Enqueue one batch for session ``stream``; returns its uid."""
         if not (0 <= stream < self.slots):
             raise ValueError(f"stream {stream} out of range "
                              f"(service has {self.slots} sessions)")
+        if self.sessions[stream] is None:
+            raise ValueError(f"stream {stream} is closed (its session was "
+                             "close()d and unregistered)")
         self._uid += 1
         self.queue.append(UpdateRequest(
             uid=self._uid, stream=stream,
@@ -136,22 +159,34 @@ class PageRankService:
         so the smoke bench can serialize it directly."""
         per_session = []
         for i, s in enumerate(self.sessions):
+            if s is None:
+                per_session.append({"stream": i, "closed": True})
+                continue
             rep = s.report()
-            per_session.append({
+            row = {
                 "stream": i,
                 "n": s.n,
                 "engine": rep.engine,
+                "devices": list(s.device_footprint),
                 "n_updates": rep.n_updates,
                 "p50_ms": round(rep.p50_s * 1e3, 3),
                 "p95_ms": round(rep.p95_s * 1e3, 3),
                 "retraces_post_warmup": rep.retraces_post_warmup,
                 "total_sweeps": rep.total_sweeps,
                 "queries_served": rep.queries_served,
-            })
+            }
+            if rep.topology == "sharded":
+                row["topology"] = rep.topology
+                row["n_shards"] = rep.n_shards
+                row["partitioner"] = rep.partitioner
+                row["edge_cut"] = rep.edge_cut
+            per_session.append(row)
         lat = [r.latency_s for r in self.finished]
         waits = [r.wait_s for r in self.finished]
         return {
             "n_sessions": self.slots,
+            "placements": {str(i): list(fp)
+                           for i, fp in self.placements().items()},
             "requests_done": len(self.finished),
             "requests_queued": len(self.queue),
             "request_p50_ms": (round(float(np.percentile(lat, 50)) * 1e3, 3)

@@ -14,7 +14,7 @@ owns all of that behind one object::
     twin = sess.fork()              # what-if branch sharing the tile pool
     sess.report()                   # latency / retrace / work statistics
 
-Two operating modes, picked at construction:
+Three operating modes, picked at construction:
 
 * **stream mode** (``from_graph`` + the pallas engine): the PR-2 streaming
   machinery lives here — the graph is snapshotted **once**, the
@@ -30,8 +30,21 @@ Two operating modes, picked at construction:
   over exactly this path (bit-for-bit parity,
   ``tests/test_api_session.py``).
 
+* **sharded mode** (``EngineConfig(topology="sharded")``): the vertex set
+  is partitioned over an ``n_shards`` device mesh
+  (:mod:`repro.graphs.partition`) and updates route each delta batch to
+  its owning shards through the incremental
+  :class:`~repro.core.distributed.DistRuntime` — same O(batch),
+  recompile-free contract as stream mode, with ranks sharded across
+  devices.  The topology is invisible through the public surface:
+  ``update``/``query``/``top_k``/``fork``/``report`` behave identically
+  (``report`` additionally exposes ``edge_cut`` and the per-sweep
+  collective-bytes model).
+
 The vertex set (and hence the block grid) is fixed for the lifetime of a
-session; growing past it requires a new session.
+session; growing past it requires a new session.  ``close()`` (or the
+context-manager form) releases device buffers and unregisters from any
+service.
 """
 from __future__ import annotations
 
@@ -46,6 +59,7 @@ import jax.numpy as jnp
 
 from repro.api import registry
 from repro.api.config import EngineConfig
+from repro.core import distributed as dist
 from repro.core import faults as flt
 from repro.core import frontier as fr
 from repro.core import pallas_engine as pe
@@ -56,6 +70,7 @@ from repro.core.graph import (GraphSnapshot, HostGraph, initial_ranks,
 from repro.core.incremental import (IncrementalPullMatrix, MatrixAux,
                                     effective_batch)
 from repro.core.pagerank import PagerankResult
+from repro.graphs import partition as gpart
 from repro.kernels.block_spmv import ops
 
 VARIANTS = ("static", "nd", "dt", "df")
@@ -159,6 +174,12 @@ class SessionReport:
     total_edges_processed: int
     queries_served: int
     wall_times_s: List[float]
+    # -- topology (sharded sessions; None/"single" otherwise) ---------------
+    topology: str = "single"
+    n_shards: Optional[int] = None
+    partitioner: Optional[str] = None
+    edge_cut: Optional[float] = None          # realized cross-shard edges
+    collective_bytes_per_sweep: Optional[float] = None  # analytic wire model
 
 
 class PageRankSession:
@@ -181,7 +202,8 @@ class PageRankSession:
             raise ValueError("need a HostGraph (from_graph) or a "
                              "GraphSnapshot (from_snapshot)")
         self.config = config
-        self.engine = registry.resolve(config.engine)
+        self._sharded = config.topology == "sharded"
+        self.engine = registry.resolve(config._engine_for_resolution())
         self.engine_name = self.engine.name
         self.hg = hg
         self._dtype = config.resolved_dtype()
@@ -191,6 +213,9 @@ class PageRankSession:
                         if self.engine_name == "pallas" else config.backend)
         self._stream = (self.engine_name == "pallas" and hg is not None
                         and g is None)
+        self._closed = False
+        self._service = None          # backref set by PageRankService
+        self._shard_spec: Optional[dist.ShardSpec] = None
         self._history: List[StreamBatchResult] = []
         self._warm_idx: Optional[int] = None
         self._queries = 0
@@ -201,7 +226,9 @@ class PageRankSession:
         self._g_prev: Optional[GraphSnapshot] = None
         self._r_prev = None
 
-        if self._stream:
+        if self._sharded:
+            self._init_sharded(g, r0)
+        elif self._stream:
             self._init_stream(r0)
         else:
             self._init_snapshot(g, r0)
@@ -285,6 +312,57 @@ class PageRankSession:
             # R0.dtype (an f32 rank vector must stay f32)
             self.R = pad_ranks(g, jnp.asarray(r0))
 
+    def _init_sharded(self, g: Optional[GraphSnapshot], r0) -> None:
+        """Sharded mode (``topology="sharded"``): partition the vertex set
+        over an ``n_shards`` device mesh with the configured partitioner
+        and hand the graph to the incremental
+        :class:`repro.core.distributed.DistRuntime`.  Ranks live
+        device-resident in the partitioner-relabeled vertex space; every
+        public read (``query``/``top_k``/``ranks``) translates back, so the
+        topology is invisible to callers."""
+        cfg = self.config
+        if self.hg is None:
+            # from_snapshot without hg: recover the host edge set (the
+            # sharded runtime is host-graph-based; self-loops re-added by it)
+            src, dst = g.in_edges_host()
+            self.hg = HostGraph(g.n, np.stack([src, dst], 1))
+        self.g = None
+        self.inc = None
+        n_shards = cfg.resolved_n_shards
+        self._shard_spec = dist.ShardSpec(
+            n_shards=n_shards, partitioner=cfg.partitioner,
+            exchange=cfg.exchange)
+        order, inv, _ = gpart.make_partition(self.hg, n_shards,
+                                             cfg.partitioner)
+        self._order, self._inv = order, inv
+        self._hg_rel, _ = gpart.relabel(self.hg, order)
+        self._hg_rel_prev: Optional[HostGraph] = None
+        self._last_batch_rel = None
+        self._x_full = self._x_delta = self._x_sweeps = 0
+        devices = np.asarray(jax.devices()[:n_shards])
+        self._mesh = dist.Mesh(devices, ("shards",))
+        self.runtime = dist.DistRuntime(
+            self._hg_rel, self._mesh, axis="shards", alpha=cfg.alpha,
+            tau=cfg.tau, tau_f=cfg.resolved_tau_f(expand=True),
+            exchange=cfg.exchange, dtype=self._dtype)
+        self.n, self.n_pad = self.hg.n, self.runtime.n_pad
+        self.block_size, self.n_rb = cfg.block_size, 0
+        self.valid = self.runtime.valid
+        # realized shard of vertex v is its relabeled position's contiguous
+        # share — the edge-cut this layout actually pays.  Counted once
+        # here (O(m)), then maintained in O(batch) per update.
+        self._cut_edges = int(self._crossing(self._hg_rel.edges))
+        if r0 is None:
+            R0 = jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype)
+            R, _ = self.runtime.drive(R0, self.valid, expand=False,
+                                      max_sweeps=cfg.max_iterations)
+            self.R = R
+        else:
+            r0h = np.asarray(r0)
+            r_rel = np.zeros(self.n_pad, r0h.dtype)
+            r_rel[:self.n] = r0h[order]
+            self.R = jnp.asarray(r_rel, self._dtype)
+
     # -- the snapshot-level solve (registry-dispatched) ----------------------
     def _converge(self, R0, affected0, *, expand: bool,
                   mode: Optional[str] = None, mat=None, aux=None,
@@ -338,6 +416,7 @@ class PageRankSession:
         path), ``"dt"`` (reachability marking), ``"nd"`` (warm start, all
         affected) or ``"static"`` (cold start, all affected).  In stream
         mode everything except the ``dt`` marking stays snapshot-free."""
+        self._ensure_open()
         if variant not in VARIANTS:
             raise ValueError(f"variant={variant!r} invalid; "
                              f"expected one of {VARIANTS}")
@@ -346,12 +425,97 @@ class PageRankSession:
                 "this session wraps a bare snapshot (from_snapshot without "
                 "hg=); build it with PageRankSession.from_graph to stream "
                 "updates")
-        if self._stream:
+        if self._sharded:
+            res = self._update_sharded(deletions, insertions, variant)
+        elif self._stream:
             res = self._update_stream(deletions, insertions, variant)
         else:
             res = self._update_snapshot(deletions, insertions, variant)
         self._history.append(res)
         return res
+
+    def _crossing(self, edges_rel: np.ndarray) -> int:
+        """Count edges (in relabeled coordinates) whose endpoints land on
+        different shards under the contiguous 1-D layout."""
+        if len(edges_rel) == 0:
+            return 0
+        n_loc = self.runtime.n_loc
+        return int((edges_rel[:, 0] // n_loc
+                    != edges_rel[:, 1] // n_loc).sum())
+
+    def _sharded_affected(self, variant: str, hg_rel_prev: HostGraph,
+                          dels_rel: np.ndarray, ins_rel: np.ndarray
+                          ) -> jnp.ndarray:
+        """Initial affected marking for one sharded batch, in relabeled
+        space.  ``df`` seeds from the host adjacency in O(batch · deg) and
+        uploads only the bucketed index list; ``dt`` walks reachability on
+        throwaway snapshots (the what-if path, O(m))."""
+        if variant == "df":
+            sources = np.concatenate([dels_rel[:, 0], ins_rel[:, 0]])
+            idx = dist.df_seed_indices(hg_rel_prev, self._hg_rel, sources)
+            return self.runtime.mask_from_indices(idx)
+        if variant == "dt":
+            bs = self.config.block_size
+            g_prev = hg_rel_prev.snapshot(block_size=bs)
+            g_new = self._hg_rel.snapshot(block_size=bs)
+            batch_dev = fr.batch_to_device(g_new, dels_rel, ins_rel)
+            aff = np.asarray(fr.dt_affected(g_prev, g_new, batch_dev))
+            return self.runtime.mask_from_indices(np.nonzero(
+                aff[:self.n])[0])
+        return self.valid        # nd / static
+
+    def _update_sharded(self, deletions, insertions, variant: str = "df"
+                        ) -> StreamBatchResult:
+        """Sharded step: translate the batch into the partitioner-relabeled
+        space, route it to its owning shards (O(batch) slab/degree
+        scatters), seed the frontier, and re-enter the cached compiled
+        sweep.  Ranks never leave the devices."""
+        t0 = time.perf_counter()
+        cfg = self.config
+        cache0 = self.runtime.cache_size()
+        dels = np.asarray(deletions, np.int64).reshape(-1, 2)
+        ins = np.asarray(insertions, np.int64).reshape(-1, 2)
+        dels_rel = (self._inv[dels] if len(dels)
+                    else np.zeros((0, 2), np.int64))
+        ins_rel = (self._inv[ins] if len(ins)
+                   else np.zeros((0, 2), np.int64))
+        hg_rel_prev = self._hg_rel
+        dels_eff, ins_eff = effective_batch(hg_rel_prev, dels_rel, ins_rel)
+        self._hg_prev, self._g_prev = self.hg, None
+        self._hg_rel_prev = hg_rel_prev
+        self._last_batch = (dels, ins)
+        self._last_batch_rel = (dels_rel, ins_rel)
+        self._r_prev = self.R
+        self.hg = self.hg.apply_batch(dels, ins)
+        self._hg_rel = hg_rel_prev.apply_batch(dels_rel, ins_rel)
+        self.runtime.apply_batch(dels_eff, ins_eff)
+        self._cut_edges += int(self._crossing(ins_eff)
+                               - self._crossing(dels_eff))
+
+        affected = self._sharded_affected(variant, hg_rel_prev,
+                                          dels_rel, ins_rel)
+        if variant == "static":
+            R0 = jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype)
+        else:
+            R0 = self.R
+        R, dstats = self.runtime.drive(
+            R0, affected, expand=(variant == "df"),
+            max_sweeps=cfg.max_iterations)
+        self.R = R
+        self._x_full += dstats.full_exchanges
+        self._x_delta += dstats.delta_exchanges
+        self._x_sweeps += dstats.sweeps
+        stats = SweepStats(sweeps=dstats.sweeps, iterations=dstats.sweeps,
+                           edges_processed=dstats.edges_processed,
+                           converged=dstats.converged)
+        cache1 = self.runtime.cache_size()
+        return StreamBatchResult(
+            ranks=R, stats=stats,
+            wall_time_s=time.perf_counter() - t0,
+            batch_edges=len(dels) + len(ins),
+            driver_cache_size=cache1,
+            driver_retraces=(cache1 - cache0
+                             if cache0 >= 0 and cache1 >= 0 else -1))
 
     def _update_stream(self, deletions, insertions, variant: str = "df"
                        ) -> StreamBatchResult:
@@ -470,9 +634,12 @@ class PageRankSession:
         ``"df"`` *replay the last update batch* with that variant's marking
         from the pre-batch ranks — the what-if tool for comparing variants
         on the same step (requires at least one prior ``update``)."""
+        self._ensure_open()
         if variant not in VARIANTS:
             raise ValueError(f"variant={variant!r} invalid; "
                              f"expected one of {VARIANTS}")
+        if self._sharded:
+            return self._recompute_sharded(variant)
         if variant in ("static", "nd"):
             R0 = (self.R if variant == "nd" else
                   jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype))
@@ -506,33 +673,151 @@ class PageRankSession:
         return self._converge(R0, affected, expand=(variant == "df"),
                               g=g_cur, mat=mat, aux=aux)
 
+    def _recompute_sharded(self, variant: str) -> PagerankResult:
+        """Sharded re-solve through the cached compiled sweep — same
+        variant semantics as single-device recompute."""
+        cfg = self.config
+        t0 = time.perf_counter()
+        if variant in ("static", "nd"):
+            R0 = (self.R if variant == "nd" else
+                  jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype))
+            affected, expand = self.valid, False
+        else:
+            if self._last_batch_rel is None:
+                raise ValueError(
+                    f"recompute({variant!r}) replays the last update batch, "
+                    "but no batch has been applied yet — call update() "
+                    "first or use variant='static'/'nd'")
+            dels_rel, ins_rel = self._last_batch_rel
+            affected = self._sharded_affected(variant, self._hg_rel_prev,
+                                              dels_rel, ins_rel)
+            R0, expand = self._r_prev, (variant == "df")
+        R, dstats = self.runtime.drive(R0, affected, expand=expand,
+                                       max_sweeps=cfg.max_iterations)
+        self.R = R
+        self._x_full += dstats.full_exchanges
+        self._x_delta += dstats.delta_exchanges
+        self._x_sweeps += dstats.sweeps
+        stats = SweepStats(sweeps=dstats.sweeps, iterations=dstats.sweeps,
+                           edges_processed=dstats.edges_processed,
+                           converged=dstats.converged)
+        return PagerankResult(ranks=R, stats=stats,
+                              wall_time_s=time.perf_counter() - t0)
+
     # -- serving reads (device-resident, no full-rank host transfer) ---------
-    def query(self, vertices: Union[Sequence[int], np.ndarray]
+    def _vertex_ids(self, vertices) -> np.ndarray:
+        """Validate a vertex-id argument (Python int, sequence, or numpy
+        array) into a flat int64 array, rejecting non-integer dtypes and
+        negative/out-of-range ids with a clear error."""
+        arr = np.asarray(vertices)
+        if arr.size == 0:       # empty id lists are valid (empty result) —
+            return np.zeros(0, np.int64)  # note np.asarray([]) is float64
+        if arr.dtype == object or not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"vertex ids must be integers, got dtype {arr.dtype} "
+                f"(value: {vertices!r})")
+        idx = arr.reshape(-1).astype(np.int64)
+        bad = (idx < 0) | (idx >= self.n)
+        if bad.any():
+            raise ValueError(
+                f"vertex id(s) {idx[bad][:8].tolist()} out of range for a "
+                f"graph with {self.n} vertices (valid ids: 0..{self.n - 1})")
+        return idx
+
+    def query(self, vertices: Union[int, Sequence[int], np.ndarray]
               ) -> np.ndarray:
         """Ranks of the given vertices: one device gather, only ``len(
-        vertices)`` values cross to the host.  Out-of-range ids read 0."""
-        idx = jnp.asarray(np.asarray(vertices, np.int64).reshape(-1))
-        safe = jnp.clip(idx, 0, self.n_pad - 1)
-        vals = jnp.where((idx >= 0) & (idx < self.n_pad), self.R[safe], 0)
+        vertices)`` values cross to the host.  Accepts a Python int, a
+        list, or an integer array; negative or out-of-range ids raise
+        ``ValueError``.  Topology-transparent: sharded sessions translate
+        through the partitioner relabeling."""
+        self._ensure_open()
+        idx = self._vertex_ids(vertices)
+        if self._sharded:
+            idx = self._inv[idx]
+        vals = self.R[jnp.asarray(idx)]
         self._queries += int(idx.shape[0])
         return np.asarray(vals)
 
     def top_k(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
         """(values, vertex ids) of the k highest-ranked vertices — computed
         device-side, only 2k scalars transferred."""
-        k = int(min(k, self.n))
-        if k <= 0:
+        self._ensure_open()
+        if not isinstance(k, (int, np.integer)):
+            raise ValueError(
+                f"k must be an integer, got {type(k).__name__} ({k!r})")
+        if k < 1:
             raise ValueError(f"k={k} must be >= 1")
+        k = int(min(k, self.n))
         masked = jnp.where(self.valid, self.R, -jnp.inf)
         vals, idx = jax.lax.top_k(masked, k)
         self._queries += k
-        return np.asarray(vals), np.asarray(idx)
+        idx = np.asarray(idx)
+        if self._sharded:
+            idx = self._order[idx]          # back to caller vertex ids
+        return np.asarray(vals), idx
 
     @property
     def ranks(self) -> np.ndarray:
-        """Full host copy of the rank vector (the expensive full read —
-        prefer :meth:`query` / :meth:`top_k` for serving)."""
-        return np.asarray(self.R)
+        """Full host copy of the rank vector in caller vertex order (the
+        expensive full read — prefer :meth:`query` / :meth:`top_k` for
+        serving)."""
+        self._ensure_open()
+        r = np.asarray(self.R)
+        if self._sharded:
+            out = np.zeros(self.n_pad, r.dtype)
+            out[self._order] = r[:self.n]
+            return out
+        return r
+
+    # -- lifecycle end -------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def device_footprint(self) -> Tuple[int, ...]:
+        """Ids of the devices this session's state occupies (sharded
+        sessions span their mesh; closed sessions hold nothing)."""
+        if self._closed:
+            return ()
+        if self._sharded:
+            return tuple(d.id for d in self._mesh.devices.flat)
+        try:
+            return tuple(sorted(d.id for d in self.R.devices()))
+        except Exception:           # pragma: no cover - non-jax R
+            return (0,)
+
+    def _ensure_open(self) -> None:
+        if self._closed:
+            raise ValueError("session is closed — open a new "
+                             "PageRankSession")
+
+    def close(self) -> None:
+        """End the session: unregister from any :class:`PageRankService`
+        and drop every device buffer reference (rank vector, tile pool /
+        operand mirrors, sharded slabs) so long-lived multi-session
+        processes reclaim device memory.  Idempotent; forked twins keep
+        their own references and are unaffected."""
+        if self._closed:
+            return
+        self._closed = True
+        svc, self._service = self._service, None
+        if svc is not None:
+            svc._detach(self)
+        for attr in ("R", "inc", "runtime", "g", "valid", "_out_deg",
+                     "_rb_in", "_rb_out", "_bmat", "_fault_tables",
+                     "_r_prev"):
+            if hasattr(self, attr):
+                setattr(self, attr, None)
+
+    def __enter__(self) -> "PageRankSession":
+        self._ensure_open()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
     # -- warmup / reporting --------------------------------------------------
     def warmup(self) -> None:
@@ -543,6 +828,11 @@ class PageRankSession:
         seed and the fused driver.  Batches larger than the base bucket
         still pay one compile per new bucket they reach.  Snapshot-mode
         sessions are already warm from their initial solve."""
+        self._ensure_open()
+        if self._sharded:
+            self.runtime.warmup(self.R)
+            self._warm_idx = len(self._history)
+            return
         if self._stream:
             z = np.zeros(1, np.int64)
             self.inc.mat = ops.apply_delta(self.inc.mat, z, z, np.zeros(1))
@@ -565,12 +855,22 @@ class PageRankSession:
         sharing one process don't count each other's compiles."""
         walls = [r.wall_time_s for r in self._history]
         growth = [r.driver_retraces for r in self._history]
-        if (self.engine_name != "pallas" or not growth
+        if (self.engine_name not in ("pallas", "distributed") or not growth
                 or any(gr < 0 for gr in growth)):
             retraces = -1
         else:
             start = self._warm_idx if self._warm_idx is not None else 1
             retraces = sum(growth[start:])
+        spec = self._shard_spec
+        wire = None
+        if spec is not None:
+            frac_full = (self._x_full / max(self._x_sweeps, 1)
+                         if spec.exchange == "delta" else 1.0)
+            wire = dist.collective_bytes_per_sweep(
+                n_pad=self.n_pad, n_dev=spec.n_shards,
+                exchange=spec.exchange, rank_bytes=self._dtype.itemsize,
+                delta_capacity=spec.delta_capacity, expand=True,
+                frac_full=frac_full)
         return SessionReport(
             engine=self.engine_name,
             backend=self.backend if self.engine_name == "pallas" else None,
@@ -583,7 +883,13 @@ class PageRankSession:
             total_edges_processed=sum(r.stats.edges_processed
                                       for r in self._history),
             queries_served=self._queries,
-            wall_times_s=walls)
+            wall_times_s=walls,
+            topology=self.config.topology,
+            n_shards=spec.n_shards if spec is not None else None,
+            partitioner=spec.partitioner if spec is not None else None,
+            edge_cut=(self._cut_edges / max(self.hg.m, 1)
+                      if spec is not None else None),
+            collective_bytes_per_sweep=wire)
 
     # -- what-if branching ---------------------------------------------------
     def fork(self) -> "PageRankSession":
@@ -592,11 +898,13 @@ class PageRankSession:
         updates diverge them (jax arrays are immutable; deltas patch
         functionally).  Host-side mutable state (the aux twins, history,
         replay state) is copied so the branches are fully independent."""
+        self._ensure_open()
         new = object.__new__(PageRankSession)
         new.__dict__.update(self.__dict__)
         new._history = []
         new._warm_idx = 0 if self._warm_idx is not None else None
         new._queries = 0
+        new._service = None       # forks are not registered with a service
         if self.inc is not None:
             aux = self.inc.aux
             new.inc = IncrementalPullMatrix(
@@ -604,4 +912,6 @@ class PageRankSession:
                 MatrixAux(bmat=aux.bmat.copy(), rb_in=aux.rb_in.copy(),
                           rb_out=aux.rb_out.copy())
                 if aux is not None else None)
+        if self._sharded:
+            new.runtime = self.runtime.fork()
         return new

@@ -321,9 +321,11 @@ class BlockedEngine:
 
     def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
             max_iterations, faults, tile, active_policy,
-            mat=None, aux=None, backend=None, interpret=None):
-        from repro.api.registry import reject_tile_operands
+            mat=None, aux=None, backend=None, interpret=None, shards=None):
+        from repro.api.registry import (reject_shard_spec,
+                                        reject_tile_operands)
         reject_tile_operands(self.name, mat, aux, backend)
+        reject_shard_spec(self.name, shards)
         R, stats = run_blocked(
             g, R0, affected0, mode=mode, expand=expand, alpha=alpha,
             tau=tau, tau_f=tau_f, max_iterations=max_iterations, tile=tile,

@@ -263,9 +263,11 @@ class DenseEngine:
 
     def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
             max_iterations, faults, tile, active_policy,
-            mat=None, aux=None, backend=None, interpret=None):
-        from repro.api.registry import reject_tile_operands
+            mat=None, aux=None, backend=None, interpret=None, shards=None):
+        from repro.api.registry import (reject_shard_spec,
+                                        reject_tile_operands)
         reject_tile_operands(self.name, mat, aux, backend)
+        reject_shard_spec(self.name, shards)
         if mode == "bb":
             R, iters, conv = dense_jacobi(
                 g, R0, affected0, expand=expand, alpha=alpha, tau=tau,

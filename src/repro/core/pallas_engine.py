@@ -322,7 +322,9 @@ class PallasEngine:
 
     def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
             max_iterations, faults, tile, active_policy,
-            mat=None, aux=None, backend=None, interpret=None):
+            mat=None, aux=None, backend=None, interpret=None, shards=None):
+        from repro.api.registry import reject_shard_spec
+        reject_shard_spec(self.name, shards)
         del tile    # blocked-engine knob; the fused driver launches tiles
         R, stats = run_pallas(
             g, R0, affected0, mode=mode, expand=expand, alpha=alpha,

@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.core.graph import HostGraph
 
+PARTITIONERS = ("contiguous", "hash", "bfs_blocks")
+
 
 def contiguous(n: int, n_dev: int) -> np.ndarray:
     n_loc = -(-n // n_dev)
@@ -72,6 +74,35 @@ def bfs_blocks(hg: HostGraph, n_dev: int) -> np.ndarray:
     owner = np.empty(hg.n, dtype=np.int64)
     owner[order] = contiguous(hg.n, n_dev)
     return owner
+
+
+def make_partition(hg: HostGraph, n_dev: int, kind: str = "contiguous",
+                   *, seed: int = 0x9E3779B9
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Resolve a partitioner name to ``(order, inv, owner)``.
+
+    ``owner[old_id]`` is the device the partitioner *requests*;
+    ``order`` (``order[new_id] = old_id``) relabels vertices so requested
+    owners are grouped contiguously (stable within a device), and ``inv``
+    is its inverse (``inv[old_id] = new_id``).  The contiguous 1-D layout
+    downstream assigns equal ``ceil(n/n_dev)`` shares, so the *realized*
+    owner of vertex ``v`` is ``inv[v] // n_loc`` — identical to the request
+    for balanced partitioners, spilling a few boundary vertices otherwise
+    (e.g. ``hash``).
+    """
+    if kind == "contiguous":
+        owner = contiguous(hg.n, n_dev)
+    elif kind == "hash":
+        owner = hashed(hg.n, n_dev, seed=seed)
+    elif kind == "bfs_blocks":
+        owner = bfs_blocks(hg, n_dev)
+    else:
+        raise ValueError(f"unknown partitioner {kind!r}; "
+                         f"expected one of {PARTITIONERS}")
+    order = np.argsort(owner, kind="stable")
+    inv = np.empty(hg.n, dtype=np.int64)
+    inv[order] = np.arange(hg.n)
+    return order, inv, owner
 
 
 def edge_cut(hg: HostGraph, owner: np.ndarray) -> float:

@@ -341,3 +341,203 @@ class TestService:
             warmup=False)
         with pytest.raises(ValueError, match="out of range"):
             svc.submit(3, np.zeros((0, 2)), np.zeros((0, 2)))
+
+
+# ---------------------------------------------------------------------------
+# topology axis: config validation + in-process sharded parity (1-shard mesh)
+# ---------------------------------------------------------------------------
+
+class TestTopologyConfig:
+    @pytest.mark.parametrize("kw", [
+        dict(topology="nope"),
+        dict(topology="sharded", n_shards=0),
+        dict(topology="sharded", n_shards=-2),
+        dict(partitioner="metis"),
+        dict(exchange="ring"),          # rebuild-only, not a session axis
+        dict(exchange="nope"),
+        dict(n_shards=4),               # needs topology="sharded"
+        dict(engine="distributed"),     # topology selects the engine
+        dict(topology="sharded", engine="pallas"),
+    ])
+    def test_bad_topology_combos_rejected(self, kw):
+        with pytest.raises(ValueError):
+            EngineConfig(**kw)
+
+    def test_oversubscribed_mesh_rejected(self):
+        import jax
+        too_many = len(jax.devices()) + 1
+        with pytest.raises(ValueError, match="exceeds"):
+            EngineConfig(topology="sharded", n_shards=too_many)
+
+    def test_sharded_rejects_fault_plans(self):
+        # the sharded sweep has no crash tables (stragglers are the
+        # model) — rejected at construction, not silently ignored
+        from repro.core import faults as flt
+        with pytest.raises(ValueError, match="fault simulation"):
+            EngineConfig(topology="sharded", n_shards=1,
+                         faults=flt.NO_FAULTS)
+
+    def test_sharded_resolves_distributed_engine(self):
+        cfg = EngineConfig(topology="sharded", n_shards=1)
+        assert cfg.resolved_engine == "distributed"
+        assert cfg.resolved_n_shards == 1
+        assert EngineConfig().resolved_n_shards is None
+        assert "distributed" in registry.names()
+
+    def test_non_distributed_engines_reject_shard_spec(self, dyn):
+        from repro.core.distributed import ShardSpec
+        _, g0, _, _, _, r_prev, _, _ = dyn
+        eng = registry.resolve("blocked")
+        with pytest.raises(ValueError, match="only consumed by "
+                                             "engine='distributed'"):
+            eng.run(g0, r_prev, g0.vertex_valid, mode="lf", expand=False,
+                    alpha=0.85, tau=1e-10, tau_f=None, max_iterations=5,
+                    faults=None, tile=512, active_policy="affected",
+                    shards=ShardSpec(n_shards=1))
+
+
+class TestShardedSession:
+    """Topology-transparent session over a 1-shard mesh (the in-process
+    coverage; the 8-device parity suite lives in
+    tests/test_sharded_session.py behind the `multidevice` marker)."""
+
+    CFG = dict(topology="sharded", n_shards=1)
+
+    def test_static_solve_matches_reference(self, dyn):
+        hg0, g0, _, _, _, _, _, _ = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(partitioner="bfs_blocks", **self.CFG))
+        ref = pr.numpy_reference(g0, iterations=300)
+        assert pr.linf(jnp.asarray(sess.ranks[:g0.n]),
+                       jnp.asarray(ref[:g0.n])) < 1e-8
+        rep = sess.report()
+        assert rep.topology == "sharded" and rep.n_shards == 1
+        assert rep.partitioner == "bfs_blocks"
+        assert 0.0 <= rep.edge_cut <= 1.0
+
+    def test_df_stream_matches_blocked_oracle(self, dyn):
+        hg0, g0, _, _, _, r_prev, _, _ = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(**self.CFG), r0=r_prev)
+        oracle = PageRankSession.from_graph(
+            hg0, config=EngineConfig(engine="blocked"), r0=r_prev)
+        sess.warmup()
+        cur = hg0
+        for i in range(3):
+            dels, ins = random_batch(cur, 5e-3, seed=400 + i)
+            cur = cur.apply_batch(dels, ins)
+            res = sess.update(dels, ins)
+            ores = oracle.update(dels, ins)
+            assert res.stats.converged and ores.stats.converged
+            assert np.max(np.abs(sess.ranks[:cur.n]
+                                 - oracle.ranks[:cur.n])) < 1e-9, i
+        assert sess.report().retraces_post_warmup == 0
+        assert sess.report().collective_bytes_per_sweep is not None
+
+    def test_query_topk_translate_through_relabeling(self, dyn):
+        hg0, _, _, _, _, r_prev, dels, ins = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(partitioner="hash", **self.CFG),
+            r0=r_prev)
+        sess.update(dels, ins)
+        full = sess.ranks
+        ids = [0, 3, sess.n - 1]
+        np.testing.assert_allclose(sess.query(ids), full[ids])
+        vals, idx = sess.top_k(4)
+        np.testing.assert_allclose(vals, full[idx])
+        order = np.argsort(full[:sess.n])[::-1][:4]
+        np.testing.assert_allclose(vals, full[order])
+
+    def test_recompute_variants_and_fork(self, dyn):
+        hg0, _, _, _, _, r_prev, dels, ins = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(**self.CFG), r0=r_prev)
+        with pytest.raises(ValueError, match="no batch"):
+            sess.recompute("df")
+        out = sess.update(dels, ins)
+        replay = sess.recompute("df")
+        np.testing.assert_array_equal(np.asarray(out.ranks),
+                                      np.asarray(replay.ranks))
+        static = sess.recompute("static")
+        assert static.stats.converged
+        twin = sess.fork()
+        d2, i2 = random_batch(sess.hg, 5e-3, seed=88)
+        twin.update(d2, i2)
+        assert sess.report().n_updates == 1     # parent untouched
+        assert twin.report().n_updates == 1
+        assert sess.hg.m != twin.hg.m or not np.array_equal(
+            np.asarray(sess.R), np.asarray(twin.R))
+
+
+# ---------------------------------------------------------------------------
+# query/top_k ergonomics + session close / context manager
+# ---------------------------------------------------------------------------
+
+class TestServingErgonomics:
+    def _sess(self, dyn):
+        hg0, _, _, _, _, r_prev, _, _ = dyn
+        return PageRankSession.from_graph(
+            hg0, config=EngineConfig(engine="blocked"), r0=r_prev)
+
+    def test_query_accepts_python_int_and_list(self, dyn):
+        sess = self._sess(dyn)
+        one = sess.query(3)
+        assert one.shape == (1,)
+        np.testing.assert_allclose(sess.query([3, 5]),
+                                   np.asarray(sess.R)[[3, 5]])
+        assert sess.query([]).shape == (0,)     # empty id list is valid
+
+    def test_query_rejects_bad_ids(self, dyn):
+        sess = self._sess(dyn)
+        with pytest.raises(ValueError, match="out of range"):
+            sess.query([-1])
+        with pytest.raises(ValueError, match="out of range"):
+            sess.query([0, sess.n])
+        with pytest.raises(ValueError, match="integers"):
+            sess.query([1.5])
+
+    def test_top_k_rejects_bad_k(self, dyn):
+        sess = self._sess(dyn)
+        with pytest.raises(ValueError, match="must be >= 1"):
+            sess.top_k(0)
+        with pytest.raises(ValueError, match="integer"):
+            sess.top_k(2.5)
+
+    def test_close_is_idempotent_and_guards_reads(self, dyn):
+        sess = self._sess(dyn)
+        sess.close()
+        sess.close()
+        assert sess.closed and sess.device_footprint == ()
+        for call in (lambda: sess.query([0]), lambda: sess.top_k(1),
+                     lambda: sess.update([], []),
+                     lambda: sess.recompute("static"), lambda: sess.fork(),
+                     lambda: sess.ranks):
+            with pytest.raises(ValueError, match="closed"):
+                call()
+        assert sess.R is None and sess.inc is None   # buffers dropped
+
+    def test_context_manager_closes(self, dyn):
+        hg0 = dyn[0]
+        with PageRankSession.from_graph(
+                hg0, config=EngineConfig(engine="blocked")) as sess:
+            assert sess.query([0]).shape == (1,)
+        assert sess.closed
+
+    def test_close_unregisters_from_service(self):
+        graphs = [rmat(7, avg_degree=4, seed=s) for s in (0, 1)]
+        svc = PageRankService(
+            graphs, config=EngineConfig(engine="pallas", block_size=64),
+            warmup=False)
+        assert set(svc.placements()) == {0, 1}
+        svc.submit(0, np.zeros((0, 2)), np.zeros((0, 2)))
+        svc.sessions[0].close()
+        assert svc.sessions[0] is None
+        assert svc.queue == []                  # queued batches dropped
+        assert set(svc.placements()) == {1}
+        with pytest.raises(ValueError, match="closed"):
+            svc.submit(0, np.zeros((0, 2)), np.zeros((0, 2)))
+        svc.submit(1, np.zeros((0, 2)), np.zeros((0, 2)))   # slot 1 lives
+        assert svc.step() == 1
+        rep = svc.report()
+        assert rep["sessions"][0] == {"stream": 0, "closed": True}
+        assert rep["sessions"][1]["devices"]

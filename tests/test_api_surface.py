@@ -35,9 +35,10 @@ EXPECTED_API = {
 EXPECTED_CONFIG_FIELDS = {
     "alpha", "tau", "tau_f", "mode", "engine", "backend", "tile",
     "block_size", "active_policy", "max_iterations", "faults", "dtype",
+    "topology", "n_shards", "partitioner", "exchange",
 }
 
-EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas"}
+EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas", "distributed"}
 
 
 def test_api_all_snapshot():
@@ -59,7 +60,8 @@ def test_builtin_engines_registered():
 
 def test_session_core_methods_exist():
     for m in ("from_graph", "from_snapshot", "update", "recompute",
-              "query", "top_k", "report", "fork", "warmup"):
+              "query", "top_k", "report", "fork", "warmup", "close",
+              "__enter__", "__exit__"):
         assert callable(getattr(PageRankSession, m)), m
 
 
@@ -128,12 +130,19 @@ def test_session_partial_reads_match_full_ranks(stream_setup):
         hg, config=EngineConfig(engine="pallas", block_size=64), r0=r0)
     sess.update(*batches[0])
     full = sess.ranks
-    ids = np.array([0, 1, sess.n - 1, sess.n_pad + 5, -3])
+    ids = np.array([0, 1, sess.n - 1])
     got = sess.query(ids)
-    np.testing.assert_allclose(got[:3], full[[0, 1, sess.n - 1]])
-    assert got[3] == 0 and got[4] == 0      # out-of-range reads 0
+    np.testing.assert_allclose(got, full[[0, 1, sess.n - 1]])
+    # malformed ids raise instead of silently reading 0 / device-erroring
+    with pytest.raises(ValueError, match="out of range"):
+        sess.query([0, sess.n_pad + 5])
+    with pytest.raises(ValueError, match="out of range"):
+        sess.query(-3)
     vals, idx = sess.top_k(5)
     order = np.argsort(full[:sess.n])[::-1][:5]
     np.testing.assert_allclose(vals, full[order])
     assert (np.diff(vals) <= 0).all()
     assert sess.report().queries_served == len(ids) + 5
+    rep = sess.report()             # single-device topology fields
+    assert rep.topology == "single" and rep.n_shards is None
+    assert rep.edge_cut is None and rep.partitioner is None

@@ -61,3 +61,19 @@ def test_smoke_report():
         assert row["retraces_post_warmup"] == 0, row
         assert row["n_updates"] == service["batches_per_session"], row
     assert service["linf_vs_reference_max"] < 1e-8
+    # the sharded scenario (topology="sharded" session on an 8-host-device
+    # mesh, one run per partitioner): every partitioner must stay
+    # parity-clean with zero post-warmup retraces, and the edge-cut /
+    # latency numbers that make the partitioner choice observable must be
+    # recorded
+    sharded = report["sharded"]
+    assert sharded["n_devices"] >= 2
+    assert set(sharded["partitioners"]) == {"contiguous", "hash",
+                                            "bfs_blocks"}
+    for part, row in sharded["partitioners"].items():
+        assert row["retraces_post_warmup"] == 0, (part, row)
+        assert row["linf_vs_reference"] < 1e-8, (part, row)
+        assert 0.0 <= row["edge_cut"] <= 1.0, (part, row)
+        assert row["p50_ms"] > 0 and row["p95_ms"] >= row["p50_ms"], \
+            (part, row)
+        assert row["collective_bytes_per_sweep"] > 0, (part, row)

@@ -18,8 +18,7 @@ SCRIPT = textwrap.dedent("""
     from repro.core.distributed import run_distributed
     from repro.core.frontier import batch_to_device, initial_affected
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
     assert len(jax.devices()) == 8
     hg0 = rmat(10, avg_degree=8, seed=3)
     g0 = hg0.snapshot(block_size=64)
@@ -71,6 +70,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.multidevice
 @pytest.mark.slow
 def test_distributed_pagerank_8dev():
     env = dict(os.environ)

@@ -58,8 +58,7 @@ ELASTIC = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.ckpt.checkpoint import Checkpointer
     ckdir = sys.argv[1]
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
     params = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((16,))}
     opt = {"m": jax.tree.map(jnp.zeros_like, params),
            "step": jnp.int32(0)}

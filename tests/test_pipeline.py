@@ -12,8 +12,8 @@ SCRIPT = textwrap.dedent("""
     import jax, dataclasses
     import numpy as np, jax.numpy as jnp
     assert len(jax.devices()) == 16
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(4, 4),
+                             ("data", "model"))
 
     from repro.models.transformer.config import TransformerConfig
     from repro.models.transformer import model as M
