@@ -6,18 +6,20 @@ vertex-block size: small blocks → tighter frontier (fewer wasted edges,
 less padding) but more per-block scheduling overhead; large blocks → the
 opposite.  We sweep block_size and report total edges processed (work),
 sweeps, wall time, and the simulated barrier-wait fraction for BB (the
-Fig. 1 percentage labels)."""
+Fig. 1 percentage labels).
+
+Runs through :class:`repro.api.PageRankSession` — ``block_size`` is a
+config axis and the thread-fault schedule enters via the unified
+``fault_domain`` axis (docs/FAULTS.md)."""
 from __future__ import annotations
 
 import sys
 
-import numpy as np
-
 from benchmarks.common import SUITE, Row, emit
-from repro.core import frontier as fr
+from repro.api import EngineConfig, PageRankSession, ThreadFaultDomain
 from repro.core import pagerank as pr
 from repro.core.delta import random_batch
-from repro.core.faults import FaultPlan, T_BLOCK_NS, T_EDGE_NS
+from repro.core.faults import FaultPlan
 
 BLOCK_SIZES = (64, 256, 1024, 4096)
 BATCH_FRAC = 1e-4
@@ -31,17 +33,15 @@ def main(out: str = "results/bench_chunk_tradeoff.csv",
     for gname in graphs:
         hg = SUITE[gname]()
         dels, ins = random_batch(hg, BATCH_FRAC, seed=41)
-        hg_cur = hg.apply_batch(dels, ins)
-        cap = 1024 * ((hg.m * 2 + 2 * hg.n) // 1024 + 3)
         for bs in sizes:
-            g_prev = hg.snapshot(block_size=bs, edge_capacity=cap)
-            g_cur = hg_cur.snapshot(block_size=bs, edge_capacity=cap)
-            batch = fr.batch_to_device(g_cur, dels, ins)
-            r_prev = pr.reference_pagerank(g_prev, iterations=250)
+            r_prev = pr.reference_pagerank(hg.snapshot(block_size=bs),
+                                           iterations=250)
             for mode in ("bb", "lf"):
-                plan = FaultPlan(n_threads=64)
-                res = pr.df_pagerank(g_prev, g_cur, batch, r_prev,
-                                     mode=mode, faults=plan)
+                cfg = EngineConfig(
+                    mode=mode, block_size=bs,
+                    fault_domain=ThreadFaultDomain(FaultPlan(n_threads=64)))
+                sess = PageRankSession.from_graph(hg, config=cfg, r0=r_prev)
+                res = sess.update(dels, ins, variant="df")
                 st = res.stats
                 # simulated per-thread imbalance: barrier wait fraction is
                 # 1 − mean(work)/max(work) per sweep, aggregated by time

@@ -1,25 +1,32 @@
 """Paper §5.2.3 — stability: delete a random batch, update ranks, re-insert
 the same batch, update again; the L∞ distance to the original ranks must be
-≈ 0 (the paper reports ≤ 5.7e-10)."""
+≈ 0 (the paper reports ≤ 5.7e-10).
+
+Runs through :class:`repro.api.PageRankSession` (one session per variant,
+two ``update`` calls each) — the delete/re-insert pair is exactly the
+dynamic-stream contract the session API owns, and ``report()`` gives the
+per-session retrace accounting the CSV records."""
 from __future__ import annotations
 
 import sys
 
 import numpy as np
 
-from benchmarks.common import SUITE, Row, emit, linf, updated_snapshots
+from benchmarks.common import SUITE, Row, emit, linf
+from repro.api import EngineConfig, PageRankSession
 from repro.core import blocked as blk
-from repro.core import frontier as fr
 from repro.core import pagerank as pr
-from repro.core.delta import pure_deletion_batch
+from repro.core.delta import pure_deletion_batch, random_batch
 
 FRACS = (1e-4, 1e-3, 1e-2)
 # tightest τ first: it visits the full slot-capacity ladder, so the looser
 # runs that follow can only hit existing jit cache entries
 TAUS = (1e-11, 1e-10, 1e-9, 1e-8)
 
+EMPTY = np.zeros((0, 2), np.int64)
 
-def tau_sweep(g0, g1, batch, r0, *, quick: bool = False) -> list:
+
+def tau_sweep(hg, dels, ins, r0, *, quick: bool = False) -> list:
     """τ sensitivity on DF_LF.  α/τ/τ_f are traced operands on the sweep
     kernel, so this entire sweep reuses the jit cache entries of the first
     run — the compile counter is recorded in the CSV to keep it honest."""
@@ -27,7 +34,9 @@ def tau_sweep(g0, g1, batch, r0, *, quick: bool = False) -> list:
     taus = TAUS if not quick else TAUS[:2]
     entries0 = None
     for tau in taus:
-        res = pr.df_pagerank(g0, g1, batch, r0, mode="lf", tau=tau)
+        sess = PageRankSession.from_graph(
+            hg, config=EngineConfig(mode="lf", tau=tau), r0=r0)
+        res = sess.update(dels, ins, variant="df")
         entries = blk.sweep._cache_size()
         if entries0 is None:
             entries0 = entries          # first τ pays all compilation
@@ -46,40 +55,36 @@ def main(out: str = "results/bench_stability.csv", *, quick: bool = False):
     fracs = FRACS if not quick else (1e-3,)
     for gname in graphs:
         hg = SUITE[gname]()
-        cap = 1024 * ((hg.m * 2 + 2 * hg.n) // 1024 + 3)
-        g0 = hg.snapshot(edge_capacity=cap)
-        r0 = pr.reference_pagerank(g0, iterations=200)
-        empty = np.zeros((0, 2), np.int64)
+        r0 = pr.reference_pagerank(hg.snapshot(), iterations=200)
+        r0h = np.asarray(r0)
         for frac in fracs:
             dels = pure_deletion_batch(hg, frac, seed=23)
-            hg_del = hg.apply_batch(dels, empty)
-            g_del = hg_del.snapshot(edge_capacity=cap)
-            hg_back = hg_del.apply_batch(empty, dels)
-            g_back = hg_back.snapshot(edge_capacity=cap)
+            hg_back = hg.apply_batch(dels, EMPTY).apply_batch(EMPTY, dels)
             assert np.array_equal(hg.edges, hg_back.edges)
             for mode, name in (("bb", "df_bb"), ("lf", "df_lf"),
                                ("bb", "nd_bb"), ("lf", "nd_lf")):
-                if name.startswith("df"):
-                    b1 = fr.batch_to_device(g_del, dels, empty)
-                    r1 = pr.df_pagerank(g0, g_del, b1, r0, mode=mode)
-                    b2 = fr.batch_to_device(g_back, empty, dels)
-                    r2 = pr.df_pagerank(g_del, g_back, b2, r1.ranks,
-                                        mode=mode)
-                else:
-                    r1 = pr.nd_pagerank(g_del, r0, mode=mode)
-                    r2 = pr.nd_pagerank(g_back, r1.ranks, mode=mode)
-                err = linf(r2.ranks, r0[:r2.ranks.shape[0]])
+                variant = name.split("_")[0]
+                sess = PageRankSession.from_graph(
+                    hg, config=EngineConfig(mode=mode), r0=r0)
+                sess.update(dels, EMPTY, variant=variant)     # delete ...
+                r2 = sess.update(EMPTY, dels, variant=variant)  # re-insert
+                err = linf(sess.ranks[:hg.n], r0h[:hg.n])
+                rep = sess.report()
+                # retrace accounting exists only for the compiled-driver
+                # engines (pallas/distributed); omit the -1 sentinel noise
+                retr = ("" if rep.retraces_post_warmup < 0 else
+                        f"retraces={rep.retraces_post_warmup}")
                 rows.append(Row("stability", gname, name, frac, 0.0,
                                 r2.stats.sweeps, r2.stats.edges_processed,
-                                err))
+                                err, extra=retr))
     worst = max(r.error for r in rows)
     emit(rows, out)           # persist the stability sweep before the rider
-    # τ sensitivity rider: single-compile hyperparameter sweep, on the same
-    # snapshot family (capacity formula + block size) as every other row
-    g_web, g_web1, batch_w, _ = updated_snapshots(SUITE["web"](), 1e-3,
-                                                  seed=31)
-    r_web = pr.reference_pagerank(g_web, iterations=200)
-    rows.extend(tau_sweep(g_web, g_web1, batch_w, r_web, quick=quick))
+    # τ sensitivity rider: single-compile hyperparameter sweep on one
+    # random update batch of the web graph
+    hg_w = SUITE["web"]()
+    dels_w, ins_w = random_batch(hg_w, 1e-3, seed=31)
+    r_web = pr.reference_pagerank(hg_w.snapshot(), iterations=200)
+    rows.extend(tau_sweep(hg_w, dels_w, ins_w, r_web, quick=quick))
     emit(rows, out)
     print(f"# worst delete+reinsert L_inf: {worst:.3e} "
           f"(paper: <= 5.7e-10)")

@@ -104,31 +104,39 @@ def timed(fn: Callable, *, repeats: int = 2) -> Dict:
 
 def run_variant(name: str, g_prev, g_cur, batch, r_prev, *, faults=None,
                 engine: Optional[str] = None, **kw) -> pr.PagerankResult:
-    """Dispatch one of the paper variants.  ``engine`` selects
-    dense/blocked/pallas explicitly; None uses ``pr.default_engine()``
-    (blocked on CPU containers, the fused pallas engine on TPU)."""
-    kw = dict(kw, engine=engine)
-    if name == "static_bb":
-        return pr.static_pagerank(g_cur, mode="bb", faults=faults, **kw)
-    if name == "static_lf":
-        return pr.static_pagerank(g_cur, mode="lf", faults=faults, **kw)
-    if name == "nd_bb":
-        return pr.nd_pagerank(g_cur, r_prev, mode="bb", faults=faults, **kw)
-    if name == "nd_lf":
-        return pr.nd_pagerank(g_cur, r_prev, mode="lf", faults=faults, **kw)
-    if name == "dt_bb":
-        return pr.dt_pagerank(g_prev, g_cur, batch, r_prev, mode="bb",
-                              faults=faults, **kw)
-    if name == "dt_lf":
-        return pr.dt_pagerank(g_prev, g_cur, batch, r_prev, mode="lf",
-                              faults=faults, **kw)
-    if name == "df_bb":
-        return pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode="bb",
-                              faults=faults, **kw)
-    if name == "df_lf":
-        return pr.df_pagerank(g_prev, g_cur, batch, r_prev, mode="lf",
-                              faults=faults, **kw)
-    raise ValueError(name)
+    """Dispatch one of the paper variants through a
+    :class:`repro.api.PageRankSession` (snapshot mode, the registry-
+    resolved engine — blocked on CPU containers, the fused pallas engine
+    on TPU).  This is the modern form of the deprecated ``*_pagerank``
+    shims: bit-identical results, no DeprecationWarning, and the config
+    goes through ``EngineConfig`` validation."""
+    from repro.api import EngineConfig, PageRankSession
+    from repro.core.graph import initial_ranks, pad_ranks
+
+    variant, mode = name.rsplit("_", 1)
+    if variant not in ("static", "nd", "dt", "df") or mode not in ("bb",
+                                                                   "lf"):
+        raise ValueError(name)
+    kw = dict(kw)
+    mat = kw.pop("pallas_mat", None)
+    aux = kw.pop("pallas_aux", None)
+    backend = kw.pop("pallas_backend", None)
+    cfg = EngineConfig.from_kwargs(mode=mode, engine=engine, faults=faults,
+                                   backend=backend, **kw)
+    if variant == "static":
+        R0 = initial_ranks(g_cur, pr.default_dtype())
+        affected, expand = g_cur.vertex_valid, False
+    elif variant == "nd":
+        R0 = pad_ranks(g_cur, r_prev)
+        affected, expand = g_cur.vertex_valid, False
+    elif variant == "dt":
+        R0 = pad_ranks(g_cur, r_prev)
+        affected, expand = fr.dt_affected(g_prev, g_cur, batch), False
+    else:   # df
+        R0 = pad_ranks(g_cur, r_prev)
+        affected, expand = fr.initial_affected(g_prev, g_cur, batch), True
+    sess = PageRankSession.from_snapshot(g_cur, config=cfg, r0=R0)
+    return sess._converge(R0, affected, expand=expand, mat=mat, aux=aux)
 
 
 def reference_ranks(g) -> jnp.ndarray:

@@ -31,6 +31,10 @@ SHARDED_DEVICES = 8             # forced host devices for the sharded scenario
 SHARDED_BATCHES = 6             # DF batches per partitioner
 SHARDED_LOG2_N = 10             # graph size (subprocess recompiles per part.)
 
+RECOVERY_LOG2_N = 10            # graph size for the kill+restore scenario
+RECOVERY_KILL_AFTER = 4         # durable batches applied before SIGKILL
+RECOVERY_AFTER = 2              # batches served post-restore
+
 
 def _smoke_service() -> dict:
     """Multi-session serving scenario: N concurrent dynamic streams behind
@@ -142,6 +146,122 @@ def _smoke_sharded() -> dict:
     payload = [ln for ln in out.stdout.splitlines()
                if ln.startswith("SHARDED-JSON:")]
     return json.loads(payload[-1][len("SHARDED-JSON:"):])
+
+
+_RECOVERY_CHILD = textwrap.dedent("""
+    import sys, time
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.api import EngineConfig, PageRankSession
+    from repro.core import pagerank as pr
+    from repro.core.delta import random_batch
+    from repro.graphs.generators import kmer_chains
+
+    store_dir, log2_n, kill_after = (sys.argv[1], int(sys.argv[2]),
+                                     int(sys.argv[3]))
+    hg = kmer_chains(1 << log2_n, seed=4)
+    r0 = jnp.asarray(pr.numpy_reference(hg.snapshot(block_size=64),
+                                        iterations=300))
+    cfg = EngineConfig(engine="pallas", block_size=64, durability="wal",
+                       checkpoint_interval=100)
+    sess = PageRankSession.from_graph(hg, config=cfg, r0=r0,
+                                      store_dir=store_dir)
+    cur = hg
+    for i in range(kill_after):
+        dels, ins = random_batch(cur, 8 / cur.m, seed=60 + i)
+        sess.update(dels, ins)
+        cur = cur.apply_batch(dels, ins)
+    print("RECOVERY-READY", flush=True)   # the parent SIGKILLs us here
+    time.sleep(300)
+""")
+
+
+def _smoke_recovery() -> dict:
+    """Process-fault scenario (docs/FAULTS.md): a subprocess runs a
+    durable streaming session, is SIGKILLed mid-run, and the session is
+    restored here — recovery wall time, replayed-batch count, post-restore
+    retraces and parity against an uninterrupted session are recorded.
+    Restore must be bit-for-bit (same r0, same batch seeds, same jitted
+    hot path) with zero post-restore retraces."""
+    import select
+    import shutil
+    import signal
+    import tempfile
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.api import EngineConfig, PageRankSession
+    from repro.core import pagerank as pr
+    from repro.core.delta import random_batch
+    from repro.graphs.generators import kmer_chains
+
+    hg = kmer_chains(1 << RECOVERY_LOG2_N, seed=4)
+    r0 = jnp.asarray(pr.numpy_reference(hg.snapshot(block_size=64),
+                                        iterations=300))
+    n_total = RECOVERY_KILL_AFTER + RECOVERY_AFTER
+    batches, cur = [], hg
+    for i in range(n_total):
+        dels, ins = random_batch(cur, 8 / cur.m, seed=60 + i)
+        batches.append((dels, ins))
+        cur = cur.apply_batch(dels, ins)
+
+    oracle = PageRankSession.from_graph(
+        hg, config=EngineConfig(engine="pallas", block_size=64), r0=r0)
+    for dels, ins in batches:
+        assert oracle.update(dels, ins).stats.converged
+
+    store_dir = tempfile.mkdtemp(prefix="repro-recovery-")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    # child stderr goes to a FILE, not a pipe: a chatty XLA child filling
+    # an undrained stderr pipe would deadlock against our stdout readline
+    with tempfile.TemporaryFile(mode="w+") as err:
+        child = subprocess.Popen(
+            [sys.executable, "-c", _RECOVERY_CHILD, store_dir,
+             str(RECOVERY_LOG2_N), str(RECOVERY_KILL_AFTER)],
+            env=env, stdout=subprocess.PIPE, stderr=err, text=True)
+        try:
+            deadline = time.time() + 600
+            line = ""
+            while "RECOVERY-READY" not in line:
+                if time.time() > deadline or (line == ""
+                                              and child.poll() is not None):
+                    err.seek(0)
+                    raise RuntimeError("recovery child failed:\n"
+                                       + err.read()[-3000:])
+                # select-gate the readline so a silently hung child trips
+                # the deadline instead of blocking forever
+                ready, _, _ = select.select([child.stdout], [], [], 5.0)
+                line = child.stdout.readline() if ready else ""
+            os.kill(child.pid, signal.SIGKILL)   # crash-stop, no cleanup
+            child.wait(timeout=60)
+        finally:
+            if child.poll() is None:
+                child.kill()
+
+    t0 = time.time()
+    sess = PageRankSession.restore(store_dir)
+    recovery_wall_s = time.time() - t0
+    rep = sess.report()
+    post = []
+    for dels, ins in batches[RECOVERY_KILL_AFTER:]:
+        post.append(sess.update(dels, ins))
+    rep2 = sess.report()
+    linf = float(np.max(np.abs(np.asarray(sess.R)
+                               - np.asarray(oracle.R))))
+    shutil.rmtree(store_dir, ignore_errors=True)
+    return {
+        "n": sess.n,
+        "killed_after_batches": RECOVERY_KILL_AFTER,
+        "replayed_batches": rep.replayed_batches,
+        "recovery_wall_s": round(recovery_wall_s, 4),
+        "post_restore_batches": len(post),
+        "post_restore_retraces": rep2.retraces_post_warmup,
+        "post_restore_p50_ms": round(float(np.percentile(
+            [r.wall_time_s for r in post], 50)) * 1e3, 3),
+        "linf_vs_uninterrupted": linf,
+    }
 
 
 def _smoke_stream() -> dict:
@@ -266,6 +386,7 @@ def smoke(out: str = SMOKE_OUT) -> dict:
     report["stream"] = _smoke_stream()
     report["service"] = _smoke_service()
     report["sharded"] = _smoke_sharded()
+    report["recovery"] = _smoke_recovery()
 
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

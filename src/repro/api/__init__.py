@@ -17,14 +17,22 @@ from repro.api.registry import Engine, register
 from repro.api.session import (PageRankSession, SessionReport,
                                StreamBatchResult)
 from repro.api.service import PageRankService, UpdateRequest
+from repro.ckpt.checkpoint import SessionStore
+from repro.core.fault_domain import (RecoveryRecord, ShardFault,
+                                     ShardFaultDomain, ThreadFaultDomain)
 
 __all__ = [
     "EngineConfig",
     "Engine",
     "PageRankService",
     "PageRankSession",
+    "RecoveryRecord",
     "SessionReport",
+    "SessionStore",
+    "ShardFault",
+    "ShardFaultDomain",
     "StreamBatchResult",
+    "ThreadFaultDomain",
     "UpdateRequest",
     "register",
     "registry",

@@ -22,6 +22,12 @@ ACTIVE_POLICIES = ("affected", "rc")
 TOPOLOGIES = ("single", "sharded")
 # contribution-exchange variants the sharded session runtime supports
 EXCHANGES = ("full", "bf16", "delta")
+# process-fault durability levels (docs/FAULTS.md):
+#   "none" — session state is device-only, a process crash loses it;
+#   "wal"  — every update batch is durably logged before it touches device
+#            state, with periodic atomic rank checkpoints; restore =
+#            checkpoint + WAL replay through the normal hot path
+DURABILITIES = ("none", "wal")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +65,19 @@ class EngineConfig:
     exchange:       per-sweep contribution collective: ``"full"`` /
                     ``"bf16"`` (half wire bytes) / ``"delta"`` (sparse
                     frontier-sized gather with full fallback).
+    fault_domain:   optional :class:`repro.core.fault_domain.FaultDomain`:
+                    ``ThreadFaultDomain`` (equivalent to ``faults=``, the
+                    paper's pseudo-thread model) or ``ShardFaultDomain``
+                    (sharded topologies; deterministic shard-crash
+                    injection).  Validated against the resolved engine's
+                    declared domains.
+    durability:     ``"none"`` or ``"wal"`` (process fault domain): under
+                    ``"wal"`` the session requires a ``store_dir`` and
+                    durably logs every update batch *before* applying it,
+                    plus atomic rank checkpoints every
+                    ``checkpoint_interval`` batches.
+    checkpoint_interval: batches between atomic rank checkpoints of a
+                    durable session (bounds WAL replay length).
     """
 
     alpha: float = 0.85
@@ -77,6 +96,9 @@ class EngineConfig:
     n_shards: Optional[int] = None
     partitioner: str = "contiguous"
     exchange: str = "full"
+    fault_domain: Optional[Any] = None
+    durability: str = "none"
+    checkpoint_interval: int = 16
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -141,12 +163,39 @@ class EngineConfig:
                     f"n_shards={ns} exceeds the {avail} visible device(s) — "
                     "for host testing set XLA_FLAGS="
                     "--xla_force_host_platform_device_count=N")
+        # -- fault-domain / durability axis -----------------------------------
+        if self.durability not in DURABILITIES:
+            raise ValueError(f"durability={self.durability!r} invalid; "
+                             f"expected one of {DURABILITIES}")
+        if int(self.checkpoint_interval) <= 0:
+            raise ValueError(f"checkpoint_interval={self.checkpoint_interval}"
+                             " must be > 0")
+        if self.fault_domain is not None:
+            from repro.core.fault_domain import FaultDomain
+            if not isinstance(self.fault_domain, FaultDomain):
+                raise ValueError(
+                    "fault_domain must be a repro.core.fault_domain."
+                    "FaultDomain (ThreadFaultDomain / ShardFaultDomain), "
+                    f"got {type(self.fault_domain).__name__}")
+            if self.faults is not None:
+                raise ValueError(
+                    "faults= and fault_domain= are mutually exclusive — "
+                    "faults=plan is shorthand for "
+                    "fault_domain=ThreadFaultDomain(plan)")
+            self.fault_domain.validate_for(topology=self.topology)
         # resolve engine + tile backend now: this validates explicit values
         # AND the REPRO_ENGINE / REPRO_TILE_BACKEND env overrides eagerly —
         # a bad value fails at construction, not mid-run
         from repro.api import registry
-        registry.resolve(self._engine_for_resolution())
+        eng = registry.resolve(self._engine_for_resolution())
         registry.resolve_backend(self.backend)
+        if (self.fault_domain is not None
+                and self.fault_domain.name
+                not in registry.fault_domains_of(eng)):
+            raise ValueError(
+                f"engine {eng.name!r} does not host the "
+                f"{self.fault_domain.name!r} fault domain (declares "
+                f"{registry.fault_domains_of(eng)}) — see docs/FAULTS.md")
 
     def _engine_for_resolution(self) -> Optional[str]:
         """Topology-aware engine name: sharded configs always resolve the

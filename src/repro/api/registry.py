@@ -129,6 +129,17 @@ def resolve_backend(backend: Optional[str] = None) -> str:
     return ops._resolve_backend(backend)
 
 
+def fault_domains_of(engine: Engine) -> Tuple[str, ...]:
+    """Fault domains an engine can host (docs/FAULTS.md): ``"thread"``
+    (pseudo-thread delay/crash tables inside one sweep), ``"shard"``
+    (crash/stall of one mesh shard), ``"process"`` (crash-stop of the job,
+    recovered through the session WAL — engine-agnostic, so every engine
+    declares it).  Engines advertise the tuple as a ``fault_domains``
+    class attribute; adapters predating the attribute default to
+    thread+process (the single-device model)."""
+    return tuple(getattr(engine, "fault_domains", ("thread", "process")))
+
+
 def reject_tile_operands(engine_name: str, mat, aux,
                          backend: Optional[str]) -> None:
     """Shared guard for engines that do not consume the pallas engine's

@@ -76,6 +76,12 @@ class PageRankService:
         self.queue: List[UpdateRequest] = []
         self.finished: List[UpdateRequest] = []
         self._uid = 0
+        # durable-slot registry: a closed-or-dead slot respawns from its
+        # store via failover(); the dir outlives the session object
+        self._store_dirs: Dict[int, Optional[str]] = {
+            i: getattr(s, "store_dir", None)
+            for i, s in enumerate(self.sessions)}
+        self._failovers: List[dict] = []
 
     @property
     def slots(self) -> int:
@@ -92,12 +98,46 @@ class PageRankService:
 
     def _detach(self, sess: PageRankSession) -> None:
         """Unregister a closing session: its slot empties and its queued
-        batches are dropped (slot indices of other streams are stable)."""
+        batches are dropped (slot indices of other streams are stable;
+        the slot's durable store dir is retained for failover)."""
         for i, s in enumerate(self.sessions):
             if s is sess:
                 self.sessions[i] = None
                 self.queue = [r for r in self.queue if r.stream != i]
                 return
+
+    # -- failover (process fault domain, docs/FAULTS.md) ---------------------
+    def failover(self, stream: int, *, warmup: bool = False) -> dict:
+        """Respawn a closed-or-dead slot from its durable store: the
+        session is restored from its newest valid checkpoint, catches up
+        by replaying its WAL, and re-occupies the same slot index (new
+        submits flow immediately).  Returns the recovery row also exposed
+        by :meth:`report` (recovery wall time, replayed-batch count)."""
+        if not (0 <= stream < self.slots):
+            raise ValueError(f"stream {stream} out of range "
+                             f"(service has {self.slots} sessions)")
+        cur = self.sessions[stream]
+        if cur is not None and not cur.closed:
+            raise ValueError(f"stream {stream} is still live — failover "
+                             "replaces closed or dead slots only")
+        store_dir = self._store_dirs.get(stream)
+        if store_dir is None:
+            raise ValueError(
+                f"stream {stream} has no durable store to respawn from "
+                "(open its session with durability='wal' + store_dir=)")
+        t0 = time.perf_counter()
+        sess = PageRankSession.restore(store_dir)
+        sess._service = self
+        self.sessions[stream] = sess
+        rep = sess.report()
+        row = {"stream": stream,
+               "recovery_time_s": round(time.perf_counter() - t0, 6),
+               "replayed_batches": rep.replayed_batches,
+               "restored_batch_index": sess._batch_index}
+        if warmup:
+            sess.warmup()
+        self._failovers.append(row)
+        return row
 
     # -- queue management ----------------------------------------------------
     def submit(self, stream: int, deletions, insertions) -> int:
@@ -180,6 +220,11 @@ class PageRankService:
                 row["n_shards"] = rep.n_shards
                 row["partitioner"] = rep.partitioner
                 row["edge_cut"] = rep.edge_cut
+            if rep.durability != "none" or rep.recoveries:
+                row["durability"] = rep.durability
+                row["recoveries"] = rep.recoveries
+                row["recovery_time_s"] = round(rep.recovery_time_s, 6)
+                row["replayed_batches"] = rep.replayed_batches
             per_session.append(row)
         lat = [r.latency_s for r in self.finished]
         waits = [r.wait_s for r in self.finished]
@@ -195,5 +240,6 @@ class PageRankService:
                                if lat else 0.0),
             "queue_wait_p50_ms": (round(float(np.percentile(waits, 50))
                                         * 1e3, 3) if waits else 0.0),
+            "failovers": list(self._failovers),
             "sessions": per_session,
         }

@@ -41,6 +41,15 @@ Three operating modes, picked at construction:
   (``report`` additionally exposes ``edge_cut`` and the per-sweep
   collective-bytes model).
 
+Faults in any domain (docs/FAULTS.md) recover behind the same surface:
+thread-domain plans ride on ``EngineConfig(faults=…)``/``fault_domain=``,
+sharded sessions survive shard crashes via helping + elastic re-partition
+(:meth:`inject_shard_fault` schedules one deterministically), and
+``durability="wal"`` + ``store_dir=`` makes the session crash-stop-proof
+— :meth:`save` / :meth:`restore` round-trip through an atomic checkpoint
+plus a write-ahead log replayed on the zero-retrace hot path, with every
+recovery's cost visible in :meth:`report`.
+
 The vertex set (and hence the block grid) is fixed for the lifetime of a
 session; growing past it requires a new session.  ``close()`` (or the
 context-manager form) releases device buffers and unregisters from any
@@ -49,6 +58,7 @@ service.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from functools import partial
 from typing import List, Optional, Sequence, Tuple, Union
@@ -59,7 +69,9 @@ import jax.numpy as jnp
 
 from repro.api import registry
 from repro.api.config import EngineConfig
+from repro.ckpt.checkpoint import SessionStore
 from repro.core import distributed as dist
+from repro.core import fault_domain as fd
 from repro.core import faults as flt
 from repro.core import frontier as fr
 from repro.core import pallas_engine as pe
@@ -180,6 +192,12 @@ class SessionReport:
     partitioner: Optional[str] = None
     edge_cut: Optional[float] = None          # realized cross-shard edges
     collective_bytes_per_sweep: Optional[float] = None  # analytic wire model
+    # -- fault domains / durability (docs/FAULTS.md) -------------------------
+    durability: str = "none"
+    recoveries: int = 0                       # completed, any domain
+    recovery_time_s: float = 0.0              # summed detection→recovered
+    replayed_batches: int = 0                 # WAL batches replayed (process)
+    recovery_events: List[dict] = dataclasses.field(default_factory=list)
 
 
 class PageRankSession:
@@ -191,7 +209,9 @@ class PageRankSession:
     def __init__(self, *, hg: Optional[HostGraph] = None,
                  g: Optional[GraphSnapshot] = None,
                  config: Optional[EngineConfig] = None,
-                 r0=None, interpret: Optional[bool] = None):
+                 r0=None, interpret: Optional[bool] = None,
+                 store_dir: Optional[str] = None,
+                 _restore_attach: bool = False):
         if config is None:
             config = EngineConfig()
         if not isinstance(config, EngineConfig):
@@ -226,6 +246,45 @@ class PageRankSession:
         self._g_prev: Optional[GraphSnapshot] = None
         self._r_prev = None
 
+        # -- fault domains / durability (docs/FAULTS.md) ---------------------
+        self._fault_plan = fd.resolve_thread_plan(config.faults,
+                                                  config.fault_domain)
+        self._shard_faults: Optional[fd.ShardFaultDomain] = None
+        if self._sharded:
+            # each session consumes its OWN schedule: the domain object
+            # lives on a frozen, shareable config, so adopt a clone
+            self._shard_faults = (
+                config.fault_domain.clone()
+                if isinstance(config.fault_domain, fd.ShardFaultDomain)
+                else fd.ShardFaultDomain())
+        self._recoveries: List[fd.RecoveryRecord] = []
+        self._batch_index = 0       # total update batches applied (WAL key)
+        self._replaying = False     # True while restore() replays the WAL
+        self.store_dir = store_dir
+        self.store: Optional[SessionStore] = None
+        self._process_domain: Optional[fd.ProcessFaultDomain] = None
+        if config.durability == "wal":
+            if hg is None:
+                raise ValueError(
+                    "durability='wal' needs a host graph (from_graph, or "
+                    "from_snapshot with hg=) — the WAL replays edge "
+                    "batches against it")
+            if store_dir is None:
+                raise ValueError(
+                    "durability='wal' needs a store_dir= (the directory "
+                    "holding the checkpoint + WAL)")
+            self.store = SessionStore(store_dir)
+            if not _restore_attach and (
+                    self.store.read_meta() is not None
+                    or self.store.latest_checkpoint_index is not None):
+                raise ValueError(
+                    f"store_dir {store_dir!r} already holds a session — "
+                    "reopen it with PageRankSession.restore(dir) (replays "
+                    "its WAL), or give a new session a fresh directory; "
+                    "mixing two sessions' logs would corrupt both")
+            self._process_domain = fd.ProcessFaultDomain(
+                self.store, checkpoint_interval=config.checkpoint_interval)
+
         if self._sharded:
             self._init_sharded(g, r0)
         elif self._stream:
@@ -233,27 +292,52 @@ class PageRankSession:
         else:
             self._init_snapshot(g, r0)
 
+        # a config-carried fault schedule is validated against the REAL
+        # mesh now that it exists — never mid-update (see
+        # inject_shard_fault)
+        if self._shard_faults is not None:
+            bad = [f.shard for f in self._shard_faults.pending_faults
+                   if not 0 <= f.shard < self.runtime.n_dev]
+            if bad:
+                raise ValueError(
+                    f"ShardFaultDomain schedules shard(s) {bad} outside "
+                    f"the {self.runtime.n_dev}-shard mesh")
+
+        # durable bootstrap: a FRESH store gets the session meta + one
+        # atomic checkpoint of the born state (batch index 0), so a crash
+        # before the first update already restores; restore() re-attaches
+        # to a populated store and must not clobber it
+        if (self.store is not None
+                and self.store.latest_checkpoint_index is None):
+            self._checkpoint_now()          # writes meta on a fresh store
+
     # -- constructors --------------------------------------------------------
     @classmethod
     def from_graph(cls, hg: HostGraph, *,
                    config: Optional[EngineConfig] = None, r0=None,
-                   interpret: Optional[bool] = None) -> "PageRankSession":
+                   interpret: Optional[bool] = None,
+                   store_dir: Optional[str] = None) -> "PageRankSession":
         """Open a session over a host graph.  With the pallas engine this is
         **stream mode**: the graph is snapshotted once and every engine
         operand is maintained incrementally (O(batch) per update, zero
         post-warmup driver retraces).  ``r0=None`` runs one initial solve
-        (``variant="static"`` semantics) so the session is born serving."""
-        return cls(hg=hg, config=config, r0=r0, interpret=interpret)
+        (``variant="static"`` semantics) so the session is born serving.
+        ``store_dir`` attaches the durable store a
+        ``config.durability="wal"`` session checkpoints and logs through."""
+        return cls(hg=hg, config=config, r0=r0, interpret=interpret,
+                   store_dir=store_dir)
 
     @classmethod
     def from_snapshot(cls, g: GraphSnapshot, *,
                       config: Optional[EngineConfig] = None, r0=None,
                       hg: Optional[HostGraph] = None,
-                      interpret: Optional[bool] = None) -> "PageRankSession":
+                      interpret: Optional[bool] = None,
+                      store_dir: Optional[str] = None) -> "PageRankSession":
         """Wrap an existing device snapshot (snapshot mode; the block grid
         comes from the snapshot, not ``config.block_size``).  Pass ``hg``
         as well to enable ``update``."""
-        return cls(hg=hg, g=g, config=config, r0=r0, interpret=interpret)
+        return cls(hg=hg, g=g, config=config, r0=r0, interpret=interpret,
+                   store_dir=store_dir)
 
     # -- init paths ----------------------------------------------------------
     def _init_stream(self, r0) -> None:
@@ -270,7 +354,7 @@ class PageRankSession:
         self._alpha = jnp.asarray(cfg.alpha, dt)
         self._tau = jnp.asarray(cfg.tau, dt)
         self._tau_f = jnp.asarray(cfg.resolved_tau_f(expand=True), dt)
-        plan = cfg.faults or flt.NO_FAULTS
+        plan = self._fault_plan or flt.NO_FAULTS
         t = plan.device_tables(cfg.max_iterations)
         self._fault_tables = tuple(jnp.asarray(a) for a in t)
 
@@ -292,7 +376,10 @@ class PageRankSession:
                 active_policy=cfg.active_policy,
                 mat=self.inc.mat, aux=self.inc.aux,
                 interpret=self.interpret, backend=self.backend)
-        self.R = jnp.asarray(r0, dt)[:self.n_pad]
+        r0 = jnp.asarray(r0, dt)
+        if r0.shape[0] < self.n_pad:       # e.g. length-n restore state
+            r0 = jnp.zeros((self.n_pad,), dt).at[:r0.shape[0]].set(r0)
+        self.R = r0[:self.n_pad]
 
     def _init_snapshot(self, g: Optional[GraphSnapshot], r0) -> None:
         cfg = self.config
@@ -379,7 +466,7 @@ class PageRankSession:
         R, stats = self.engine.run(
             g, R0, affected0, mode=mode or cfg.mode, expand=expand,
             alpha=cfg.alpha, tau=cfg.tau, tau_f=cfg.tau_f,
-            max_iterations=cfg.max_iterations, faults=cfg.faults,
+            max_iterations=cfg.max_iterations, faults=self._fault_plan,
             tile=cfg.tile, active_policy=cfg.active_policy,
             mat=mat, aux=aux, backend=cfg.backend,
             interpret=self.interpret)
@@ -425,13 +512,42 @@ class PageRankSession:
                 "this session wraps a bare snapshot (from_snapshot without "
                 "hg=); build it with PageRankSession.from_graph to stream "
                 "updates")
-        if self._sharded:
-            res = self._update_sharded(deletions, insertions, variant)
-        elif self._stream:
-            res = self._update_stream(deletions, insertions, variant)
-        else:
-            res = self._update_snapshot(deletions, insertions, variant)
+        bidx = self._batch_index + 1
+        wal_undo = None
+        if self.store is not None and not self._replaying:
+            wal_undo = self.store.wal_size()
+        try:
+            if wal_undo is not None:
+                # write-ahead: the batch is durable BEFORE any device
+                # scatter, so a crash-stop at any instant restores to
+                # either fully-before or (via replay) fully-after this
+                # batch.  Inside the try: a failed append (torn frame on
+                # ENOSPC) must also roll back, or the broken tail would
+                # hide every later acknowledged record from read_wal
+                self.store.append_wal(
+                    batch_index=bidx, variant=variant,
+                    deletions=np.asarray(deletions,
+                                         np.int64).reshape(-1, 2),
+                    insertions=np.asarray(insertions,
+                                          np.int64).reshape(-1, 2))
+            if self._sharded:
+                res = self._update_sharded(deletions, insertions, variant)
+            elif self._stream:
+                res = self._update_stream(deletions, insertions, variant)
+            else:
+                res = self._update_snapshot(deletions, insertions, variant)
+        except BaseException:
+            # the batch was REJECTED in-process (it never became session
+            # state): revoke its record so a later restore does not replay
+            # a batch the live session refused
+            if wal_undo is not None:
+                self.store.truncate_wal(wal_undo)
+            raise
+        self._batch_index = bidx
         self._history.append(res)
+        if (self._process_domain is not None and not self._replaying
+                and bidx % self._process_domain.checkpoint_interval == 0):
+            self._checkpoint_now()
         return res
 
     def _crossing(self, edges_rel: np.ndarray) -> int:
@@ -498,9 +614,15 @@ class PageRankSession:
             R0 = jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype)
         else:
             R0 = self.R
-        R, dstats = self.runtime.drive(
-            R0, affected, expand=(variant == "df"),
-            max_sweeps=cfg.max_iterations)
+        fault = (self._shard_faults.pop_pending()
+                 if self._shard_faults is not None else None)
+        if fault is None:
+            R, dstats = self.runtime.drive(
+                R0, affected, expand=(variant == "df"),
+                max_sweeps=cfg.max_iterations)
+        else:
+            R, dstats = self._drive_with_shard_fault(
+                R0, affected, expand=(variant == "df"), fault=fault)
         self.R = R
         self._x_full += dstats.full_exchanges
         self._x_delta += dstats.delta_exchanges
@@ -509,13 +631,124 @@ class PageRankSession:
                            edges_processed=dstats.edges_processed,
                            converged=dstats.converged)
         cache1 = self.runtime.cache_size()
+        retraces = (cache1 - cache0 if cache0 >= 0 and cache1 >= 0 else -1)
+        if fault is not None:
+            # a consumed shard fault legitimately (re)compiles — on a new
+            # mesh after a permanent loss — accounted through
+            # report().recovery_events, not the streaming retrace counter
+            retraces = 0
         return StreamBatchResult(
             ranks=R, stats=stats,
             wall_time_s=time.perf_counter() - t0,
             batch_edges=len(dels) + len(ins),
             driver_cache_size=cache1,
-            driver_retraces=(cache1 - cache0
-                             if cache0 >= 0 and cache1 >= 0 else -1))
+            driver_retraces=retraces)
+
+    # -- shard fault domain (docs/FAULTS.md) ---------------------------------
+    def inject_shard_fault(self, shard: int, *, at_sweep: int = 1,
+                           permanent: bool = True) -> None:
+        """Schedule one shard failure, consumed by the next :meth:`update`:
+        the drive runs normally for ``at_sweep`` sweeps, then shard
+        ``shard`` crash-stops (``permanent=True``, the mesh shrinks around
+        it) or stalls and later rejoins (``permanent=False``).  Recovery —
+        the paper's helping mechanism generalized to shards — happens
+        inside the same update call; :meth:`report` records it."""
+        self._ensure_open()
+        if not self._sharded:
+            raise ValueError(
+                "shard faults require topology='sharded' (single-device "
+                "sessions take a thread-domain FaultPlan instead)")
+        # validate HERE, not mid-update: a fault consumed after the batch
+        # has already mutated graph state must never be the thing that
+        # raises (the update would be half-applied)
+        if not (0 <= int(shard) < self.runtime.n_dev):
+            raise ValueError(f"shard {shard} out of range (mesh has "
+                             f"{self.runtime.n_dev} shards)")
+        self._shard_faults.inject(shard, at_sweep=at_sweep,
+                                  permanent=permanent)
+
+    def _drive_with_shard_fault(self, R0, affected, *, expand: bool,
+                                fault: "fd.ShardFault"
+                                ) -> Tuple[jnp.ndarray, dist.DistStats]:
+        """One sharded drive interrupted by a shard failure at
+        ``fault.at_sweep`` sweeps, then recovered by **shard helping**:
+
+        1. suspend the drive at the crash point, keeping the per-vertex
+           (affected, still-unconverged) state;
+        2. the dead shard's un-converged row-blocks — identified through
+           the runtime's slot tables / ownership ranges — are re-marked as
+           affected-and-unconverged (their last writes may be torn);
+        3. permanent loss: elastically re-partition onto the surviving
+           shards (:meth:`~repro.core.distributed.DistRuntime.shrink`),
+           which re-homes every row-block the dead shard owned;
+        4. resume the drive from the mid-crash ranks — the surviving
+           shards pick up the re-marked rows and the DF expansion
+           propagates their corrections, exactly the paper's recovery
+           argument one level up."""
+        cfg = self.config
+        rt = self.runtime
+        # a consumed fault must NEVER raise: the batch is already applied
+        # to graph state when the drive runs.  A fault made stale by an
+        # earlier shrink (its shard no longer exists) is dropped; a
+        # permanent loss of the only remaining shard cannot re-partition
+        # and degrades to a transient stall
+        if not (0 <= fault.shard < rt.n_dev):
+            return rt.drive(R0, affected, expand=expand,
+                            max_sweeps=cfg.max_iterations)
+        if fault.permanent and rt.n_dev == 1:
+            fault = dataclasses.replace(fault, permanent=False)
+        phase1 = max(1, min(int(fault.at_sweep), cfg.max_iterations))
+        R_mid, st1, (aff_mid, rc_mid) = rt.drive(
+            R0, affected, expand=expand, max_sweeps=phase1,
+            collect_state=True)
+        if st1.converged:           # crash scheduled past convergence
+            return R_mid, st1
+        t0 = time.perf_counter()
+        n = self.n
+        aff_h = np.asarray(aff_mid)[:n]
+        rc_h = np.asarray(rc_mid)[:n]
+        R_h = np.asarray(R_mid)
+        lo, hi = rt.owned_range(fault.shard)
+        dead_rows = np.zeros(n, bool)
+        dead_rows[lo:min(hi, n)] = True
+        # rows the survivors must help: everything still unconverged plus
+        # every affected row the dead shard owned (its last sweep's writes
+        # cannot be trusted)
+        help_mask = rc_h | (dead_rows & aff_h)
+        helped = int((help_mask & dead_rows).sum())
+        if fault.permanent:
+            rt2 = rt.shrink(fault.shard)
+            self.runtime = rt2
+            self._mesh = rt2.mesh
+            self._shard_spec = dataclasses.replace(
+                self._shard_spec, n_shards=rt2.n_dev)
+            self.n_pad = rt2.n_pad
+            self.valid = rt2.valid
+            # ownership boundaries moved: recount the realized edge cut
+            self._cut_edges = int(self._crossing(self._hg_rel.edges))
+        else:
+            rt2 = rt
+        r2 = np.zeros(rt2.n_pad, R_h.dtype)
+        r2[:n] = R_h[:n]
+        aff2 = rt2.mask_from_indices(np.nonzero(aff_h | help_mask)[0])
+        rc2 = rt2.mask_from_indices(np.nonzero(help_mask)[0])
+        R, st2 = rt2.drive(jnp.asarray(r2), aff2, expand=True, rc0=rc2,
+                           max_sweeps=cfg.max_iterations)
+        wall = time.perf_counter() - t0
+        self._recoveries.append(fd.RecoveryRecord(
+            domain="shard", batch_index=self._batch_index + 1,
+            wall_time_s=wall, shard=fault.shard, permanent=fault.permanent,
+            helped_vertices=helped, recovery_sweeps=st2.sweeps,
+            description=(
+                f"shard {fault.shard} "
+                f"{'lost — elastic re-partition to' if fault.permanent else 'stalled — rejoined,'} "
+                f"{rt2.n_dev} shards; {helped} un-converged rows helped")))
+        stats = dist.DistStats(
+            sweeps=st1.sweeps + st2.sweeps, converged=st2.converged,
+            full_exchanges=st1.full_exchanges + st2.full_exchanges,
+            delta_exchanges=st1.delta_exchanges + st2.delta_exchanges,
+            edges_processed=st1.edges_processed + st2.edges_processed)
+        return R, stats
 
     def _update_stream(self, deletions, insertions, variant: str = "df"
                        ) -> StreamBatchResult:
@@ -638,6 +871,15 @@ class PageRankSession:
         if variant not in VARIANTS:
             raise ValueError(f"variant={variant!r} invalid; "
                              f"expected one of {VARIANTS}")
+        res = self._recompute(variant)
+        if self._process_domain is not None and not self._replaying:
+            # recompute changes served state OUTSIDE the WAL's batch
+            # stream — persist a checkpoint so restore() matches what the
+            # live session was serving
+            self._checkpoint_now()
+        return res
+
+    def _recompute(self, variant: str) -> PagerankResult:
         if self._sharded:
             return self._recompute_sharded(variant)
         if variant in ("static", "nd"):
@@ -807,7 +1049,7 @@ class PageRankSession:
             svc._detach(self)
         for attr in ("R", "inc", "runtime", "g", "valid", "_out_deg",
                      "_rb_in", "_rb_out", "_bmat", "_fault_tables",
-                     "_r_prev"):
+                     "_r_prev", "store", "_process_domain"):
             if hasattr(self, attr):
                 setattr(self, attr, None)
 
@@ -818,6 +1060,109 @@ class PageRankSession:
     def __exit__(self, exc_type, exc, tb) -> bool:
         self.close()
         return False
+
+    # -- durability / process fault domain (docs/FAULTS.md) ------------------
+    def _meta(self) -> dict:
+        """JSON-able store meta: graph identity + a config echo (the
+        non-serializable ``faults`` / ``fault_domain`` objects are
+        injection schedules, not state — they are not persisted)."""
+        cfgd = {}
+        for f in dataclasses.fields(self.config):
+            if f.name in ("faults", "fault_domain"):
+                continue
+            v = getattr(self.config, f.name)
+            if f.name == "dtype" and v is not None:
+                v = str(jnp.dtype(v))
+            cfgd[f.name] = v
+        return {"format": 1, "kind": "pagerank-session",
+                "n": int(self.hg.n), "config": cfgd}
+
+    def _checkpoint_into(self, store: SessionStore) -> str:
+        """One atomic checkpoint of the current session state: caller-order
+        ranks + the host edge set, keyed by the applied-batch count."""
+        if store.read_meta() is None:
+            store.write_meta(self._meta())
+        return store.checkpoint(
+            ranks=np.asarray(self.ranks[:self.n]), edges=self.hg.edges,
+            batch_index=self._batch_index)
+
+    def _checkpoint_now(self) -> str:
+        return self._checkpoint_into(self.store)
+
+    def save(self, directory: Optional[str] = None) -> str:
+        """Force one atomic checkpoint of the current state (ranks +
+        edge set, keyed by the applied-batch count).  Durable sessions
+        checkpoint into their attached store (also shortening the WAL
+        replay a later restore pays); any session may pass ``directory``
+        to save into a fresh :class:`~repro.ckpt.checkpoint.SessionStore`.
+        Returns the checkpoint path."""
+        self._ensure_open()
+        if self.hg is None:
+            raise ValueError("save() needs a host graph (from_graph, or "
+                             "from_snapshot with hg=)")
+        store = self.store
+        if directory is not None and (
+                store is None
+                or os.path.abspath(directory) != os.path.abspath(store.dir)):
+            store = SessionStore(directory)
+        if store is None:
+            raise ValueError(
+                "save() needs a directory= (this session has no attached "
+                "store; open it with durability='wal' + store_dir= for "
+                "continuous durability)")
+        return self._checkpoint_into(store)
+
+    @classmethod
+    def restore(cls, directory: str, *,
+                config: Optional[EngineConfig] = None,
+                interpret: Optional[bool] = None) -> "PageRankSession":
+        """Reopen a session from its durable store: newest valid rank
+        checkpoint + WAL replay of every batch logged after it, through
+        the normal update hot path (stream mode replays recompile-free).
+        ``config`` overrides the stored config — e.g. a different
+        ``n_shards`` restores onto a different device count (elastic
+        rescale).  The recovery is recorded in ``report()``
+        (``replayed_batches``, ``recovery_time_s``)."""
+        t0 = time.perf_counter()
+        store = SessionStore(directory)
+        meta = store.read_meta()
+        if meta is None:
+            raise ValueError(f"{directory!r} is not a session store "
+                             "(missing meta.json)")
+        got = store.restore_latest_state()
+        if got is None:
+            raise ValueError(f"{directory!r} holds no valid checkpoint "
+                             "(all steps corrupt or none written)")
+        state, ckpt_idx = got
+        if config is None:
+            config = EngineConfig.from_kwargs(**meta["config"])
+        hg = HostGraph(int(meta["n"]), state["edges"])
+        sess = cls(hg=hg, config=config, r0=state["ranks"],
+                   interpret=interpret,
+                   store_dir=directory if config.durability == "wal"
+                   else None,
+                   _restore_attach=True)
+        sess._batch_index = ckpt_idx
+        recs = store.read_wal(after=ckpt_idx)
+        sess._replaying = True
+        try:
+            for rec in recs:
+                sess.update(rec.deletions, rec.insertions,
+                            variant=rec.variant)
+        finally:
+            sess._replaying = False
+        # replay warmed every hot-path cache entry the stream needs; the
+        # post-restore retrace counter starts here.  With nothing to
+        # replay the session is cold — leave _warm_idx unset so report()
+        # excuses the first (compile-bearing) update as usual
+        sess._warm_idx = len(sess._history) if recs else None
+        sess._recoveries.append(fd.RecoveryRecord(
+            domain="process", batch_index=ckpt_idx,
+            wall_time_s=time.perf_counter() - t0,
+            replayed_batches=len(recs),
+            description=(f"restored from checkpoint {ckpt_idx} + "
+                         f"{len(recs)} WAL batch(es)")))
+        return sess
 
     # -- warmup / reporting --------------------------------------------------
     def warmup(self) -> None:
@@ -889,7 +1234,13 @@ class PageRankSession:
             partitioner=spec.partitioner if spec is not None else None,
             edge_cut=(self._cut_edges / max(self.hg.m, 1)
                       if spec is not None else None),
-            collective_bytes_per_sweep=wire)
+            collective_bytes_per_sweep=wire,
+            durability=self.config.durability,
+            recoveries=len(self._recoveries),
+            recovery_time_s=sum(r.wall_time_s for r in self._recoveries),
+            replayed_batches=sum(r.replayed_batches
+                                 for r in self._recoveries),
+            recovery_events=[r.to_dict() for r in self._recoveries])
 
     # -- what-if branching ---------------------------------------------------
     def fork(self) -> "PageRankSession":
@@ -905,6 +1256,16 @@ class PageRankSession:
         new._warm_idx = 0 if self._warm_idx is not None else None
         new._queries = 0
         new._service = None       # forks are not registered with a service
+        # a fork is a what-if branch, not a durable replica: two writers
+        # on one WAL would interleave corruptingly, so the twin detaches
+        # (save(directory=...) gives it its own store when needed)
+        new.store = None
+        new.store_dir = None
+        new._process_domain = None
+        new._recoveries = []
+        new._replaying = False
+        if self._shard_faults is not None:
+            new._shard_faults = fd.ShardFaultDomain()
         if self.inc is not None:
             aux = self.inc.aux
             new.inc = IncrementalPullMatrix(

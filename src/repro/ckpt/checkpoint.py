@@ -1,14 +1,37 @@
-"""Atomic, elastic checkpointing (fault tolerance at the framework level).
+"""Atomic, elastic checkpointing + the durable-session store.
 
-Layout:  <dir>/step_<n>/manifest.json + one ``.npy`` per leaf.
-  * atomic   — written to ``step_<n>.tmp`` then ``os.rename``d; a crash
-    mid-save never corrupts the latest valid checkpoint;
-  * elastic  — arrays are stored unsharded with their *logical* tree
-    structure; ``restore`` re-device_puts onto whatever mesh/sharding the
-    restarted job runs with (any divisor device count — elastic rescale);
-  * auto-resume — ``restore_latest`` scans for the newest valid manifest
-    (validated by per-leaf checksums), so a relaunched job continues where
-    the last complete save finished.
+Two layers:
+
+* :class:`Checkpointer` — generic pytree checkpoints.
+  Layout:  <dir>/step_<n>/manifest.json + one ``.npy`` per leaf.
+    - atomic   — written to ``step_<n>.tmp`` then ``os.rename``d; a crash
+      mid-save never corrupts the latest valid checkpoint (orphaned
+      ``.tmp`` dirs from crashed saves are swept on the next save);
+    - elastic  — arrays are stored unsharded with their *logical* tree
+      structure; ``restore`` re-device_puts onto whatever mesh/sharding
+      the restarted job runs with (any divisor device count);
+    - auto-resume — ``restore_latest`` scans newest→oldest and returns the
+      first checkpoint that passes validation (readable manifest, every
+      per-leaf checksum intact), *skipping* corrupted steps instead of
+      raising, so one bad write never strands a relaunched job.
+
+* :class:`SessionStore` — the process-fault-domain backing store of a
+  durable :class:`~repro.api.session.PageRankSession` (see
+  docs/FAULTS.md).  One directory holds
+
+    - ``meta.json``   — graph identity + config echo (atomic write);
+    - ``ckpt/``       — a Checkpointer of {ranks, edges} keyed by the
+      batch index the checkpoint captures;
+    - ``wal.bin``     — a write-ahead log of applied update batches.
+
+  WAL framing (little-endian):  per record ``b"WR1\\n" | u32 payload_len |
+  u32 crc32(payload) | payload``; the payload packs
+  ``u64 batch_index | u8 variant | u32 n_dels | u32 n_ins`` followed by the
+  two int64 edge arrays.  Appends are flushed + fsync'd **before** the
+  batch touches device state, so a crash-stop at any instant loses at most
+  work that was never acknowledged.  Readers accept exactly the valid
+  prefix: a truncated or checksum-broken tail (the crash case) terminates
+  the scan cleanly instead of raising.
 """
 from __future__ import annotations
 
@@ -16,8 +39,9 @@ import dataclasses
 import json
 import os
 import shutil
+import struct
 import zlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -40,10 +64,9 @@ class Checkpointer:
 
     # -- save -----------------------------------------------------------------
     def save(self, params, opt_state, step: int) -> str:
+        self._sweep_tmp()           # also clears any stale tmp for `step`
         tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
         final = os.path.join(self.dir, f"step_{step:08d}")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
         os.makedirs(tmp)
         manifest = {"step": int(step), "leaves": {}}
         for name, tree in (("params", params), ("opt", opt_state)):
@@ -63,6 +86,12 @@ class Checkpointer:
         os.rename(tmp, final)            # atomic publish
         self._gc()
         return final
+
+    def _sweep_tmp(self) -> None:
+        """Remove orphaned ``step_<n>.tmp`` dirs left by crashed saves."""
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     def _gc(self) -> None:
         steps = sorted(self._list_steps())
@@ -115,15 +144,213 @@ class Checkpointer:
 
     def restore_latest(self, params_like=None, opt_like=None, *,
                        shardings=None):
+        """Restore the newest checkpoint that passes validation.  A step
+        whose manifest is unreadable or whose per-leaf checksum mismatches
+        is *skipped* (newest→oldest scan) — one corrupted write must not
+        strand the job when an older valid checkpoint exists.  Returns
+        ``None`` when no valid checkpoint remains."""
         steps = sorted(self._list_steps())
         if not steps:
             return None
         if params_like is None:
             raise ValueError("restore_latest needs template pytrees")
-        return self.restore(steps[-1], params_like, opt_like,
-                            shardings=shardings)
+        for step in reversed(steps):
+            try:
+                return self.restore(step, params_like, opt_like,
+                                    shardings=shardings)
+            except (OSError, IOError, KeyError, ValueError,
+                    json.JSONDecodeError):
+                continue             # corrupted step → fall back to previous
+        return None
 
     @property
     def latest_step(self) -> Optional[int]:
         steps = self._list_steps()
         return max(steps) if steps else None
+
+
+# ---------------------------------------------------------------------------
+# durable-session store (process fault domain)
+# ---------------------------------------------------------------------------
+
+_WAL_MAGIC = b"WR1\n"
+_WAL_HEAD = struct.Struct("<4sII")          # magic, payload_len, crc32
+_WAL_PAYLOAD_HEAD = struct.Struct("<QBII")  # batch_index, variant, nd, ni
+
+# WAL variant codes (order is the on-disk format — append only)
+WAL_VARIANTS = ("static", "nd", "dt", "df")
+
+
+@dataclasses.dataclass(frozen=True)
+class WalRecord:
+    """One durably-logged update batch."""
+    batch_index: int
+    variant: str
+    deletions: np.ndarray      # [k, 2] int64
+    insertions: np.ndarray     # [k, 2] int64
+
+
+class SessionStore:
+    """Directory-backed durability for one PageRank session: atomic
+    {ranks, edges} checkpoints keyed by batch index + a crash-tolerant WAL
+    of the batches applied since.  Restore = newest valid checkpoint +
+    replay of every WAL record with a higher batch index (the session
+    layer drives the replay through its normal update hot path)."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self.ckpt = Checkpointer(os.path.join(directory, "ckpt"), keep=keep)
+        self.wal_path = os.path.join(directory, "wal.bin")
+
+    # -- meta ----------------------------------------------------------------
+    def write_meta(self, meta: dict) -> None:
+        tmp = os.path.join(self.dir, "meta.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.dir, "meta.json"))
+
+    def read_meta(self) -> Optional[dict]:
+        path = os.path.join(self.dir, "meta.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    # -- checkpoints ----------------------------------------------------------
+    @staticmethod
+    def _template() -> dict:
+        # shapes/dtypes come from the manifest; the template only carries
+        # the tree structure (keys)
+        return {"ranks": np.zeros(0), "edges": np.zeros((0, 2), np.int64)}
+
+    def checkpoint(self, *, ranks: np.ndarray, edges: np.ndarray,
+                   batch_index: int) -> str:
+        """Atomically persist the session state *after* ``batch_index``
+        batches have been applied, then compact the WAL: records at or
+        below the OLDEST retained checkpoint can never be replayed (every
+        restore starts from some retained checkpoint), so dropping them
+        bounds WAL size and restore cost by the checkpoint window instead
+        of the session's lifetime."""
+        state = {"ranks": np.asarray(ranks),
+                 "edges": np.asarray(edges, np.int64)}
+        path = self.ckpt.save(state, {}, batch_index)
+        steps = self.ckpt._list_steps()
+        if steps:
+            self.compact_wal(keep_after=min(steps))
+        return path
+
+    def compact_wal(self, *, keep_after: int) -> None:
+        """Atomically rewrite the WAL keeping only records with
+        ``batch_index > keep_after`` (crash-safe: tmp + rename; a crash
+        mid-compaction leaves the old complete log)."""
+        if not os.path.exists(self.wal_path):
+            return
+        recs = self.read_wal(after=keep_after)
+        tmp = self.wal_path + ".tmp"
+        with open(tmp, "wb") as f:
+            for r in recs:
+                f.write(self._encode_record(r.batch_index, r.variant,
+                                            r.deletions, r.insertions))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.wal_path)
+
+    def restore_latest_state(self) -> Optional[Tuple[dict, int]]:
+        """(state, batch_index) of the newest valid checkpoint, skipping
+        corrupted steps; None when the store holds no valid checkpoint."""
+        got = self.ckpt.restore_latest(self._template(), {})
+        if got is None:
+            return None
+        state, _, step = got
+        return ({k: np.asarray(v) for k, v in state.items()}, int(step))
+
+    @property
+    def latest_checkpoint_index(self) -> Optional[int]:
+        return self.ckpt.latest_step
+
+    # -- write-ahead log ------------------------------------------------------
+    @staticmethod
+    def _encode_record(batch_index: int, variant: str,
+                       deletions: np.ndarray, insertions: np.ndarray
+                       ) -> bytes:
+        dels = np.ascontiguousarray(
+            np.asarray(deletions, np.int64).reshape(-1, 2))
+        ins = np.ascontiguousarray(
+            np.asarray(insertions, np.int64).reshape(-1, 2))
+        payload = (_WAL_PAYLOAD_HEAD.pack(
+            int(batch_index), WAL_VARIANTS.index(variant),
+            dels.shape[0], ins.shape[0])
+            + dels.tobytes() + ins.tobytes())
+        return _WAL_HEAD.pack(_WAL_MAGIC, len(payload),
+                              zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+    def append_wal(self, *, batch_index: int, variant: str,
+                   deletions: np.ndarray, insertions: np.ndarray) -> None:
+        """Durably append one batch BEFORE it is applied to session state
+        (flush + fsync): after a crash the record either exists completely
+        or is a truncated tail the reader drops — never a half-applied
+        batch without a log entry."""
+        frame = self._encode_record(batch_index, variant, deletions,
+                                    insertions)
+        with open(self.wal_path, "ab") as f:
+            f.write(frame)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def read_wal(self, *, after: int = -1) -> List[WalRecord]:
+        """Every valid WAL record with ``batch_index > after``, in append
+        order.  Scanning stops at the first truncated or checksum-broken
+        frame (the crash tail) — the valid prefix is the durable state."""
+        if not os.path.exists(self.wal_path):
+            return []
+        with open(self.wal_path, "rb") as f:
+            buf = f.read()
+        out: List[WalRecord] = []
+        off = 0
+        while off + _WAL_HEAD.size <= len(buf):
+            magic, plen, crc = _WAL_HEAD.unpack_from(buf, off)
+            start = off + _WAL_HEAD.size
+            if magic != _WAL_MAGIC or start + plen > len(buf):
+                break                          # truncated / corrupt tail
+            payload = buf[start:start + plen]
+            if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+                break
+            bidx, var, nd, ni = _WAL_PAYLOAD_HEAD.unpack_from(payload, 0)
+            body = payload[_WAL_PAYLOAD_HEAD.size:]
+            need = (nd + ni) * 2 * 8
+            if len(body) != need or var >= len(WAL_VARIANTS):
+                break
+            dels = np.frombuffer(body[:nd * 16], np.int64).reshape(-1, 2)
+            ins = np.frombuffer(body[nd * 16:], np.int64).reshape(-1, 2)
+            if bidx > after:
+                out.append(WalRecord(batch_index=int(bidx),
+                                     variant=WAL_VARIANTS[var],
+                                     deletions=dels.copy(),
+                                     insertions=ins.copy()))
+            off = start + plen
+        return out
+
+    def wal_size(self) -> int:
+        """Current WAL length in bytes (0 when no log exists) — capture
+        before an append to make it revocable via :meth:`truncate_wal`."""
+        return (os.path.getsize(self.wal_path)
+                if os.path.exists(self.wal_path) else 0)
+
+    def truncate_wal(self, size: int) -> None:
+        """Roll the WAL back to a byte offset.  Used when a batch is
+        *rejected in-process* after its record was appended (validation
+        errors inside the apply): the record must not survive to be
+        replayed by a later restore, since the session never held it."""
+        if os.path.exists(self.wal_path):
+            with open(self.wal_path, "rb+") as f:
+                f.truncate(size)
+                f.flush()
+                os.fsync(f.fileno())
+
+    def wal_tip(self) -> int:
+        """Highest durably-logged batch index (-1 for an empty WAL)."""
+        recs = self.read_wal()
+        return recs[-1].batch_index if recs else -1

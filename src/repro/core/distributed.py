@@ -490,12 +490,18 @@ class _SlabSet:
             self.slot_of[s * n + d] = (o, sl)
         return A, B
 
+    def edges(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The registered (src, dst) edge set decoded from the slot-table
+        keys — the single owner of the ``s*n + d`` key scheme."""
+        keys = np.fromiter(self.slot_of.keys(), np.int64,
+                           count=len(self.slot_of))
+        return keys // self.n, keys % self.n
+
     def rebuild(self, n_dev: int) -> Tuple[np.ndarray, np.ndarray]:
         """Reconstruct the slabs from the registered edge set at the next
         capacity bucket (the growth event — one sweep retrace)."""
-        keys = np.fromiter(self.slot_of.keys(), np.int64,
-                           count=len(self.slot_of))
-        return self.build(keys // self.n, keys % self.n, n_dev)
+        src, dst = self.edges()
+        return self.build(src, dst, n_dev)
 
     def stage(self, dels: np.ndarray, ins: np.ndarray):
         """Register one effective batch and return the (dev, slot, src,
@@ -703,11 +709,18 @@ class DistRuntime:
                 marks_dtype=self._marks_dtype)
         return self._sweeps[key]
 
-    def drive(self, R, affected, *, expand: bool, max_sweeps: int = 500
-              ) -> Tuple[jnp.ndarray, DistStats]:
+    def drive(self, R, affected, *, expand: bool, max_sweeps: int = 500,
+              rc0=None, collect_state: bool = False):
         """Converge one (R, affected) problem through the cached compiled
         sweep.  Ranks stay device-resident throughout; the per-sweep host
-        sync is the scalar convergence counter."""
+        sync is the scalar convergence counter.
+
+        ``rc0`` seeds the per-vertex still-unconverged flags (defaults to
+        the affected set); ``collect_state=True`` additionally returns the
+        final ``(affected, rc)`` vectors so a caller can *suspend* a drive
+        (e.g. at a shard-fault injection point) and resume it later —
+        possibly on a different mesh — from exactly the un-converged
+        row set.  Returns ``(R, stats)`` or ``(R, stats, (aff, rc))``."""
         sweep = self._sweep_for(expand)
         dg = self.dg
         sh_vec, _ = self._shardings()
@@ -715,7 +728,8 @@ class DistRuntime:
         R = jax.device_put(jnp.where(dg.vertex_valid, R[:self.n_pad], 0),
                            sh_vec)
         aff = jax.device_put(affected & dg.vertex_valid, sh_vec)
-        rc = aff
+        rc = (aff if rc0 is None
+              else jax.device_put(rc0 & dg.vertex_valid, sh_vec))
         cache = self._cache
         stats = DistStats()
         for _ in range(max_sweeps):
@@ -736,7 +750,52 @@ class DistRuntime:
                 stats.converged = True
                 break
         self._cache = cache
+        if collect_state:
+            return R, stats, (aff, rc)
         return R, stats
+
+    # -- shard fault domain ---------------------------------------------------
+    def owned_range(self, shard: int) -> Tuple[int, int]:
+        """[lo, hi) of real vertex ids (runtime-relabeled space) owned by
+        ``shard`` under the contiguous layout."""
+        lo = shard * self.n_loc
+        return lo, min((shard + 1) * self.n_loc, self.n)
+
+    def registered_edges(self) -> np.ndarray:
+        """The authoritative edge set (self-loops excluded) recovered from
+        the in-slab slot table — the survivors' view of the graph, used to
+        rebuild slabs after a permanent shard loss."""
+        src, dst = self._in.edges()
+        keep = src != dst
+        return np.stack([src[keep], dst[keep]], axis=1)
+
+    def shrink(self, dead: int) -> "DistRuntime":
+        """Elastic re-partition after a *permanent* shard loss: rebuild the
+        runtime on the surviving ``n_dev - 1`` devices, with the edge slabs
+        reconstructed from the (host-side) slot tables — no device in the
+        old mesh needs to be alive for this, which is the point.  Vertex
+        relabeling is untouched; only the contiguous ownership split
+        changes.  The recovery event costs one slab rebuild + sweep
+        compile; steady-state streaming resumes recompile-free after."""
+        axes = ((self.axis,) if isinstance(self.axis, str)
+                else tuple(self.axis))
+        if len(axes) != 1:
+            raise ValueError("shrink() supports single-axis meshes "
+                             f"(got axes {axes})")
+        if self.n_dev <= 1:
+            raise ValueError("cannot shrink a 1-shard runtime")
+        if not (0 <= dead < self.n_dev):
+            raise ValueError(f"dead shard {dead} out of range "
+                             f"(n_dev={self.n_dev})")
+        survivors = [d for i, d in enumerate(self.mesh.devices.flat)
+                     if i != dead]
+        mesh = Mesh(np.asarray(survivors), axes)
+        hg = HostGraph(self.n, self.registered_edges())
+        return DistRuntime(
+            hg, mesh, axis=self.axis, alpha=self._alpha, tau=self._tau,
+            tau_f=self._tau_f, exchange=self.exchange,
+            delta_capacity=self.delta_capacity, dtype=self.dtype,
+            marks_dtype=self._marks_dtype)
 
     def warmup(self, R) -> None:
         """Trace the per-batch pipeline (slab/degree patch at the base
@@ -842,6 +901,7 @@ class DistributedEngine:
     adapter is the snapshot-level interop surface."""
 
     name = "distributed"
+    fault_domains = ("shard", "process")
 
     def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
             max_iterations, faults, tile, active_policy,

@@ -1,0 +1,192 @@
+"""Unified fault domains: thread, shard, and process faults behind one
+recovery abstraction (docs/FAULTS.md).
+
+The paper's claim is that DF_LF "withstands random thread delays and
+crashes"; the non-blocking PageRank line of work argues fault tolerance
+must be a property of the *whole pipeline*.  This module is the one place
+the repo models faults, at three blast radii:
+
+* **thread** — the paper's own §5.3/§5.4 model: pseudo-threads inside one
+  sweep delay or crash-stop; surviving capacity re-covers their blocks on
+  later sweeps.  :class:`ThreadFaultDomain` wraps the deterministic
+  :class:`~repro.core.faults.FaultPlan` schedule (which stays the
+  device-table generator) behind the domain interface.
+
+* **shard** — one shard of a ``topology="sharded"`` session crashes or
+  stalls mid-drive.  Recovery generalizes the paper's helping mechanism to
+  shards: the surviving shards re-mark the dead shard's un-converged
+  row-blocks as affected (their identities come from the runtime's slot
+  tables) and drive them to convergence; a *permanent* loss additionally
+  re-partitions the vertex space elastically onto the surviving mesh
+  (:meth:`repro.core.distributed.DistRuntime.shrink`).
+  :class:`ShardFaultDomain` is the deterministic injection schedule.
+
+* **process** — crash-stop of the whole job.  Recovery is durability:
+  a :class:`~repro.ckpt.checkpoint.SessionStore` holds atomic rank
+  checkpoints plus a write-ahead log of applied batches;
+  ``PageRankSession.restore`` replays the WAL through the normal
+  zero-retrace hot path.  :class:`ProcessFaultDomain` carries the
+  store + checkpoint cadence.
+
+Every recovery, in any domain, appends a :class:`RecoveryRecord` that
+``session.report()`` / ``service.report()`` surface, so recovery time and
+replayed work are observable wherever the fault happened.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+from repro.core.faults import NO_FAULTS, FaultPlan  # noqa: F401 (re-export)
+
+DOMAINS = ("thread", "shard", "process")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryRecord:
+    """One completed recovery, in any domain."""
+    domain: str                    # "thread" | "shard" | "process"
+    batch_index: int               # session batch the fault hit (-1: restore)
+    wall_time_s: float             # detection → recovered
+    description: str = ""
+    # -- shard domain ---------------------------------------------------------
+    shard: Optional[int] = None
+    permanent: Optional[bool] = None
+    helped_vertices: int = 0       # un-converged rows surviving shards took
+    recovery_sweeps: int = 0
+    # -- process domain -------------------------------------------------------
+    replayed_batches: int = 0
+
+    def to_dict(self) -> dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+
+
+class FaultDomain:
+    """Base interface: a named blast radius with an injection schedule.
+    Concrete domains are plain configuration objects — the session/runtime
+    layers own the actual failure handling and call back into them."""
+
+    name: str = "?"
+
+    def validate_for(self, *, topology: str) -> None:
+        """Raise when the domain cannot apply to a session topology."""
+
+
+class ThreadFaultDomain(FaultDomain):
+    """Pseudo-thread delays/crashes inside one sweep (paper §5.3, §5.4).
+
+    Wraps a :class:`~repro.core.faults.FaultPlan` — the plan remains the
+    deterministic per-(thread, sweep) schedule and device-table generator;
+    the domain is how it enters :class:`~repro.api.config.EngineConfig`
+    (``fault_domain=ThreadFaultDomain(plan)`` is equivalent to the legacy
+    ``faults=plan``).  Recovery needs no extra machinery: unprocessed
+    blocks keep their convergence flags set and surviving capacity
+    re-covers them on later sweeps."""
+
+    name = "thread"
+
+    def __init__(self, plan: Optional[FaultPlan] = None, **plan_kw):
+        if plan is not None and plan_kw:
+            raise ValueError("pass a FaultPlan or FaultPlan kwargs, "
+                             "not both")
+        self.plan = plan if plan is not None else FaultPlan(**plan_kw)
+        if not hasattr(self.plan, "device_tables"):
+            raise ValueError("ThreadFaultDomain needs a FaultPlan "
+                             "(.device_tables())")
+
+    def validate_for(self, *, topology: str) -> None:
+        if topology == "sharded":
+            raise ValueError(
+                "thread-domain fault simulation is single-device (pseudo-"
+                "threads inside one sweep); sharded sessions take "
+                "ShardFaultDomain")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardFault:
+    """One scheduled shard failure: shard ``shard`` stops participating
+    after ``at_sweep`` sweeps of the next drive.  ``permanent=True`` is
+    crash-stop (the mesh shrinks around it); ``False`` is a transient
+    stall (the shard rejoins after the drive — the straggler case)."""
+    shard: int
+    at_sweep: int = 1
+    permanent: bool = True
+
+
+class ShardFaultDomain(FaultDomain):
+    """Deterministic shard-crash injection for ``topology="sharded"``
+    sessions.  Faults queue FIFO; each ``update`` consumes at most one.
+    The session performs the recovery (helping + optional elastic
+    re-partition) and logs a :class:`RecoveryRecord`."""
+
+    name = "shard"
+
+    def __init__(self, faults: Optional[List[ShardFault]] = None):
+        self._pending: List[ShardFault] = list(faults or [])
+
+    def inject(self, shard: int, *, at_sweep: int = 1,
+               permanent: bool = True) -> ShardFault:
+        f = ShardFault(shard=int(shard), at_sweep=int(at_sweep),
+                       permanent=bool(permanent))
+        self._pending.append(f)
+        return f
+
+    def pop_pending(self) -> Optional[ShardFault]:
+        return self._pending.pop(0) if self._pending else None
+
+    def clone(self) -> "ShardFaultDomain":
+        """Independent copy of the schedule.  Sessions consume their OWN
+        clone: the domain rides on a frozen (shareable) ``EngineConfig``,
+        and two sessions popping one shared ``_pending`` list would steal
+        each other's faults."""
+        return ShardFaultDomain(list(self._pending))
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_faults(self) -> List[ShardFault]:
+        return list(self._pending)
+
+    def validate_for(self, *, topology: str) -> None:
+        if topology != "sharded":
+            raise ValueError(
+                "ShardFaultDomain requires topology='sharded' (the shard "
+                "blast radius only exists on a device mesh)")
+
+
+class ProcessFaultDomain(FaultDomain):
+    """Crash-stop of the whole job.  There is nothing to *inject* in-
+    process — the failure is the process dying — so this domain is pure
+    recovery configuration: the durable store the session writes through
+    and the checkpoint cadence.  Constructed **internally** by durable
+    sessions (``EngineConfig(durability="wal")`` + ``store_dir=``); it is
+    not a valid ``fault_domain=`` config value."""
+
+    name = "process"
+
+    def __init__(self, store: Any, *, checkpoint_interval: int = 16):
+        self.store = store
+        self.checkpoint_interval = int(checkpoint_interval)
+        if self.checkpoint_interval < 1:
+            raise ValueError("checkpoint_interval must be >= 1")
+
+    def validate_for(self, *, topology: str) -> None:
+        raise ValueError(
+            "ProcessFaultDomain is constructed internally by durable "
+            "sessions — configure the process domain with "
+            "EngineConfig(durability='wal', checkpoint_interval=…) plus "
+            "store_dir= at session construction, not via fault_domain=")
+
+
+def resolve_thread_plan(faults: Any, fault_domain: Any) -> Optional[Any]:
+    """The engine-level :class:`FaultPlan` implied by a config's
+    ``faults`` / ``fault_domain`` pair (engines consume plans, not
+    domains)."""
+    if faults is not None:
+        return faults
+    if isinstance(fault_domain, ThreadFaultDomain):
+        return fault_domain.plan
+    return None

@@ -1,4 +1,11 @@
-"""Deterministic fault simulation (paper §5.1.6, §5.3, §5.4).
+"""Deterministic thread-fault schedules (paper §5.1.6, §5.3, §5.4).
+
+This module is the *thread* blast radius of the unified fault-domain
+abstraction (:mod:`repro.core.fault_domain`, docs/FAULTS.md): it generates
+the deterministic per-(pseudo-thread, sweep) delay/crash tables the sweep
+engines consume.  Shard- and process-level faults live in their own
+domains; construct them through ``fault_domain.ShardFaultDomain`` /
+``EngineConfig(durability="wal")`` respectively.
 
 The paper simulates (a) random thread *delays* — a thread sleeps for D ms with
 probability p per vertex processed — and (b) *crash-stop* failures — a flagged

@@ -91,15 +91,21 @@ class StreamRunner:
                  alpha: float = 0.85, tau: float = 1e-10,
                  tau_f: Optional[float] = None, max_iterations: int = 500,
                  interpret: Optional[bool] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 durability: str = "none",
+                 store_dir: Optional[str] = None,
+                 checkpoint_interval: int = 16):
         from repro.api import EngineConfig, PageRankSession
         cfg = EngineConfig(engine="pallas", mode=mode,
                            active_policy=active_policy, alpha=alpha,
                            tau=tau, tau_f=tau_f,
                            max_iterations=max_iterations, backend=backend,
-                           block_size=block_size, dtype=dtype)
+                           block_size=block_size, dtype=dtype,
+                           durability=durability,
+                           checkpoint_interval=checkpoint_interval)
         self.session = PageRankSession.from_graph(
-            hg0, config=cfg, r0=r0, interpret=interpret)
+            hg0, config=cfg, r0=r0, interpret=interpret,
+            store_dir=store_dir)
 
     def warmup(self) -> None:
         """Trace the full per-batch pipeline at the stream's operand shapes

@@ -1,0 +1,10 @@
+"""Distributed substrate: logical-axis sharding rules, the ``constrain``
+annotation API, and gradient-compression primitives.
+
+Model code annotates tensors with *logical* axis names
+(:func:`repro.dist.api.constrain`); the launch layer activates a rule
+table + mesh (:func:`repro.dist.api.use_rules`) that maps logical axes to
+physical mesh axes (:mod:`repro.dist.sharding`).  Outside an active rules
+context every annotation is the identity, so model code runs unmodified
+on a single host device.
+"""

@@ -1,0 +1,61 @@
+"""Sharding annotation API: ``constrain`` + the ``use_rules`` context.
+
+Model code marks tensors with logical axis tuples; nothing happens until a
+launcher activates a (rules, mesh) pair::
+
+    with use_rules(S.LM_RULES, mesh):
+        logits, _ = model.forward(params, tokens, cfg)
+
+Outside the context ``constrain`` is the identity, so the same model code
+runs on one host device (tests, examples) and on a production mesh
+(dry-run, launch) without branching.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.dist import sharding as S
+
+_ctx = threading.local()
+
+
+def active_rules() -> Optional[Tuple[S.Rules, Mesh]]:
+    """The innermost active (rules, mesh) pair, or None."""
+    stack = getattr(_ctx, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_rules(rules: S.Rules, mesh: Mesh):
+    """Activate a logical→physical rule table for the dynamic extent of the
+    block; nested contexts override (innermost wins)."""
+    stack = getattr(_ctx, "stack", None)
+    if stack is None:
+        stack = _ctx.stack = []
+    stack.append((rules, mesh))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate ``x`` with a logical axis tuple.  Under an active
+    :func:`use_rules` context this lowers to
+    ``lax.with_sharding_constraint`` via the rule table; otherwise it is
+    the identity (single-device paths pay nothing)."""
+    ctx = active_rules()
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    if len(logical) != x.ndim:
+        raise ValueError(
+            f"logical tuple {tuple(logical)} has {len(logical)} axes but "
+            f"tensor has shape {x.shape}")
+    spec = S.logical_to_spec(logical, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,131 @@
+"""Logical-axis → mesh-axis rule tables (DESIGN.md §5).
+
+A *rule table* maps logical axis names (``"batch"``, ``"heads"``, ``"ff"``,
+…) to physical mesh axis names (``"pod"`` / ``"data"`` / ``"model"``), a
+tuple of them, or ``None`` (replicated).  :func:`logical_to_spec` turns a
+tensor's logical tuple into a :class:`~jax.sharding.PartitionSpec` against
+a concrete mesh, **dropping** any mapping whose mesh axis is absent or
+whose dimension is not divisible by the mesh-axis size — a non-divisible
+tensor is simply left unsharded on that axis (the baseline behaviour the
+per-arch ``rules_override`` tables tune away from).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+# one logical axis maps to a mesh axis, a tuple of mesh axes, or None
+Rule = Optional[Union[str, Tuple[str, ...]]]
+Rules = Dict[str, Rule]
+
+# -- family base tables (per-arch overrides merge on top; see
+#    repro.configs.registry.ArchSpec.rules_override) -------------------------
+
+LM_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,                 # sequence-parallel archs override → "model"
+    "cache_seq": "model",        # decode KV cache shards its seq dim (TP)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "embed": None,               # FSDP archs override → "data"
+    "ff": "model",
+    "expert_ff": "model",
+    "experts": None,             # MoE archs override → "pod"
+    "moe_capacity": None,
+    "vocab": "model",
+    "layers": None,              # scan-over-layers leading dim stays local
+    "table_rows": "model",
+}
+
+GNN_RULES: Rules = {
+    "nodes": ("pod", "data", "model"),
+    "edges": ("pod", "data", "model"),
+    "batch": ("pod", "data"),
+    "layers": None,
+}
+
+RECSYS_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "candidates": ("data", "model"),
+    "fields": None,
+    "embed": None,
+    "table_rows": "model",
+    "layers": None,
+}
+
+
+def _mesh_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _resolve_rule(rule: Rule, mesh: Mesh, dim: int) -> Rule:
+    """One logical axis's physical assignment against a concrete mesh:
+    keep only mesh axes that exist, and drop the whole mapping when the
+    dimension is not divisible by the combined mesh-axis size."""
+    if rule is None:
+        return None
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    if dim % _mesh_size(mesh, axes) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_to_spec(logical: Sequence[Optional[str]], rules: Rules,
+                    mesh: Mesh, shape: Sequence[int]) -> P:
+    """Map a logical axis tuple to a PartitionSpec for ``shape`` on
+    ``mesh``.  Unknown logical names and non-divisible dims are replicated;
+    a mesh axis is consumed at most once (first logical axis wins)."""
+    entries = []
+    used: set = set()
+    for name, dim in zip(logical, shape):
+        rule = _resolve_rule(rules.get(name) if name else None, mesh,
+                             int(dim))
+        if rule is not None:
+            axes = (rule,) if isinstance(rule, str) else tuple(rule)
+            if any(a in used for a in axes):
+                rule = None
+            else:
+                used.update(axes)
+        entries.append(rule)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def zero1_logical(logical: Sequence[Optional[str]], shape: Sequence[int],
+                  mesh: Mesh, rules: Rules) -> Tuple[Optional[str], ...]:
+    """ZeRO-1 logical tuple for an optimizer-state tensor: keep the
+    parameter's own sharding and additionally assign the first replicated,
+    divisible dimension to the ``data`` axis (optimizer state is touched
+    once per step — sharding it over the data-parallel axis is free).
+    Returns the logical tuple unchanged when no dimension qualifies."""
+    if "data" not in mesh.shape:
+        return tuple(logical)
+    dsz = mesh.shape["data"]
+    out = list(logical)
+    # a dim already mapped to "data" by the rules means state is covered
+    for name in logical:
+        rule = rules.get(name) if name else None
+        axes = ((rule,) if isinstance(rule, str) else tuple(rule or ()))
+        if "data" in axes:
+            return tuple(out)
+    for i, (name, dim) in enumerate(zip(logical, shape)):
+        rule = _resolve_rule(rules.get(name) if name else None, mesh,
+                             int(dim))
+        if rule is None and int(dim) % dsz == 0 and int(dim) > 0:
+            out[i] = "_zero1"
+            break
+    return tuple(out)
+
+
+# the internal logical axis zero1_logical introduces; merged into every
+# rule lookup by logical_to_spec callers via rule table defaulting
+for _t in (LM_RULES, GNN_RULES, RECSYS_RULES):
+    _t.setdefault("_zero1", "data")
+del _t

@@ -19,12 +19,18 @@ import numpy as np
 import jax
 
 
+def _mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]
+          ) -> jax.sharding.Mesh:
+    # jax.make_mesh(axis_types=...) is version-gated; build from the raw
+    # device array instead (works across the jax versions we support)
+    devs = np.asarray(jax.devices()[:int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
@@ -35,8 +41,7 @@ def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
         shape = (n,)
     if int(np.prod(shape)) != n:
         raise ValueError(f"mesh shape {shape} != device count {n}")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(tuple(shape), axes)
 
 
 def n_chips(mesh: jax.sharding.Mesh) -> int:

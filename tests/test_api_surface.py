@@ -25,8 +25,13 @@ EXPECTED_API = {
     "Engine",
     "PageRankService",
     "PageRankSession",
+    "RecoveryRecord",
     "SessionReport",
+    "SessionStore",
+    "ShardFault",
+    "ShardFaultDomain",
     "StreamBatchResult",
+    "ThreadFaultDomain",
     "UpdateRequest",
     "register",
     "registry",
@@ -36,6 +41,7 @@ EXPECTED_CONFIG_FIELDS = {
     "alpha", "tau", "tau_f", "mode", "engine", "backend", "tile",
     "block_size", "active_policy", "max_iterations", "faults", "dtype",
     "topology", "n_shards", "partitioner", "exchange",
+    "fault_domain", "durability", "checkpoint_interval",
 }
 
 EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas", "distributed"}
@@ -61,6 +67,7 @@ def test_builtin_engines_registered():
 def test_session_core_methods_exist():
     for m in ("from_graph", "from_snapshot", "update", "recompute",
               "query", "top_k", "report", "fork", "warmup", "close",
+              "save", "restore", "inject_shard_fault",
               "__enter__", "__exit__"):
         assert callable(getattr(PageRankSession, m)), m
 

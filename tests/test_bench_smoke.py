@@ -66,6 +66,17 @@ def test_smoke_report():
     # parity-clean with zero post-warmup retraces, and the edge-cut /
     # latency numbers that make the partitioner choice observable must be
     # recorded
+    # the recovery scenario (a durable streaming session SIGKILLed in a
+    # subprocess, restored here): the WAL must replay every batch applied
+    # after the last checkpoint, post-restore updates must be retrace-free,
+    # and the restored stream must match the uninterrupted session
+    # bit-for-bit (docs/FAULTS.md)
+    recovery = report["recovery"]
+    assert recovery["replayed_batches"] == recovery["killed_after_batches"]
+    assert recovery["post_restore_retraces"] == 0
+    assert recovery["linf_vs_uninterrupted"] == 0.0
+    assert recovery["recovery_wall_s"] > 0
+    assert recovery["post_restore_p50_ms"] > 0
     sharded = report["sharded"]
     assert sharded["n_devices"] >= 2
     assert set(sharded["partitioners"]) == {"contiguous", "hash",

@@ -205,8 +205,7 @@ def test_sharded_lookup_matches_dense():
     script = textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
         from repro.models.recsys.embedding import sharded_lookup
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.sharding.Mesh(np.array(jax.devices()), ("model",))
         rng = np.random.default_rng(0)
         table = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
         ids = jnp.asarray(rng.integers(0, 64, (5, 3)), jnp.int32)
