@@ -26,6 +26,18 @@ STREAM_BATCH_EDGES = 8          # fixed batch size (edges) across sizes
 SERVICE_SESSIONS = 3            # concurrent sessions in the service scenario
 SERVICE_BATCHES = 4             # update batches submitted per session
 SERVICE_BATCH_EDGES = 8         # edges per batch
+SERVICE_QUERY_CLIENTS = 3       # concurrent readers during the drain
+SERVICE_QUERIES_PER_CLIENT = 6  # reads each client issues
+
+SERVE_LOAD_STREAMS = 2          # durable update streams under overload
+SERVE_LOAD_LOG2_N = 10          # graph size per stream
+SERVE_LOAD_QUEUE_DEPTH = 4      # admission-control bound per stream
+SERVE_LOAD_BURSTS = 24          # submit bursts per stream
+SERVE_LOAD_BURST = 8            # submits per burst = 2x the queue bound
+SERVE_LOAD_BURST_GAP_S = 0.25   # gap between bursts (dispatches interleave)
+SERVE_LOAD_CLIENTS = 24         # concurrent query clients
+SERVE_LOAD_READS = 15           # reads per client (~360 reads total)
+SERVE_LOAD_KILL_AFTER = 2       # dispatches before stream 0 is killed
 
 SHARDED_DEVICES = 8             # forced host devices for the sharded scenario
 SHARDED_BATCHES = 6             # DF batches per partitioner
@@ -38,22 +50,31 @@ RECOVERY_AFTER = 2              # batches served post-restore
 
 def _smoke_service() -> dict:
     """Multi-session serving scenario: N concurrent dynamic streams behind
-    one shared batch queue (``repro.api.PageRankService``, the serve-engine
-    slot design).  Records per-session p50/p95 update latency and retrace
-    counts plus the service-level request latency (queue wait included).
-    Sessions share the jit caches, so post-warmup retraces must stay 0
-    across **all** sessions — the multi-tenant streaming acceptance
-    signal."""
+    per-stream queues (``repro.api.PageRankService``, the serve-engine slot
+    design), with concurrent query clients reading degraded-mode (from the
+    per-slot snapshots) while the queues drain.  Records per-session
+    p50/p95 update latency and retrace counts, the service-level request
+    latency (queue wait included), and the query p50/p95 + staleness
+    bound.  Sessions share the jit caches, so post-warmup retraces must
+    stay 0 across **all** sessions — the multi-tenant streaming acceptance
+    signal.  ``coalesce=False`` keeps one dispatch per submitted batch so
+    the per-request latency series stays comparable across runs (the
+    coalescing dispatcher is exercised by ``serve_load``)."""
+    import threading
+
     import jax.numpy as jnp
-    from repro.api import EngineConfig, PageRankService
+    from repro.api import EngineConfig, PageRankService, ServingConfig
     from repro.core import pagerank as pr
     from repro.core.delta import random_batch
     from repro.graphs.generators import kmer_chains
 
     graphs = [kmer_chains(1 << 12, seed=30 + s)
               for s in range(SERVICE_SESSIONS)]
-    svc = PageRankService(graphs, config=EngineConfig(
-        engine="pallas", block_size=64, active_policy="rc"))
+    svc = PageRankService(
+        graphs,
+        config=EngineConfig(engine="pallas", block_size=64,
+                            active_policy="rc"),
+        serving=ServingConfig(coalesce=False))
     cur = list(graphs)
     for j in range(SERVICE_BATCHES):
         for i in range(len(cur)):
@@ -61,7 +82,22 @@ def _smoke_service() -> dict:
                                      seed=500 + 10 * i + j)
             svc.submit(i, dels, ins)
             cur[i] = cur[i].apply_batch(dels, ins)
-    svc.run_until_drained()
+
+    def _client(cid: int) -> None:
+        for r in range(SERVICE_QUERIES_PER_CLIENT):
+            s = (cid + r) % SERVICE_SESSIONS
+            if r % 2 == 0:
+                svc.query(s, [0, 1, 2, 3])
+            else:
+                svc.top_k(s, 5)
+
+    readers = [threading.Thread(target=_client, args=(c,))
+               for c in range(SERVICE_QUERY_CLIENTS)]
+    for t in readers:
+        t.start()
+    svc.run_until_drained()        # updates drain while the readers read
+    for t in readers:
+        t.join()
     out = svc.report()
     out["batches_per_session"] = SERVICE_BATCHES
     # parity: every session's served ranks vs the independent oracle on its
@@ -72,6 +108,111 @@ def _smoke_service() -> dict:
         n = svc.sessions[i].n
         errs.append(float(pr.linf(svc.sessions[i].R[:n],
                                   jnp.asarray(ref[:n]))))
+    out["linf_vs_reference_max"] = max(errs)
+    return out
+
+
+def _smoke_serve_load() -> dict:
+    """Overload + chaos serving scenario (the PR-6 acceptance scenario):
+    durable update streams driven at ~2x their admission-control bound by
+    burst submitters, hundreds of concurrent degraded-mode reads, and a
+    slot killed mid-load so the watchdog must fail it over and drain its
+    queue to the respawn.  Records queue-wait vs per-batch compute
+    percentiles (continuous dispatch must keep wait below compute),
+    shed/deadline/retry counters (bounded queues shed instead of growing),
+    query latency + staleness bounds, the watchdog event log, and oracle
+    parity of every surviving slot against the accepted-batch lineage."""
+    import tempfile
+    import threading
+
+    import jax.numpy as jnp
+    from repro.api import (AdmissionRejected, EngineConfig, PageRankService,
+                           PageRankSession, ServingConfig)
+    from repro.core import pagerank as pr
+    from repro.core.delta import random_batch
+    from repro.graphs.generators import kmer_chains
+
+    store_root = tempfile.mkdtemp(prefix="repro-serve-load-")
+    # max_iterations=2000: the post-failover drain dispatch coalesces
+    # several bursts into one batch and reconverges from the restored
+    # checkpoint+WAL state, which can legitimately need more than the
+    # 500-sweep default at tau=1e-10 — give it headroom rather than
+    # serving a capped iterate in the acceptance scenario
+    cfg = EngineConfig(engine="pallas", block_size=64, active_policy="rc",
+                       durability="wal", checkpoint_interval=4,
+                       max_iterations=2000)
+    sessions = [
+        PageRankSession.from_graph(
+            kmer_chains(1 << SERVE_LOAD_LOG2_N, seed=80 + s), config=cfg,
+            store_dir=os.path.join(store_root, f"slot{s}"))
+        for s in range(SERVE_LOAD_STREAMS)]
+    svc = PageRankService(
+        sessions,
+        serving=ServingConfig(max_queue_depth=SERVE_LOAD_QUEUE_DEPTH,
+                              shed_policy="reject", deadline_s=30.0,
+                              staleness_budget_s=0.25,
+                              heartbeat_timeout_s=15.0))
+    svc.inject_session_fault(0, after_dispatches=SERVE_LOAD_KILL_AFTER,
+                             kind="dead")
+
+    # accepted-batch lineage per stream: `cur` advances only on admitted
+    # submits, so the end state is the oracle for whatever survived
+    # shedding — robust to which particular submits get rejected
+    cur = [s.hg for s in sessions]
+    submitted = [0] * SERVE_LOAD_STREAMS
+    shed_local = [0] * SERVE_LOAD_STREAMS
+
+    def _submitter(s: int) -> None:
+        for b in range(SERVE_LOAD_BURSTS):
+            for k in range(SERVE_LOAD_BURST):   # 2x the queue bound, fast
+                dels, ins = random_batch(
+                    cur[s], SERVICE_BATCH_EDGES / cur[s].m,
+                    seed=9000 + 100 * s + 10 * b + k)
+                try:
+                    svc.submit(s, dels, ins)
+                except AdmissionRejected:
+                    shed_local[s] += 1
+                    continue
+                submitted[s] += 1
+                cur[s] = cur[s].apply_batch(dels, ins)
+            time.sleep(SERVE_LOAD_BURST_GAP_S)
+
+    def _client(cid: int) -> None:
+        for r in range(SERVE_LOAD_READS):
+            s = (cid + r) % SERVE_LOAD_STREAMS
+            if r % 3 == 0:
+                svc.top_k(s, 5)
+            else:
+                svc.query(s, [(cid + 7 * r) % sessions[s].n])
+
+    with svc:                       # background dispatch + watchdog
+        writers = [threading.Thread(target=_submitter, args=(s,))
+                   for s in range(SERVE_LOAD_STREAMS)]
+        readers = [threading.Thread(target=_client, args=(c,))
+                   for c in range(SERVE_LOAD_CLIENTS)]
+        for t in writers + readers:
+            t.start()
+        for t in writers + readers:
+            t.join()
+        svc.run_until_drained()
+    out = svc.report()
+    out["offered_per_stream"] = SERVE_LOAD_BURSTS * SERVE_LOAD_BURST
+    out["accepted_per_stream"] = list(submitted)
+    out["overload_factor"] = round(
+        SERVE_LOAD_BURST / SERVE_LOAD_QUEUE_DEPTH, 2)
+    out["deadline_miss_rate"] = round(
+        out["deadline_misses"] / max(out["requests_done"], 1), 4)
+    # the acceptance ratio: continuous dispatch keeps queue wait below the
+    # per-batch compute time even at 2x overload
+    out["queue_wait_over_compute_p50"] = round(
+        out["queue_wait_p50_ms"] / max(out["exec_p50_ms"], 1e-9), 3)
+    errs = []
+    for s in range(SERVE_LOAD_STREAMS):
+        ref = pr.numpy_reference(cur[s].snapshot(block_size=64),
+                                 iterations=300)
+        sess = svc.sessions[s]
+        errs.append(float(pr.linf(sess.ranks[:sess.n],
+                                  jnp.asarray(ref[:sess.n]))))
     out["linf_vs_reference_max"] = max(errs)
     return out
 
@@ -315,9 +456,12 @@ def _smoke_stream() -> dict:
 def smoke(out: str = SMOKE_OUT) -> dict:
     """Tiny per-engine perf snapshot: one DF_LF dynamic update per engine,
     plus the streaming scenario (K delta batches, per-batch latency), the
-    service scenario (N concurrent sessions behind one batch queue,
-    per-session p50/p95) and the sharded scenario (a topology="sharded"
-    session on an 8-host-device mesh, per-partitioner edge-cut/latency).
+    service scenario (N concurrent sessions with concurrent query clients,
+    per-session p50/p95 + query staleness), the serve_load scenario
+    (durable streams at 2x overload with shedding, degraded reads and a
+    watchdog-recovered slot kill) and the sharded scenario (a
+    topology="sharded" session on an 8-host-device mesh, per-partitioner
+    edge-cut/latency).
 
     Records sweeps, edges_processed, wall time and the frontier-work ratio
     edges_processed / (m · sweeps) — the Pallas engine's ratio ≪ 1 is the
@@ -385,6 +529,7 @@ def smoke(out: str = SMOKE_OUT) -> dict:
 
     report["stream"] = _smoke_stream()
     report["service"] = _smoke_service()
+    report["serve_load"] = _smoke_serve_load()
     report["sharded"] = _smoke_sharded()
     report["recovery"] = _smoke_recovery()
 

@@ -2,36 +2,45 @@
 
 One stateful handle (:class:`PageRankSession`) owns graph state, the
 resolved engine and the incremental operands; :class:`EngineConfig` is the
-single validated home for every knob; :mod:`repro.api.registry` maps engine
-names to engine code; :class:`PageRankService` drives N sessions from one
-shared batch queue.  The legacy ``repro.core.pagerank`` variant functions
-are deprecated shims over this surface (see docs/API.md for the migration
-table).
+single validated home for every engine knob and :class:`ServingConfig` for
+every serving/overload knob; :mod:`repro.api.registry` maps engine names to
+engine code; :class:`PageRankService` drives N sessions as an
+overload-resilient serving fleet (bounded per-stream queues, coalescing
+dispatch, deadlines, degraded-mode reads, watchdog failover).  The legacy
+``repro.core.pagerank`` variant functions are deprecated shims over this
+surface (see docs/API.md for the migration table).
 
 The public surface below is snapshot-tested (``tests/test_api_surface.py``)
 — changes to it are deliberate.
 """
-from repro.api.config import EngineConfig
+from repro.api.config import EngineConfig, ServingConfig
 from repro.api import registry
 from repro.api.registry import Engine, register
 from repro.api.session import (PageRankSession, SessionReport,
-                               StreamBatchResult)
-from repro.api.service import PageRankService, UpdateRequest
+                               StreamBatchResult, SweepCapWarning)
+from repro.api.service import (AdmissionRejected, PageRankService,
+                               ReadResult, UpdateRequest)
 from repro.ckpt.checkpoint import SessionStore
-from repro.core.fault_domain import (RecoveryRecord, ShardFault,
-                                     ShardFaultDomain, ThreadFaultDomain)
+from repro.core.fault_domain import (RecoveryRecord, SessionFault,
+                                     ShardFault, ShardFaultDomain,
+                                     ThreadFaultDomain)
 
 __all__ = [
+    "AdmissionRejected",
     "EngineConfig",
     "Engine",
     "PageRankService",
     "PageRankSession",
+    "ReadResult",
     "RecoveryRecord",
+    "ServingConfig",
+    "SessionFault",
     "SessionReport",
     "SessionStore",
     "ShardFault",
     "ShardFaultDomain",
     "StreamBatchResult",
+    "SweepCapWarning",
     "ThreadFaultDomain",
     "UpdateRequest",
     "register",

@@ -28,6 +28,12 @@ EXCHANGES = ("full", "bf16", "delta")
 #            state, with periodic atomic rank checkpoints; restore =
 #            checkpoint + WAL replay through the normal hot path
 DURABILITIES = ("none", "wal")
+# load-shedding policies of a full serving queue (ServingConfig):
+#   "reject"      — refuse the NEW submit (caller sees AdmissionRejected);
+#   "drop_oldest" — shed the oldest queued request to admit the new one
+#                   (recency wins: the freshest deltas are the ones worth
+#                   converging under overload)
+SHED_POLICIES = ("reject", "drop_oldest")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,5 +271,95 @@ class EngineConfig:
         if unknown:
             raise TypeError(
                 f"unknown EngineConfig key(s) {unknown}; "
+                f"valid keys: {sorted(self.valid_keys())}")
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Validated, immutable serving policy of a
+    :class:`~repro.api.service.PageRankService` — the overload-resilience
+    axis (queueing, admission, deadlines, degraded reads, watchdog),
+    orthogonal to the per-session :class:`EngineConfig`.
+
+    Fields
+    ------
+    max_queue_depth:   admission bound per stream: a submit that would
+                       queue deeper than this is shed per ``shed_policy``.
+    shed_policy:       ``"reject"`` (refuse the new submit with a
+                       machine-readable reason) or ``"drop_oldest"``
+                       (shed the oldest queued request instead — the
+                       freshest deltas win under overload).
+    deadline_s:        default per-request deadline, measured from submit;
+                       a request still queued past it is shed
+                       (``deadline_expired``), one completing late counts
+                       as a deadline miss.  ``None`` → no deadline.
+    max_retries:       dispatch attempts beyond the first on a transient
+                       update failure (a closed/dead session is permanent
+                       and not retried).
+    retry_backoff_s:   base of the exponential backoff between retries
+                       (attempt k sleeps ``retry_backoff_s * 2**k``).
+    coalesce:          fold a stream's whole queued run of batches into
+                       ONE equivalent batch per dispatch (one scatter, no
+                       per-tick barrier).  ``False`` keeps strictly
+                       per-batch dispatch (bit-for-bit with a sequential
+                       session — the durability tests' mode).
+    degraded_reads:    serve ``query``/``top_k`` from a per-slot read
+                       snapshot (refreshed after every dispatch) instead
+                       of the live session, so reads never wait on
+                       updates; every read reports its staleness.
+    staleness_budget_s: reads older than this force a snapshot refresh
+                       when the slot is idle; a busy slot serves the
+                       snapshot regardless (that is the degraded mode) —
+                       the reported ``staleness_s``/``lag_updates`` are
+                       the observable bound.
+    heartbeat_timeout_s: watchdog threshold: a BUSY slot whose dispatcher
+                       heartbeat goes stale past this is declared stuck
+                       and failed over (idle slots never trip it).
+    watchdog:          enable stuck/dead-slot detection + failover-drain.
+    """
+
+    max_queue_depth: int = 64
+    shed_policy: str = "reject"
+    deadline_s: Optional[float] = None
+    max_retries: int = 1
+    retry_backoff_s: float = 0.02
+    coalesce: bool = True
+    degraded_reads: bool = True
+    staleness_budget_s: float = 0.5
+    heartbeat_timeout_s: float = 30.0
+    watchdog: bool = True
+
+    def __post_init__(self):
+        if int(self.max_queue_depth) < 1:
+            raise ValueError(f"max_queue_depth={self.max_queue_depth} "
+                             "must be >= 1")
+        if self.shed_policy not in SHED_POLICIES:
+            raise ValueError(f"shed_policy={self.shed_policy!r} invalid; "
+                             f"expected one of {SHED_POLICIES}")
+        if self.deadline_s is not None and float(self.deadline_s) < 0:
+            raise ValueError(f"deadline_s={self.deadline_s} must be >= 0 "
+                             "(or None for no deadline)")
+        if int(self.max_retries) < 0:
+            raise ValueError(f"max_retries={self.max_retries} must be >= 0")
+        if float(self.retry_backoff_s) < 0:
+            raise ValueError(f"retry_backoff_s={self.retry_backoff_s} "
+                             "must be >= 0")
+        if float(self.staleness_budget_s) < 0:
+            raise ValueError(f"staleness_budget_s={self.staleness_budget_s}"
+                             " must be >= 0")
+        if float(self.heartbeat_timeout_s) <= 0:
+            raise ValueError(f"heartbeat_timeout_s="
+                             f"{self.heartbeat_timeout_s} must be > 0")
+
+    @classmethod
+    def valid_keys(cls) -> tuple:
+        return tuple(f.name for f in dataclasses.fields(cls))
+
+    def replace(self, **kw) -> "ServingConfig":
+        unknown = sorted(set(kw) - set(self.valid_keys()))
+        if unknown:
+            raise TypeError(
+                f"unknown ServingConfig key(s) {unknown}; "
                 f"valid keys: {sorted(self.valid_keys())}")
         return dataclasses.replace(self, **kw)

@@ -1,31 +1,71 @@
-"""`PageRankService` — N concurrent sessions behind one shared batch queue.
+"""`PageRankService` — overload-resilient serving of N dynamic streams.
 
 The serve-while-updating setting (Bahmani et al., arXiv:1006.2880): many
 independent dynamic graphs (tenants / shards / what-if branches), each with
-its own :class:`~repro.api.session.PageRankSession`, fed from one queue of
-edge-update batches while rank queries are served between ticks.
+its own :class:`~repro.api.session.PageRankSession`, fed from per-stream
+update queues while rank queries are served continuously.
 
-The slot design mirrors :class:`repro.serve.engine.ServeEngine`: each
-session is a slot; a tick admits at most one queued batch per slot
-(continuous batching — a busy stream never starves the others), runs the
-admitted updates, and retires them with their wait/exec latency split.
+The old design ticked a global barrier — one batch per slot per tick — so
+one slow or stuck session blocked every stream behind it and queue wait
+dominated request latency.  This service is a *continuous dispatcher*
+built for overload (policy in :class:`~repro.api.config.ServingConfig`):
+
+* **continuous dispatch + coalescing** — each slot drains independently
+  (its own worker thread under :meth:`start`, or per-slot passes of the
+  synchronous :meth:`step`); a dispatch folds the stream's whole queued
+  run of batches into ONE equivalent batch (last write per edge wins,
+  :func:`repro.core.delta.coalesce_batches`) — one scatter, no per-tick
+  barrier, queue wait bounded by a single dispatch.
+* **admission control** — per-stream queues are bounded; a submit past
+  ``max_queue_depth`` is shed with a machine-readable reason
+  (:class:`AdmissionRejected`, or the oldest queued request under
+  ``shed_policy="drop_oldest"``).
+* **deadlines / retry / backoff** — requests carry deadlines; one still
+  queued past its deadline is shed (``deadline_expired``), one finishing
+  late counts as a deadline miss; transient dispatch failures retry with
+  exponential backoff.
+* **degraded-mode reads** — :meth:`query` / :meth:`top_k` serve from a
+  per-slot read snapshot (a :meth:`~PageRankSession.fork` sharing the
+  device arrays, refreshed after every dispatch), so reads never wait on
+  updates; every read reports its staleness (seconds + update lag).
+* **watchdog** — dispatches heartbeat (:class:`SlotHeartbeat`); a dead or
+  stuck slot is failed over through the durable-store path
+  (:meth:`failover`) and its queued batches drain to the respawned
+  session, recorded as a session-domain
+  :class:`~repro.core.fault_domain.RecoveryRecord` (docs/FAULTS.md).
+
 All sessions share the jit caches: after the first session warms the fused
 driver, the remaining sessions' updates at the same operand shapes re-enter
 the compiled trace with zero additional retraces (asserted in
 ``tests/test_api_session.py``; recorded per session in the smoke bench's
-``service`` scenario).
+``service`` / ``serve_load`` scenarios).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from collections import Counter, deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.api.config import EngineConfig
+from repro.api.config import EngineConfig, ServingConfig
 from repro.api.session import PageRankSession, StreamBatchResult
+from repro.core import fault_domain as fd
+from repro.core.delta import coalesce_batches, validate_edge_batch
 from repro.core.graph import HostGraph
+
+
+class AdmissionRejected(RuntimeError):
+    """A submit was refused by admission control.  ``reason`` is the
+    machine-readable dict (``code``, ``stream``, ``queue_depth``,
+    ``max_queue_depth``, ``shed_policy``, ``message``) — the same shape a
+    shed queued request carries in ``request.shed_reason``."""
+
+    def __init__(self, reason: dict):
+        super().__init__(reason.get("message", str(reason)))
+        self.reason = reason
 
 
 @dataclasses.dataclass
@@ -38,12 +78,23 @@ class UpdateRequest:
     submitted_s: float = 0.0
     started_s: float = 0.0
     done_s: float = 0.0
+    deadline_at_s: Optional[float] = None  # absolute (perf_counter) deadline
     result: Optional[StreamBatchResult] = None
     done: bool = False
+    attempts: int = 0             # dispatch attempts consumed (retries + 1)
+    deadline_missed: bool = False  # completed after its deadline
+    shed: bool = False
+    shed_reason: Optional[dict] = None
+    error: Optional[str] = None
 
     @property
     def wait_s(self) -> float:
         return self.started_s - self.submitted_s
+
+    @property
+    def exec_s(self) -> float:
+        """Dispatch execution time (started → done), excluding queue wait."""
+        return self.done_s - self.started_s
 
     @property
     def latency_s(self) -> float:
@@ -51,19 +102,66 @@ class UpdateRequest:
         return self.done_s - self.submitted_s
 
 
+@dataclasses.dataclass
+class ReadResult:
+    """One degraded-mode read: the values plus their staleness bound.
+
+    ``staleness_s`` is the age of the read snapshot the values came from
+    (0 when served from live state); ``lag_updates`` the number of update
+    dispatches the live session has completed past the snapshot.  Unpacks
+    like the session-level tuple (``values, vertices = svc.top_k(...)``)
+    and casts to an array (``np.asarray(result)`` → values)."""
+    values: np.ndarray
+    vertices: Optional[np.ndarray]  # top_k only; None for query
+    stream: int
+    staleness_s: float
+    lag_updates: int
+    degraded: bool                  # served from a snapshot, not live state
+
+    def __array__(self, dtype=None, copy=None):
+        a = np.asarray(self.values)
+        return a.astype(dtype) if dtype is not None else a
+
+    def __iter__(self):
+        return iter((self.values, self.vertices))
+
+
+@dataclasses.dataclass
+class _ReadSnapshot:
+    """Per-slot read replica: a fork sharing the parent's device arrays."""
+    sess: PageRankSession
+    taken_s: float
+    batch_index: int
+
+
 class PageRankService:
-    """Drive N PageRank sessions from one shared update queue.
+    """Drive N PageRank sessions as an overload-resilient serving fleet.
 
     ``graphs`` may be host graphs (sessions are opened over them with the
-    shared ``config``) or pre-built sessions.  ``warmup=True`` traces each
-    session's per-batch pipeline up front so recorded latencies are
-    steady-state."""
+    shared ``config``) or pre-built sessions.  ``serving`` is the
+    :class:`~repro.api.config.ServingConfig` overload policy (admission,
+    deadlines, shedding, degraded reads, watchdog).  ``warmup=True``
+    traces each session's per-batch pipeline up front so recorded
+    latencies are steady-state.
+
+    Two dispatch modes share every policy: the synchronous :meth:`step` /
+    :meth:`run_until_drained` (tests, benchmarks, single-threaded callers)
+    and the background mode (:meth:`start` / :meth:`stop`) where each slot
+    drains on its own worker thread and a watchdog thread polls slot
+    health — no per-tick barrier in either mode."""
 
     def __init__(self, graphs: Sequence[Union[HostGraph, PageRankSession]],
                  *, config: Optional[EngineConfig] = None,
+                 serving: Optional[ServingConfig] = None,
                  warmup: bool = True):
         if not graphs:
             raise ValueError("need at least one graph or session")
+        self.serving = serving if serving is not None else ServingConfig()
+        if not isinstance(self.serving, ServingConfig):
+            raise TypeError(
+                "serving must be a ServingConfig, got "
+                f"{type(self.serving).__name__} — build one with "
+                "repro.api.ServingConfig(...)")
         self.sessions: List[Optional[PageRankSession]] = [
             g if isinstance(g, PageRankSession)
             else PageRankSession.from_graph(g, config=config)
@@ -73,28 +171,69 @@ class PageRankService:
         if warmup:
             for s in self.sessions:
                 s.warmup()
-        self.queue: List[UpdateRequest] = []
+        self._lock = threading.RLock()
+        self._queues: Dict[int, Deque[UpdateRequest]] = {
+            i: deque() for i in range(len(self.sessions))}
+        self._inflight: Dict[int, List[UpdateRequest]] = {}
         self.finished: List[UpdateRequest] = []
+        self.shed_requests: List[UpdateRequest] = []
         self._uid = 0
+        self._deadline_misses = 0
+        self._retries = 0
         # durable-slot registry: a closed-or-dead slot respawns from its
         # store via failover(); the dir outlives the session object
         self._store_dirs: Dict[int, Optional[str]] = {
             i: getattr(s, "store_dir", None)
             for i, s in enumerate(self.sessions)}
         self._failovers: List[dict] = []
+        # -- watchdog / session fault domain (docs/FAULTS.md) ----------------
+        self._heartbeat = fd.SlotHeartbeat()
+        self._dead: Dict[int, str] = {}          # slot → why it died
+        self._dispatches: Dict[int, int] = {
+            i: 0 for i in range(len(self.sessions))}
+        self._session_faults: List[fd.SessionFault] = []
+        self._watchdog_events: List[dict] = []
+        self._recovering: set = set()   # slots mid-failover-drain
+        self._slot_gen: Dict[int, int] = {
+            i: 0 for i in range(len(self.sessions))}
+        # -- degraded reads ---------------------------------------------------
+        self._snapshots: Dict[int, _ReadSnapshot] = {}
+        self._query_walls: List[float] = []
+        self._query_staleness: List[float] = []
+        self._query_lags: List[int] = []
+        if self.serving.degraded_reads:
+            for i in range(len(self.sessions)):
+                self._refresh_snapshot(i)
+        # -- background dispatch ----------------------------------------------
+        self._running = False
+        self._wake: Dict[int, threading.Event] = {
+            i: threading.Event() for i in range(len(self.sessions))}
+        self._workers: Dict[int, threading.Thread] = {}
+        self._watchdog_thread: Optional[threading.Thread] = None
 
     @property
     def slots(self) -> int:
         return len(self.sessions)
 
+    @property
+    def queue(self) -> List[UpdateRequest]:
+        """Flat uid-ordered view over every stream's queued requests
+        (compat with the pre-dispatcher single-queue surface)."""
+        with self._lock:
+            reqs = [r for q in self._queues.values() for r in q]
+        return sorted(reqs, key=lambda r: r.uid)
+
+    def queue_depth(self, stream: int) -> int:
+        with self._lock:
+            return len(self._queues[stream])
+
     # -- placement -----------------------------------------------------------
     def placements(self) -> Dict[int, Tuple[int, ...]]:
         """Device footprint declared by each live session (sharded sessions
-        span their mesh; single-device sessions one device).  The queue
-        still schedules one batch per slot per tick — the placement map is
-        what an external scheduler packs against."""
+        span their mesh; single-device sessions one device)."""
         return {i: s.device_footprint
-                for i, s in enumerate(self.sessions) if s is not None}
+                for i, s in enumerate(self.sessions)
+                if s is not None and not s.closed}
 
     def _detach(self, sess: PageRankSession) -> None:
         """Unregister a closing session: its slot empties and its queued
@@ -103,19 +242,19 @@ class PageRankService:
         for i, s in enumerate(self.sessions):
             if s is sess:
                 self.sessions[i] = None
-                self.queue = [r for r in self.queue if r.stream != i]
+                with self._lock:
+                    self._queues[i].clear()
+                    self._snapshots.pop(i, None)
                 return
 
-    # -- failover (process fault domain, docs/FAULTS.md) ---------------------
+    # -- failover (process + session fault domains, docs/FAULTS.md) ----------
     def failover(self, stream: int, *, warmup: bool = False) -> dict:
         """Respawn a closed-or-dead slot from its durable store: the
         session is restored from its newest valid checkpoint, catches up
         by replaying its WAL, and re-occupies the same slot index (new
         submits flow immediately).  Returns the recovery row also exposed
         by :meth:`report` (recovery wall time, replayed-batch count)."""
-        if not (0 <= stream < self.slots):
-            raise ValueError(f"stream {stream} out of range "
-                             f"(service has {self.slots} sessions)")
+        self._check_stream(stream)
         cur = self.sessions[stream]
         if cur is not None and not cur.closed:
             raise ValueError(f"stream {stream} is still live — failover "
@@ -129,6 +268,7 @@ class PageRankService:
         sess = PageRankSession.restore(store_dir)
         sess._service = self
         self.sessions[stream] = sess
+        self._dead.pop(stream, None)
         rep = sess.report()
         row = {"stream": stream,
                "recovery_time_s": round(time.perf_counter() - t0, 6),
@@ -136,70 +276,511 @@ class PageRankService:
                "restored_batch_index": sess._batch_index}
         if warmup:
             sess.warmup()
+        if self.serving.degraded_reads:
+            self._refresh_snapshot(stream)
         self._failovers.append(row)
         return row
 
     # -- queue management ----------------------------------------------------
-    def submit(self, stream: int, deletions, insertions) -> int:
-        """Enqueue one batch for session ``stream``; returns its uid."""
+    def _check_stream(self, stream: int) -> None:
         if not (0 <= stream < self.slots):
             raise ValueError(f"stream {stream} out of range "
                              f"(service has {self.slots} sessions)")
-        if self.sessions[stream] is None:
-            raise ValueError(f"stream {stream} is closed (its session was "
-                             "close()d and unregistered)")
-        self._uid += 1
-        self.queue.append(UpdateRequest(
-            uid=self._uid, stream=stream,
-            deletions=np.asarray(deletions, np.int64).reshape(-1, 2),
-            insertions=np.asarray(insertions, np.int64).reshape(-1, 2),
-            submitted_s=time.perf_counter()))
-        return self._uid
 
-    # -- ticking -------------------------------------------------------------
+    def _shed(self, req: UpdateRequest, code: str, message: str) -> dict:
+        reason = {"code": code, "stream": req.stream, "uid": req.uid,
+                  "queue_depth": len(self._queues[req.stream]),
+                  "max_queue_depth": self.serving.max_queue_depth,
+                  "shed_policy": self.serving.shed_policy,
+                  "message": message}
+        req.shed = True
+        req.shed_reason = reason
+        self.shed_requests.append(req)
+        return reason
+
+    def _expire_deadlines(self, stream: int, now: float) -> None:
+        """Shed queued requests whose deadline already passed — the
+        'timeout' half of the deadline contract (caller holds the lock)."""
+        q = self._queues[stream]
+        kept: Deque[UpdateRequest] = deque()
+        for req in q:
+            if req.deadline_at_s is not None and now > req.deadline_at_s:
+                self._deadline_misses += 1
+                self._shed(req, "deadline_expired",
+                           f"request {req.uid} spent "
+                           f"{now - req.submitted_s:.3f}s queued, past its "
+                           "deadline — shed before dispatch")
+            else:
+                kept.append(req)
+        self._queues[stream] = kept
+
+    def submit(self, stream: int, deletions, insertions, *,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue one batch for session ``stream``; returns its uid.
+
+        The batch is validated at admission (malformed batches raise
+        ``ValueError`` and never enter a queue).  A full queue sheds per
+        ``serving.shed_policy``: ``"reject"`` raises
+        :class:`AdmissionRejected` (machine-readable ``.reason``),
+        ``"drop_oldest"`` sheds the oldest queued request instead.
+        ``deadline_s`` overrides ``serving.deadline_s`` for this request
+        (measured from now)."""
+        self._check_stream(stream)
+        sess = self.sessions[stream]
+        recoverable = (self.serving.watchdog
+                       and self._store_dirs.get(stream) is not None)
+        if sess is None or (sess.closed and not recoverable):
+            raise ValueError(f"stream {stream} is closed (its session was "
+                             "close()d or died; failover() respawns "
+                             "durable slots)")
+        # a died-but-durable slot keeps accepting (bounded) submits while
+        # the watchdog respawns it — the drain delivers them to the respawn
+        deletions, insertions = validate_edge_batch(deletions, insertions,
+                                                    sess.n)
+        now = time.perf_counter()
+        dl = deadline_s if deadline_s is not None else self.serving.deadline_s
+        with self._lock:
+            self._expire_deadlines(stream, now)
+            q = self._queues[stream]
+            self._uid += 1
+            req = UpdateRequest(
+                uid=self._uid, stream=stream,
+                deletions=deletions, insertions=insertions,
+                submitted_s=now,
+                deadline_at_s=(now + float(dl)) if dl is not None else None)
+            if len(q) >= self.serving.max_queue_depth:
+                if self.serving.shed_policy == "reject":
+                    reason = self._shed(
+                        req, "queue_full",
+                        f"stream {stream} queue at depth {len(q)} >= "
+                        f"max_queue_depth={self.serving.max_queue_depth}; "
+                        "rejecting new submit (shed_policy='reject')")
+                    raise AdmissionRejected(reason)
+                oldest = q.popleft()        # drop_oldest: recency wins
+                self._shed(oldest, "queue_full_dropped_oldest",
+                           f"stream {stream} queue full; request "
+                           f"{oldest.uid} shed to admit {req.uid} "
+                           "(shed_policy='drop_oldest')")
+            q.append(req)
+        if self._running:
+            self._wake[stream].set()
+        return req.uid
+
+    def inject_session_fault(self, stream: int, *,
+                             after_dispatches: int = 0, kind: str = "dead",
+                             stall_s: float = 0.0) -> None:
+        """Schedule one serving-slot failure (session fault domain,
+        docs/FAULTS.md), consumed by the slot's dispatcher: after
+        ``after_dispatches`` completed dispatches the next dispatch kills
+        the slot's session (``kind="dead"``) or stalls its worker for
+        ``stall_s`` seconds (``kind="stuck"``, tripping the heartbeat
+        watchdog).  Recovery — failover + queue drain — is automatic and
+        recorded in :meth:`report`."""
+        self._check_stream(stream)
+        self._session_faults.append(fd.SessionFault(
+            stream=int(stream), after_dispatches=int(after_dispatches),
+            kind=kind, stall_s=float(stall_s)))
+
+    def _consume_fault(self, stream: int) -> Optional[fd.SessionFault]:
+        with self._lock:
+            for i, f in enumerate(self._session_faults):
+                if (f.stream == stream
+                        and self._dispatches[stream] >= f.after_dispatches):
+                    return self._session_faults.pop(i)
+        return None
+
+    # -- dispatch ------------------------------------------------------------
+    def _take(self, stream: int) -> List[UpdateRequest]:
+        """Claim this stream's next dispatch: the whole queued run when
+        coalescing, else the single head request (FIFO)."""
+        with self._lock:
+            self._expire_deadlines(stream, time.perf_counter())
+            q = self._queues[stream]
+            if not q:
+                return []
+            if self.serving.coalesce:
+                reqs = list(q)
+                q.clear()
+            else:
+                reqs = [q.popleft()]
+            self._inflight[stream] = reqs
+        return reqs
+
+    def _requeue(self, stream: int, reqs: List[UpdateRequest],
+                 gen: int) -> None:
+        with self._lock:
+            if gen != self._slot_gen[stream]:
+                return  # failed over while we held them: the respawn's
+                        # drain owns these requests now — do not duplicate
+            self._queues[stream].extendleft(reversed(reqs))
+            self._inflight.pop(stream, None)
+
+    def _dispatch(self, stream: int, reqs: List[UpdateRequest],
+                  gen: int) -> bool:
+        """Run one dispatch for ``stream``: coalesce the claimed requests
+        into one batch, update with retry/backoff, retire.  Returns False
+        when the slot died (requests re-queued for the failover drain)."""
+        sv = self.serving
+        self._heartbeat.busy(stream)
+        try:
+            fault = self._consume_fault(stream)
+            if fault is not None and fault.kind == "stuck":
+                # the stall sits BEFORE the update: the slot holds work,
+                # the heartbeat goes stale, and nothing has touched session
+                # or WAL state — so the watchdog may safely re-drain
+                time.sleep(fault.stall_s)
+            if fault is not None and fault.kind == "dead":
+                sess = self.sessions[stream]
+                if sess is not None:
+                    # crash-stop, not a clean close(): drop the service
+                    # backref first so _detach doesn't run — the slot stays
+                    # registered (dead) and its queue survives for the drain
+                    sess._service = None
+                    sess.close()
+            if gen != self._slot_gen[stream]:
+                # the watchdog failed this slot over while we stalled: the
+                # respawned slot owns these requests now — abandon them
+                # without touching the zombie session
+                with self._lock:
+                    self._inflight.pop(stream, None)
+                return True
+            if len(reqs) == 1:
+                dels, ins = reqs[0].deletions, reqs[0].insertions
+            else:
+                sess = self.sessions[stream]
+                n = sess.n if sess is not None else 0
+                dels, ins = coalesce_batches(
+                    [(r.deletions, r.insertions) for r in reqs], n)
+            start = time.perf_counter()
+            for req in reqs:
+                req.started_s = start
+            last_err: Optional[BaseException] = None
+            result = None
+            for attempt in range(sv.max_retries + 1):
+                sess = self.sessions[stream]
+                if sess is None or sess.closed:
+                    last_err = ValueError(
+                        f"stream {stream} session is closed")
+                    break               # permanent: no retry can help
+                try:
+                    result = sess.update(dels, ins)
+                    break
+                except ValueError as e:
+                    if sess.closed:     # slot died mid-dispatch
+                        last_err = e
+                        break
+                    raise               # rejected batch: caller bug, no retry
+                except Exception as e:  # transient: backoff and retry
+                    last_err = e
+                    result = None
+                    if attempt < sv.max_retries:
+                        with self._lock:
+                            self._retries += 1
+                        time.sleep(sv.retry_backoff_s * (2 ** attempt))
+            for req in reqs:
+                req.attempts = attempt + 1
+            if result is None:
+                for req in reqs:
+                    req.error = repr(last_err)
+                self._requeue(stream, reqs, gen)
+                with self._lock:
+                    if gen == self._slot_gen[stream]:
+                        self._dead.setdefault(stream, repr(last_err))
+                return False
+            done = time.perf_counter()
+            with self._lock:
+                if gen != self._slot_gen[stream]:
+                    # the watchdog declared us stuck mid-update and drained
+                    # these requests to a respawned slot — our result went
+                    # to the orphaned pre-failover session; retiring it too
+                    # would double-apply, so abandon it
+                    return True
+                for req in reqs:
+                    req.result = result
+                    req.done_s = done
+                    req.done = True
+                    if (req.deadline_at_s is not None
+                            and done > req.deadline_at_s):
+                        req.deadline_missed = True
+                        self._deadline_misses += 1
+                self.finished.extend(reqs)
+                self._inflight.pop(stream, None)
+                self._dispatches[stream] += 1
+            if sv.degraded_reads:
+                self._refresh_snapshot(stream)
+            return True
+        finally:
+            self._heartbeat.idle(stream)
+
+    # -- watchdog (session fault domain) -------------------------------------
+    def _slot_has_work(self, stream: int) -> bool:
+        with self._lock:
+            return bool(self._queues[stream]) or stream in self._inflight
+
+    def _poll_watchdog(self) -> int:
+        """One health pass over every slot: fail over dead slots and
+        heartbeat-stale (stuck) ones, draining their queued batches to the
+        respawned session.  Returns the number of recoveries performed."""
+        if not self.serving.watchdog:
+            return 0
+        recovered = 0
+        for i in range(self.slots):
+            sess = self.sessions[i]
+            dead = (i in self._dead
+                    or (sess is not None and sess.closed))
+            stuck = self._heartbeat.stale(
+                i, self.serving.heartbeat_timeout_s)
+            if (dead or stuck) and self._slot_has_work(i):
+                if self._failover_drain(
+                        i, kind="stuck" if stuck and not dead else "dead"):
+                    recovered += 1
+        return recovered
+
+    def _failover_drain(self, stream: int, *, kind: str) -> bool:
+        """Recover one failed slot: respawn its session from the durable
+        store (:meth:`failover`) and drain every claimed-or-queued batch to
+        the respawn.  Slots with no store shed their queue instead (with a
+        machine-readable reason) so the service never grows an undrainable
+        queue.  The event lands as a session-domain ``RecoveryRecord`` in
+        the respawned session's ``report()`` and under
+        ``report()["watchdog"]``."""
+        t0 = time.perf_counter()
+        with self._lock:
+            # mark the slot mid-recovery so run_until_drained() doesn't
+            # mistake the held-for-drain window for an idle service
+            self._recovering.add(stream)
+            stranded = (self._inflight.pop(stream, [])
+                        + list(self._queues[stream]))
+            self._queues[stream].clear()
+            self._slot_gen[stream] += 1     # zombie workers see a stale gen
+            gen = self._slot_gen[stream]
+        try:
+            sess = self.sessions[stream]
+            if kind == "stuck" and sess is not None and not sess.closed:
+                # close the stuck session: a zombie worker waking later hits
+                # "session is closed" before any WAL append — the respawn
+                # owns the store exclusively from here (backref dropped
+                # first so _detach doesn't unregister the slot)
+                sess._service = None
+                sess.close()
+            if self._store_dirs.get(stream) is None:
+                with self._lock:
+                    for req in stranded:
+                        self._shed(req, "slot_dead",
+                                   f"stream {stream} {kind} with no durable "
+                                   "store to respawn from — request shed")
+                    self._dead[stream] = f"{kind}; no durable store"
+                    self._watchdog_events.append(fd.RecoveryRecord(
+                        domain="session", batch_index=-1,
+                        wall_time_s=time.perf_counter() - t0,
+                        stream=stream, kind=kind,
+                        drained_requests=0,
+                        description=(f"slot {stream} {kind}; no store — "
+                                     f"{len(stranded)} request(s) shed")
+                    ).to_dict())
+                return False
+            self.failover(stream)
+            with self._lock:
+                self._queues[stream].extend(stranded)
+            rec = fd.RecoveryRecord(
+                domain="session",
+                batch_index=self.sessions[stream]._batch_index,
+                wall_time_s=time.perf_counter() - t0,
+                stream=stream, kind=kind, drained_requests=len(stranded),
+                replayed_batches=(self.sessions[stream]
+                                  .report().replayed_batches),
+                description=(f"slot {stream} {kind} — respawned from "
+                             f"store, {len(stranded)} queued batch(es) "
+                             "drained to the new session"))
+            self.sessions[stream]._recoveries.append(rec)
+            with self._lock:
+                self._watchdog_events.append(rec.to_dict())
+            if self._running:
+                self._spawn_worker(stream, gen)
+                self._wake[stream].set()
+            return True
+        finally:
+            with self._lock:
+                self._recovering.discard(stream)
+
+    # -- synchronous dispatch -------------------------------------------------
     def step(self) -> int:
-        """One service tick: admit at most one queued batch per slot (FIFO
-        within a stream), run the admitted updates, retire them.  Returns
-        the number of batches processed."""
-        admitted: Dict[int, UpdateRequest] = {}
-        for req in self.queue:
-            if req.stream not in admitted:
-                admitted[req.stream] = req
-        taken = set(r.uid for r in admitted.values())
-        self.queue = [r for r in self.queue if r.uid not in taken]
-        for req in admitted.values():
-            req.started_s = time.perf_counter()
-            req.result = self.sessions[req.stream].update(
-                req.deletions, req.insertions)
-            req.done_s = time.perf_counter()
-            req.done = True
-            self.finished.append(req)
-        return len(admitted)
+        """One synchronous dispatch pass: every slot with queued work runs
+        one dispatch (the whole coalesced run per slot), then the watchdog
+        polls slot health.  Returns the number of requests retired."""
+        if self._running:
+            raise RuntimeError("service is running in background mode — "
+                               "stop() it before stepping synchronously")
+        before = len(self.finished)
+        for i in range(self.slots):
+            reqs = self._take(i) if self.sessions[i] is not None else []
+            if reqs:
+                self._dispatch(i, reqs, self._slot_gen[i])
+        self._poll_watchdog()
+        return len(self.finished) - before
 
     def run_until_drained(self, max_ticks: int = 10_000
                           ) -> List[UpdateRequest]:
-        """Tick until the queue is empty; returns the retired requests."""
+        """Dispatch until every queue is empty; returns the retired
+        requests.  In background mode this just waits for the workers."""
+        if self._running:
+            deadline = time.time() + 600
+            while time.time() < deadline:
+                with self._lock:
+                    busy = (any(self._queues[i] for i in self._queues)
+                            or bool(self._inflight)
+                            or bool(self._recovering))
+                if not busy:
+                    break
+                time.sleep(0.01)
+            return self.finished
         for _ in range(max_ticks):
             if not self.queue:
                 break
             self.step()
         return self.finished
 
-    # -- serving reads -------------------------------------------------------
-    def query(self, stream: int, vertices) -> np.ndarray:
-        return self.sessions[stream].query(vertices)
+    # -- background dispatch --------------------------------------------------
+    def _worker_loop(self, stream: int, gen: int) -> None:
+        ev = self._wake[stream]
+        while self._running and gen == self._slot_gen[stream]:
+            reqs = (self._take(stream)
+                    if self.sessions[stream] is not None else [])
+            if reqs:
+                if not self._dispatch(stream, reqs, gen):
+                    return          # slot died; the watchdog takes over
+                continue            # drain continuously while work exists
+            ev.clear()
+            ev.wait(timeout=0.05)
 
-    def top_k(self, stream: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
-        return self.sessions[stream].top_k(k)
+    def _watchdog_loop(self) -> None:
+        interval = min(0.1, self.serving.heartbeat_timeout_s / 4)
+        while self._running:
+            self._poll_watchdog()
+            time.sleep(interval)
+
+    def _spawn_worker(self, stream: int, gen: int) -> None:
+        t = threading.Thread(target=self._worker_loop, args=(stream, gen),
+                             name=f"pagerank-slot-{stream}", daemon=True)
+        self._workers[stream] = t
+        t.start()
+
+    def start(self) -> "PageRankService":
+        """Enter background mode: one dispatcher thread per slot (each
+        drains its own stream continuously — a slow stream never blocks
+        the others) plus a watchdog thread.  Safe to submit/query from any
+        thread while running."""
+        if self._running:
+            return self
+        self._running = True
+        for i in range(self.slots):
+            self._spawn_worker(i, self._slot_gen[i])
+        if self.serving.watchdog:
+            self._watchdog_thread = threading.Thread(
+                target=self._watchdog_loop, name="pagerank-watchdog",
+                daemon=True)
+            self._watchdog_thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Leave background mode.  ``drain=True`` waits for the queues to
+        empty first (shed/expired requests are not waited on)."""
+        if not self._running:
+            return
+        if drain:
+            self.run_until_drained()
+        self._running = False
+        for ev in self._wake.values():
+            ev.set()
+        for t in self._workers.values():
+            t.join(timeout=10)
+        if self._watchdog_thread is not None:
+            self._watchdog_thread.join(timeout=10)
+            self._watchdog_thread = None
+        self._workers.clear()
+
+    def __enter__(self) -> "PageRankService":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop(drain=exc_type is None)
+        return False
+
+    # -- degraded-mode reads --------------------------------------------------
+    def _refresh_snapshot(self, stream: int) -> None:
+        sess = self.sessions[stream]
+        if sess is None or sess.closed:
+            return
+        snap = _ReadSnapshot(sess.fork(), time.perf_counter(),
+                             sess._batch_index)
+        with self._lock:
+            self._snapshots[stream] = snap
+
+    def _read(self, stream: int, op) -> ReadResult:
+        self._check_stream(stream)
+        t0 = time.perf_counter()
+        snap = self._snapshots.get(stream) if self.serving.degraded_reads \
+            else None
+        live = self.sessions[stream]
+        if snap is not None:
+            # refresh a stale snapshot only when the slot is idle — a busy
+            # slot serves the (bounded-staleness) snapshot, never waits
+            if (t0 - snap.taken_s > self.serving.staleness_budget_s
+                    and not self._heartbeat.is_busy(stream)
+                    and live is not None and not live.closed):
+                self._refresh_snapshot(stream)
+                snap = self._snapshots[stream]
+            op_start = time.perf_counter()
+            values, vertices = op(snap.sess)
+            lag = 0
+            if live is not None and not live.closed:
+                lag = max(0, live._batch_index - snap.batch_index)
+                live._queries += 1  # degraded reads count for the slot too
+            # staleness = the age of the served data when the read began
+            # (the read's own wall time is latency, not staleness)
+            res = ReadResult(values=values, vertices=vertices,
+                             stream=stream,
+                             staleness_s=max(0.0, op_start - snap.taken_s),
+                             lag_updates=lag, degraded=True)
+        else:
+            if live is None or live.closed:
+                raise ValueError(f"stream {stream} is closed and "
+                                 "degraded reads are disabled")
+            values, vertices = op(live)
+            res = ReadResult(values=values, vertices=vertices,
+                             stream=stream, staleness_s=0.0,
+                             lag_updates=0, degraded=False)
+        with self._lock:
+            self._query_walls.append(time.perf_counter() - t0)
+            self._query_staleness.append(res.staleness_s)
+            self._query_lags.append(res.lag_updates)
+        return res
+
+    def query(self, stream: int, vertices) -> ReadResult:
+        """Ranks of the given vertices, served degraded-mode (from the
+        slot's read snapshot — never waiting on an in-flight update) with
+        the staleness bound reported on the result."""
+        return self._read(stream, lambda s: (s.query(vertices), None))
+
+    def top_k(self, stream: int, k: int) -> ReadResult:
+        """(values, vertex ids) of the k highest-ranked vertices, served
+        degraded-mode with the staleness bound reported on the result."""
+        return self._read(stream, lambda s: tuple(s.top_k(k)))
 
     # -- reporting -----------------------------------------------------------
+    @staticmethod
+    def _pct(vals, q) -> float:
+        return round(float(np.percentile(vals, q)) * 1e3, 3) if vals else 0.0
+
     def report(self) -> dict:
         """Per-session p50/p95 update latency + retrace counts, plus the
-        service-level request latency (queue wait included).  Dict-shaped
-        so the smoke bench can serialize it directly."""
+        service-level serving health: request/queue-wait/execution
+        percentiles, shed + deadline-miss + retry counters, degraded-read
+        latency and staleness, and the watchdog event log.  Dict-shaped so
+        the smoke bench can serialize it directly."""
         per_session = []
         for i, s in enumerate(self.sessions):
-            if s is None:
+            if s is None or s.closed:
                 per_session.append({"stream": i, "closed": True})
                 continue
             rep = s.report()
@@ -214,6 +795,8 @@ class PageRankService:
                 "retraces_post_warmup": rep.retraces_post_warmup,
                 "total_sweeps": rep.total_sweeps,
                 "queries_served": rep.queries_served,
+                "batches_converged": rep.batches_converged,
+                "sweep_cap_hits": rep.sweep_cap_hits,
             }
             if rep.topology == "sharded":
                 row["topology"] = rep.topology
@@ -226,20 +809,49 @@ class PageRankService:
                 row["recovery_time_s"] = round(rep.recovery_time_s, 6)
                 row["replayed_batches"] = rep.replayed_batches
             per_session.append(row)
-        lat = [r.latency_s for r in self.finished]
-        waits = [r.wait_s for r in self.finished]
+        with self._lock:
+            fin = list(self.finished)
+            shed = list(self.shed_requests)
+            q_walls = list(self._query_walls)
+            q_stale = list(self._query_staleness)
+            q_lags = list(self._query_lags)
+            queued = sum(len(q) for q in self._queues.values()) \
+                + sum(len(v) for v in self._inflight.values())
+            watchdog = list(self._watchdog_events)
+            deadline_misses = self._deadline_misses
+            retries = self._retries
+        lat = [r.latency_s for r in fin]
+        waits = [r.wait_s for r in fin]
+        execs = [r.exec_s for r in fin]
         return {
             "n_sessions": self.slots,
+            "serving": {f.name: getattr(self.serving, f.name)
+                        for f in dataclasses.fields(self.serving)},
             "placements": {str(i): list(fp)
                            for i, fp in self.placements().items()},
-            "requests_done": len(self.finished),
-            "requests_queued": len(self.queue),
-            "request_p50_ms": (round(float(np.percentile(lat, 50)) * 1e3, 3)
-                               if lat else 0.0),
-            "request_p95_ms": (round(float(np.percentile(lat, 95)) * 1e3, 3)
-                               if lat else 0.0),
-            "queue_wait_p50_ms": (round(float(np.percentile(waits, 50))
-                                        * 1e3, 3) if waits else 0.0),
+            "requests_done": len(fin),
+            "requests_queued": queued,
+            "requests_shed": len(shed),
+            "shed_reasons": dict(Counter(
+                r.shed_reason["code"] for r in shed if r.shed_reason)),
+            "deadline_misses": deadline_misses,
+            "retries": retries,
+            "request_p50_ms": self._pct(lat, 50),
+            "request_p95_ms": self._pct(lat, 95),
+            "queue_wait_p50_ms": self._pct(waits, 50),
+            "queue_wait_p95_ms": self._pct(waits, 95),
+            "exec_p50_ms": self._pct(execs, 50),
+            "queries": {
+                "served": len(q_walls),
+                "p50_ms": self._pct(q_walls, 50),
+                "p95_ms": self._pct(q_walls, 95),
+                "staleness_p95_s": (round(float(np.percentile(q_stale, 95)),
+                                          6) if q_stale else 0.0),
+                "staleness_max_s": (round(max(q_stale), 6)
+                                    if q_stale else 0.0),
+                "lag_updates_max": max(q_lags) if q_lags else 0,
+            },
             "failovers": list(self._failovers),
+            "watchdog": watchdog,
             "sessions": per_session,
         }

@@ -60,6 +60,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from functools import partial
 from typing import List, Optional, Sequence, Tuple, Union
 
@@ -76,7 +77,7 @@ from repro.core import faults as flt
 from repro.core import frontier as fr
 from repro.core import pallas_engine as pe
 from repro.core.blocked import SweepStats
-from repro.core.delta import signed_edge_delta
+from repro.core.delta import signed_edge_delta, validate_edge_batch
 from repro.core.graph import (GraphSnapshot, HostGraph, initial_ranks,
                               pad_ranks)
 from repro.core.incremental import (IncrementalPullMatrix, MatrixAux,
@@ -86,6 +87,14 @@ from repro.graphs import partition as gpart
 from repro.kernels.block_spmv import ops
 
 VARIANTS = ("static", "nd", "dt", "df")
+
+
+class SweepCapWarning(RuntimeWarning):
+    """An update batch hit ``max_iterations`` without converging — the
+    served ranks are the best iterate, not a ``tau``-converged solution.
+    Raised as a warning (not an error) because bounded-staleness serving
+    legitimately runs with tight sweep budgets; ``report()`` counts every
+    occurrence in ``sweep_cap_hits``."""
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +180,12 @@ class StreamBatchResult:
     #                               unlike the global cache size, immune to
     #                               other sessions/forks compiling variants
 
+    @property
+    def converged(self) -> bool:
+        """Whether this batch reached ``tau`` within the sweep budget
+        (``False`` = the sweep cap was hit; see :class:`SweepCapWarning`)."""
+        return bool(self.stats.converged)
+
 
 @dataclasses.dataclass
 class SessionReport:
@@ -186,6 +201,9 @@ class SessionReport:
     total_edges_processed: int
     queries_served: int
     wall_times_s: List[float]
+    # -- convergence accounting (no silent sweep-capping) --------------------
+    batches_converged: int = 0    # updates that reached tau in budget
+    sweep_cap_hits: int = 0       # updates that hit max_iterations instead
     # -- topology (sharded sessions; None/"single" otherwise) ---------------
     topology: str = "single"
     n_shards: Optional[int] = None
@@ -512,6 +530,11 @@ class PageRankSession:
                 "this session wraps a bare snapshot (from_snapshot without "
                 "hg=); build it with PageRankSession.from_graph to stream "
                 "updates")
+        # validate BEFORE the WAL append and before any device scatter: a
+        # NaN-weighted, duplicate, out-of-range or ambiguous batch raises
+        # here, is never durably logged, and never replays after a restore
+        deletions, insertions = validate_edge_batch(deletions, insertions,
+                                                    self.n)
         bidx = self._batch_index + 1
         wal_undo = None
         if self.store is not None and not self._replaying:
@@ -545,6 +568,14 @@ class PageRankSession:
             raise
         self._batch_index = bidx
         self._history.append(res)
+        if not res.stats.converged:
+            warnings.warn(
+                f"update batch {bidx} hit the sweep cap "
+                f"(max_iterations={self.config.max_iterations}) without "
+                f"reaching tau={self.config.tau} — serving the best "
+                "iterate; raise max_iterations or loosen tau "
+                "(report().sweep_cap_hits counts these)",
+                SweepCapWarning, stacklevel=2)
         if (self._process_domain is not None and not self._replaying
                 and bidx % self._process_domain.checkpoint_interval == 0):
             self._checkpoint_now()
@@ -1229,6 +1260,10 @@ class PageRankSession:
                                       for r in self._history),
             queries_served=self._queries,
             wall_times_s=walls,
+            batches_converged=sum(1 for r in self._history
+                                  if r.stats.converged),
+            sweep_cap_hits=sum(1 for r in self._history
+                               if not r.stats.converged),
             topology=self.config.topology,
             n_shards=spec.n_shards if spec is not None else None,
             partitioner=spec.partitioner if spec is not None else None,

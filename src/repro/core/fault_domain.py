@@ -28,6 +28,16 @@ the repo models faults, at three blast radii:
   zero-retrace hot path.  :class:`ProcessFaultDomain` carries the
   store + checkpoint cadence.
 
+* **session** — one serving slot of a :class:`~repro.api.PageRankService`
+  goes stuck, slow, or dead while the other slots keep serving.  Detection
+  is by heartbeat (:class:`SlotHeartbeat`: every dispatch beats; a busy
+  slot whose beat goes stale past the serving config's
+  ``heartbeat_timeout_s`` is stuck); recovery drains the slot's queued
+  batches to a session respawned through the process domain's
+  ``failover()`` path.  :class:`SessionFault` is the deterministic
+  injection schedule (kill or stall a slot after K dispatches) the
+  chaos-under-load tests use.
+
 Every recovery, in any domain, appends a :class:`RecoveryRecord` that
 ``session.report()`` / ``service.report()`` surface, so recovery time and
 replayed work are observable wherever the fault happened.
@@ -35,11 +45,12 @@ replayed work are observable wherever the fault happened.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 from repro.core.faults import NO_FAULTS, FaultPlan  # noqa: F401 (re-export)
 
-DOMAINS = ("thread", "shard", "process")
+DOMAINS = ("thread", "shard", "process", "session")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +67,10 @@ class RecoveryRecord:
     recovery_sweeps: int = 0
     # -- process domain -------------------------------------------------------
     replayed_batches: int = 0
+    # -- session domain (service watchdog) ------------------------------------
+    stream: Optional[int] = None   # service slot index the fault hit
+    kind: Optional[str] = None     # "dead" | "stuck"
+    drained_requests: int = 0      # queued batches re-routed to the respawn
 
     def to_dict(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
@@ -179,6 +194,66 @@ class ProcessFaultDomain(FaultDomain):
             "sessions — configure the process domain with "
             "EngineConfig(durability='wal', checkpoint_interval=…) plus "
             "store_dir= at session construction, not via fault_domain=")
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionFault:
+    """One scheduled serving-slot failure, consumed by the service's
+    dispatcher: after slot ``stream`` completes ``after_dispatches``
+    dispatches, the NEXT dispatch hits the fault.  ``kind="dead"`` closes
+    the slot's session before the update touches any state (crash-stop of
+    the slot — the honest analogue of the session object dying, and safe
+    to re-drain because nothing was WAL-logged); ``kind="stuck"`` stalls
+    the dispatching worker for ``stall_s`` seconds *before* the update, so
+    the heartbeat goes stale while the slot holds work."""
+    stream: int
+    after_dispatches: int = 0
+    kind: str = "dead"
+    stall_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("dead", "stuck"):
+            raise ValueError(f"kind={self.kind!r} invalid; expected "
+                             "'dead' or 'stuck'")
+        if self.kind == "stuck" and self.stall_s <= 0:
+            raise ValueError("kind='stuck' needs stall_s > 0")
+
+
+class SlotHeartbeat:
+    """Per-slot liveness bookkeeping for the service watchdog.
+
+    A worker ``beat()``s when it picks up work and when it finishes;
+    ``busy_since`` stays set for the whole dispatch.  ``stale(timeout)``
+    is the stuck-slot predicate: busy AND no beat for ``timeout`` seconds
+    — an idle slot is never stale, however long it idles."""
+
+    def __init__(self):
+        self._last: Dict[int, float] = {}
+        self._busy_since: Dict[int, float] = {}
+
+    def beat(self, slot: int) -> None:
+        self._last[slot] = time.perf_counter()
+
+    def busy(self, slot: int) -> None:
+        now = time.perf_counter()
+        self._busy_since[slot] = now
+        self._last[slot] = now
+
+    def idle(self, slot: int) -> None:
+        self._busy_since.pop(slot, None)
+        self._last[slot] = time.perf_counter()
+
+    def is_busy(self, slot: int) -> bool:
+        return slot in self._busy_since
+
+    def stale(self, slot: int, timeout_s: float) -> bool:
+        if slot not in self._busy_since:
+            return False
+        return (time.perf_counter() - self._last.get(slot, 0.0)) > timeout_s
+
+    def age_s(self, slot: int) -> float:
+        last = self._last.get(slot)
+        return 0.0 if last is None else time.perf_counter() - last
 
 
 def resolve_thread_plan(faults: Any, fault_domain: Any) -> Optional[Any]:

@@ -53,16 +53,22 @@ def __getattr__(name: str):
 
 @dataclasses.dataclass
 class StreamReport:
-    """Aggregate latency/compile statistics over a stream."""
+    """Aggregate latency/compile/convergence statistics over a stream."""
     results: List[StreamBatchResult]
     wall_times_s: List[float]
     p50_s: float
     p95_s: float
     retraces_post_warmup: int     # driver cache growth after batch 1
+    batches_converged: int = 0    # batches that met tau within the cap
+    sweep_cap_hits: int = 0       # batches stopped by max_iterations instead
 
     @property
     def final_ranks(self) -> jnp.ndarray:
         return self.results[-1].ranks
+
+    @property
+    def all_converged(self) -> bool:
+        return self.sweep_cap_hits == 0
 
 
 class StreamRunner:
@@ -222,8 +228,11 @@ def run_stream(hg0: HostGraph,
         retraces = caches[-1] - base
     else:
         retraces = caches[-1] - caches[0]
+    converged = sum(1 for r in results if r.stats.converged)
     return StreamReport(
         results=results, wall_times_s=walls,
         p50_s=float(np.percentile(walls, 50)),
         p95_s=float(np.percentile(walls, 95)),
-        retraces_post_warmup=retraces)
+        retraces_post_warmup=retraces,
+        batches_converged=converged,
+        sweep_cap_hits=len(results) - converged)

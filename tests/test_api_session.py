@@ -9,7 +9,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.api import (EngineConfig, PageRankService, PageRankSession,
-                       registry)
+                       ServingConfig, registry)
 from repro.core import pagerank as pr
 from repro.core.delta import random_batch
 from repro.core.frontier import batch_to_device
@@ -293,7 +293,8 @@ class TestService:
     def test_drains_and_reports_per_session(self):
         graphs = [rmat(8, avg_degree=4, seed=s) for s in (0, 1)]
         svc = PageRankService(
-            graphs, config=EngineConfig(engine="pallas", block_size=64))
+            graphs, config=EngineConfig(engine="pallas", block_size=64),
+            serving=ServingConfig(coalesce=False))
         cur = list(graphs)
         for j in range(2):
             for i in range(len(cur)):
@@ -319,7 +320,7 @@ class TestService:
             assert pr.linf(svc.sessions[i].R[:n],
                            jnp.asarray(ref[:n])) < 1e-8
 
-    def test_fifo_per_stream_one_batch_per_tick(self):
+    def test_step_coalesces_queue_into_one_update(self):
         hg = rmat(8, avg_degree=4, seed=2)
         svc = PageRankService(
             [hg], config=EngineConfig(engine="pallas", block_size=64))
@@ -328,7 +329,27 @@ class TestService:
             dels, ins = random_batch(cur, 1e-2, seed=90 + j)
             svc.submit(0, dels, ins)
             cur = cur.apply_batch(dels, ins)
-        assert svc.step() == 1          # one batch per slot per tick
+        assert svc.step() == 3      # whole run retires in ONE dispatch
+        assert svc.queue == []
+        assert [r.uid for r in svc.finished] == [1, 2, 3]
+        assert svc.sessions[0].report().n_updates == 1  # one scatter
+        # last-write-wins fold equals the sequential end state
+        ref = pr.numpy_reference(cur.snapshot(block_size=64),
+                                 iterations=300)
+        assert pr.linf(svc.sessions[0].R[:cur.n],
+                       jnp.asarray(ref[:cur.n])) < 1e-8
+
+    def test_fifo_per_stream_without_coalescing(self):
+        hg = rmat(8, avg_degree=4, seed=2)
+        svc = PageRankService(
+            [hg], config=EngineConfig(engine="pallas", block_size=64),
+            serving=ServingConfig(coalesce=False))
+        cur = hg
+        for j in range(3):
+            dels, ins = random_batch(cur, 1e-2, seed=90 + j)
+            svc.submit(0, dels, ins)
+            cur = cur.apply_batch(dels, ins)
+        assert svc.step() == 1          # one batch per slot per pass
         assert len(svc.queue) == 2
         assert [r.uid for r in svc.finished] == [1]
         svc.run_until_drained()

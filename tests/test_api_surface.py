@@ -21,16 +21,21 @@ from repro.core.delta import random_batch
 from repro.graphs.generators import rmat
 
 EXPECTED_API = {
+    "AdmissionRejected",
     "EngineConfig",
     "Engine",
     "PageRankService",
     "PageRankSession",
+    "ReadResult",
     "RecoveryRecord",
+    "ServingConfig",
+    "SessionFault",
     "SessionReport",
     "SessionStore",
     "ShardFault",
     "ShardFaultDomain",
     "StreamBatchResult",
+    "SweepCapWarning",
     "ThreadFaultDomain",
     "UpdateRequest",
     "register",

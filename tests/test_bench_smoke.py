@@ -48,9 +48,11 @@ def test_smoke_report():
         assert row["retraces_post_warmup"] == 0, row
         assert row["p50_ms"] > 0
         assert row["linf_vs_reference"] < 1e-8, row
-    # the service scenario (N concurrent sessions, one shared batch queue):
-    # every session must drain its batches with zero post-warmup retraces
-    # (the jit caches are shared across sessions) and serve accurate ranks
+    # the service scenario (N concurrent sessions with concurrent query
+    # clients): every session must drain its batches with zero post-warmup
+    # retraces (the jit caches are shared across sessions), serve accurate
+    # ranks, and the degraded-mode reads must be recorded with a staleness
+    # bound
     service = report["service"]
     assert service["n_sessions"] >= 2
     assert service["requests_done"] == (service["n_sessions"]
@@ -60,7 +62,31 @@ def test_smoke_report():
     for row in service["sessions"]:
         assert row["retraces_post_warmup"] == 0, row
         assert row["n_updates"] == service["batches_per_session"], row
+        assert row["sweep_cap_hits"] == 0, row
     assert service["linf_vs_reference_max"] < 1e-8
+    q = service["queries"]
+    assert q["served"] > 0              # queries ran alongside the drain
+    assert q["p50_ms"] > 0 and q["p95_ms"] >= q["p50_ms"]
+    assert q["staleness_max_s"] >= 0.0
+    # the serve_load scenario (PR-6 overload acceptance): bounded queues
+    # shed at 2x overload instead of growing, continuous dispatch keeps
+    # queue wait below per-batch compute, degraded reads stay
+    # bounded-stale, and a watchdog-recovered slot kill converges to
+    # oracle parity on the accepted-batch lineage
+    load = report["serve_load"]
+    assert load["requests_done"] > 0
+    assert load["requests_queued"] == 0         # no unbounded growth
+    assert load["requests_shed"] > 0            # overload was real: shed
+    assert load["shed_reasons"].get("queue_full", 0) > 0
+    assert load["queue_wait_p50_ms"] < load["exec_p50_ms"], load
+    assert load["deadline_miss_rate"] == 0.0    # generous deadline met
+    lq = load["queries"]
+    assert lq["served"] >= 100                  # concurrent read load
+    assert lq["staleness_max_s"] < 30.0         # bounded, not unbounded
+    events = load["watchdog"]                   # the mid-load slot kill
+    assert any(e["kind"] == "dead" and e["domain"] == "session"
+               for e in events)
+    assert load["linf_vs_reference_max"] < 1e-8
     # the sharded scenario (topology="sharded" session on an 8-host-device
     # mesh, one run per partitioner): every partitioner must stay
     # parity-clean with zero post-warmup retraces, and the edge-cut /

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import (EngineConfig, PageRankService, PageRankSession,
-                       SessionStore, ShardFaultDomain, ThreadFaultDomain)
+                       ServingConfig, SessionStore, ShardFaultDomain,
+                       ThreadFaultDomain)
 from repro.core import pagerank as pr
 from repro.core.delta import random_batch
 from repro.core.faults import FaultPlan
@@ -333,19 +334,33 @@ class TestProcessRecovery:
         assert rest.config.durability == "none" and rest.store is None
         np.testing.assert_array_equal(np.asarray(rest.R), oracle[1])
 
-    def test_rejected_batch_rolls_back_wal(self, tmp_path, setup):
-        """A batch the session REFUSES (here: outside the fixed block
-        grid) must not survive in the WAL — its record is revoked so a
-        later restore replays only batches that became state."""
+    def test_rejected_batch_rolls_back_wal(self, tmp_path, setup,
+                                           monkeypatch):
+        """A batch the session REFUSES must not survive in the WAL.
+        Two rejection points: a *validation* failure (out-of-range id)
+        raises BEFORE the append — no record is ever written; an
+        in-process failure AFTER the append (forced here, since
+        validation now front-runs the block-grid check) revokes its
+        record.  Either way a later restore replays only batches that
+        became state."""
         hg, r0, batches, _, oracle = setup
         sess = self._durable(tmp_path, hg, r0, checkpoint_interval=100)
         sess.update(*batches[0])
         store = SessionStore(str(tmp_path / "store"))
         assert store.wal_tip() == 1
         bad_ins = np.array([[sess.n_pad + 3, 0]], np.int64)
-        with pytest.raises(ValueError, match="block grid"):
+        with pytest.raises(ValueError, match="out-of-range"):
             sess.update(np.zeros((0, 2), np.int64), bad_ins)
+        assert store.wal_tip() == 1          # rejected pre-append
+        real = type(sess)._update_stream
+
+        def _boom(self, *a, **k):
+            raise RuntimeError("device fell over mid-apply")
+        monkeypatch.setattr(type(sess), "_update_stream", _boom)
+        with pytest.raises(RuntimeError, match="mid-apply"):
+            sess.update(*batches[1])
         assert store.wal_tip() == 1          # the bad record was revoked
+        monkeypatch.setattr(type(sess), "_update_stream", real)
         sess.update(*batches[1])             # the stream continues durably
         del sess
         rest = PageRankSession.restore(str(tmp_path / "store"))
@@ -663,7 +678,10 @@ def test_service_failover_respawns_from_store(tmp_path, setup):
         store_dir=str(tmp_path / "slot0"))
     other = PageRankSession.from_graph(
         hg, config=EngineConfig(engine="pallas", block_size=BLOCK), r0=r0)
-    svc = PageRankService([durable, other], warmup=False)
+    # coalesce=False: the bit-for-bit oracle below needs the WAL to hold
+    # the same 3-batch sequence it replays against
+    svc = PageRankService([durable, other], warmup=False,
+                          serving=ServingConfig(coalesce=False))
     for i in range(3):
         svc.submit(0, *batches[i])
         svc.submit(1, *batches[i])
