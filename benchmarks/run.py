@@ -39,6 +39,15 @@ SERVE_LOAD_CLIENTS = 24         # concurrent query clients
 SERVE_LOAD_READS = 15           # reads per client (~360 reads total)
 SERVE_LOAD_KILL_AFTER = 2       # dispatches before stream 0 is killed
 
+CHAOS_STREAMS = 2               # durable streams under the chaos soak
+CHAOS_STEPS = 8                 # soak steps (one update round + scrub each)
+CHAOS_LOG2_N = 10               # graph size per stream
+CHAOS_BATCH_EDGES = 8           # edges per update batch
+CHAOS_SEED = 93                 # ChaosPlan seed: same seed, same schedule
+CHAOS_RATE = 0.25               # extra seeded events beyond the required set
+CHAOS_REQUIRE = ("rank", "tile", "slot", "mirror", "graph",
+                 "scatter_drop", "scatter_dup", "slot_dead")
+
 SHARDED_DEVICES = 8             # forced host devices for the sharded scenario
 SHARDED_BATCHES = 6             # DF batches per partitioner
 SHARDED_LOG2_N = 10             # graph size (subprocess recompiles per part.)
@@ -213,6 +222,111 @@ def _smoke_serve_load() -> dict:
         sess = svc.sessions[s]
         errs.append(float(pr.linf(sess.ranks[:sess.n],
                                   jnp.asarray(ref[:sess.n]))))
+    out["linf_vs_reference_max"] = max(errs)
+    return out
+
+
+def _smoke_chaos() -> dict:
+    """Silent-corruption chaos scenario (the PR-7 acceptance scenario):
+    durable streams under a seeded :class:`~repro.core.chaos.ChaosPlan`
+    composing every corruption kind (rank/tile/slot-table/mirror bit
+    flips, dropped + duplicated operand scatters, host-graph corruption)
+    with a session-domain slot kill, on a reproducible schedule.  Each
+    soak step applies one update round, injects that step's scheduled
+    faults through the public surfaces, and runs one synchronous
+    deterministic scrub (``svc.scrub(deep=True, repair=True)``) so every
+    detection is attributable to exactly one injection.  Gates: every
+    injected corruption detected, at least one repair at every ladder
+    rung (frontier / rebuild / restore), a clean final scrub, and oracle
+    parity of the accepted-batch lineage on every stream."""
+    import tempfile
+
+    import jax.numpy as jnp
+    from repro.api import (EngineConfig, IntegrityConfig, PageRankService,
+                           PageRankSession, ServingConfig)
+    from repro.core import pagerank as pr
+    from repro.core.chaos import ChaosPlan
+    from repro.core.delta import random_batch
+    from repro.graphs.generators import kmer_chains
+
+    plan = ChaosPlan(seed=CHAOS_SEED, steps=CHAOS_STEPS,
+                     streams=CHAOS_STREAMS, require=CHAOS_REQUIRE,
+                     rate=CHAOS_RATE)
+    store_root = tempfile.mkdtemp(prefix="repro-chaos-")
+    # auto_repair=False: updates only *flag* (fused invariants), the
+    # harness's explicit scrub both detects and repairs — keeping the
+    # injected→detected accounting exactly 1:1.  max_iterations headroom
+    # for the post-restore re-converge, as in serve_load.
+    cfg = EngineConfig(engine="pallas", block_size=64, active_policy="rc",
+                       durability="wal", checkpoint_interval=4,
+                       max_iterations=2000,
+                       integrity=IntegrityConfig(auto_repair=False))
+    sessions = [
+        PageRankSession.from_graph(
+            kmer_chains(1 << CHAOS_LOG2_N, seed=140 + s), config=cfg,
+            store_dir=os.path.join(store_root, f"slot{s}"))
+        for s in range(CHAOS_STREAMS)]
+    svc = PageRankService(sessions, serving=ServingConfig(coalesce=False))
+
+    # accepted-batch lineage per stream = the parity oracle at the end
+    cur = [s.hg for s in sessions]
+    seed_ctr = iter(range(100_000))
+
+    def _advance(s: int) -> None:
+        dels, ins = random_batch(cur[s], CHAOS_BATCH_EDGES / cur[s].m,
+                                 seed=7000 + next(seed_ctr))
+        svc.submit(s, dels, ins)
+        cur[s] = cur[s].apply_batch(dels, ins)
+
+    injected = detected = repaired_clean = 0
+    repairs_by_rung: dict = {}
+    detect_lat = []
+    for step in range(plan.steps):
+        for s in range(CHAOS_STREAMS):
+            _advance(s)
+        svc.run_until_drained()
+        t_inject = {}
+        for ev in plan.events_at(step):
+            if ev.session_fault() is not None:
+                # session-domain composition: the next dispatch kills the
+                # slot; the synchronous watchdog poll fails it over from
+                # its durable store and drains the queue to the respawn
+                svc.inject_session_fault(ev.stream, kind="dead")
+                _advance(ev.stream)
+                continue
+            svc.sessions[ev.stream].inject_corruption(ev.corruption())
+            t_inject[ev.stream] = time.perf_counter()
+            injected += 1
+            if ev.kind.startswith("scatter"):
+                _advance(ev.stream)   # scatter faults tear the NEXT update
+        svc.run_until_drained()
+        for s, rep in svc.scrub(deep=True, repair=True).items():
+            if not rep.failures:
+                continue
+            detected += 1
+            if s in t_inject:
+                detect_lat.append(time.perf_counter() - t_inject.pop(s))
+            for rung in rep.repairs:
+                repairs_by_rung[rung] = repairs_by_rung.get(rung, 0) + 1
+            repaired_clean += int(rep.ok)
+    final = svc.scrub(deep=True, repair=True)
+    out = svc.report()
+    errs = []
+    for s in range(CHAOS_STREAMS):
+        ref = pr.numpy_reference(cur[s].snapshot(block_size=64),
+                                 iterations=300)
+        sess = svc.sessions[s]
+        errs.append(float(pr.linf(sess.ranks[:sess.n],
+                                  jnp.asarray(ref[:sess.n]))))
+    out["plan"] = {"seed": plan.seed, "steps": plan.steps,
+                   "streams": plan.streams, "counts": plan.counts()}
+    out["corruption_injected"] = injected
+    out["corruption_detected"] = detected
+    out["repaired_clean"] = repaired_clean
+    out["repairs_by_rung"] = repairs_by_rung
+    out["detection_latency_max_s"] = (round(max(detect_lat), 6)
+                                      if detect_lat else 0.0)
+    out["final_scrub_ok"] = all(r.ok for r in final.values())
     out["linf_vs_reference_max"] = max(errs)
     return out
 
@@ -459,9 +573,11 @@ def smoke(out: str = SMOKE_OUT) -> dict:
     service scenario (N concurrent sessions with concurrent query clients,
     per-session p50/p95 + query staleness), the serve_load scenario
     (durable streams at 2x overload with shedding, degraded reads and a
-    watchdog-recovered slot kill) and the sharded scenario (a
-    topology="sharded" session on an 8-host-device mesh, per-partitioner
-    edge-cut/latency).
+    watchdog-recovered slot kill), the chaos scenario (a seeded
+    composed-fault soak: silent corruption injected and repaired via the
+    integrity subsystem, gated on detection and repair-ladder coverage)
+    and the sharded scenario (a topology="sharded" session on an
+    8-host-device mesh, per-partitioner edge-cut/latency).
 
     Records sweeps, edges_processed, wall time and the frontier-work ratio
     edges_processed / (m · sweeps) — the Pallas engine's ratio ≪ 1 is the
@@ -530,6 +646,7 @@ def smoke(out: str = SMOKE_OUT) -> dict:
     report["stream"] = _smoke_stream()
     report["service"] = _smoke_service()
     report["serve_load"] = _smoke_serve_load()
+    report["chaos"] = _smoke_chaos()
     report["sharded"] = _smoke_sharded()
     report["recovery"] = _smoke_recovery()
 

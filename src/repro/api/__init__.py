@@ -21,14 +21,23 @@ from repro.api.session import (PageRankSession, SessionReport,
 from repro.api.service import (AdmissionRejected, PageRankService,
                                ReadResult, UpdateRequest)
 from repro.ckpt.checkpoint import SessionStore
-from repro.core.fault_domain import (RecoveryRecord, SessionFault,
+from repro.core.chaos import ChaosEvent, ChaosPlan
+from repro.core.fault_domain import (CorruptionFault, CorruptionFaultDomain,
+                                     RecoveryRecord, SessionFault,
                                      ShardFault, ShardFaultDomain,
                                      ThreadFaultDomain)
+from repro.core.integrity import IntegrityConfig, IntegrityReport
 
 __all__ = [
     "AdmissionRejected",
+    "ChaosEvent",
+    "ChaosPlan",
+    "CorruptionFault",
+    "CorruptionFaultDomain",
     "EngineConfig",
     "Engine",
+    "IntegrityConfig",
+    "IntegrityReport",
     "PageRankService",
     "PageRankSession",
     "ReadResult",

@@ -73,10 +73,12 @@ class EngineConfig:
                     frontier-sized gather with full fallback).
     fault_domain:   optional :class:`repro.core.fault_domain.FaultDomain`:
                     ``ThreadFaultDomain`` (equivalent to ``faults=``, the
-                    paper's pseudo-thread model) or ``ShardFaultDomain``
+                    paper's pseudo-thread model), ``ShardFaultDomain``
                     (sharded topologies; deterministic shard-crash
-                    injection).  Validated against the resolved engine's
-                    declared domains.
+                    injection), or ``CorruptionFaultDomain`` (streaming
+                    sessions; deterministic silent-corruption injection).
+                    Validated against the resolved engine's declared
+                    domains.
     durability:     ``"none"`` or ``"wal"`` (process fault domain): under
                     ``"wal"`` the session requires a ``store_dir`` and
                     durably logs every update batch *before* applying it,
@@ -84,6 +86,12 @@ class EngineConfig:
                     ``checkpoint_interval`` batches.
     checkpoint_interval: batches between atomic rank checkpoints of a
                     durable session (bounds WAL replay length).
+    integrity:      optional :class:`repro.core.integrity.IntegrityConfig`
+                    (or a kwargs dict — the form the durable-store meta
+                    round-trips): enables the corruption fault domain's
+                    detection machinery — fused invariant checks on every
+                    drive, checksum scrubbing via ``session.verify()`` /
+                    the service scrubber, and the automatic repair ladder.
     """
 
     alpha: float = 0.85
@@ -105,6 +113,7 @@ class EngineConfig:
     fault_domain: Optional[Any] = None
     durability: str = "none"
     checkpoint_interval: int = 16
+    integrity: Optional[Any] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -176,12 +185,19 @@ class EngineConfig:
         if int(self.checkpoint_interval) <= 0:
             raise ValueError(f"checkpoint_interval={self.checkpoint_interval}"
                              " must be > 0")
+        if self.integrity is not None:
+            from repro.core.integrity import IntegrityConfig
+            # accept the kwargs-dict form (the shape SessionStore meta
+            # round-trips through restore()) by coercing in place
+            object.__setattr__(self, "integrity",
+                               IntegrityConfig.coerce(self.integrity))
         if self.fault_domain is not None:
             from repro.core.fault_domain import FaultDomain
             if not isinstance(self.fault_domain, FaultDomain):
                 raise ValueError(
                     "fault_domain must be a repro.core.fault_domain."
-                    "FaultDomain (ThreadFaultDomain / ShardFaultDomain), "
+                    "FaultDomain (ThreadFaultDomain / ShardFaultDomain / "
+                    "CorruptionFaultDomain), "
                     f"got {type(self.fault_domain).__name__}")
             if self.faults is not None:
                 raise ValueError(
@@ -308,15 +324,26 @@ class ServingConfig:
                        snapshot (refreshed after every dispatch) instead
                        of the live session, so reads never wait on
                        updates; every read reports its staleness.
-    staleness_budget_s: reads older than this force a snapshot refresh
-                       when the slot is idle; a busy slot serves the
-                       snapshot regardless (that is the degraded mode) —
-                       the reported ``staleness_s``/``lag_updates`` are
-                       the observable bound.
+    staleness_budget_s: the staleness bound reads are held to: a read
+                       finding its snapshot older than
+                       ``snapshot_refresh_frac`` of this budget refreshes
+                       it first (fork is non-blocking, so refresh works
+                       even while the slot is mid-dispatch), keeping the
+                       reported ``staleness_s``/``lag_updates`` inside
+                       the budget rather than merely observable.
+    snapshot_refresh_frac: fraction of ``staleness_budget_s`` at which a
+                       read proactively refreshes its snapshot — the
+                       headroom that absorbs the refresh wall time itself
+                       plus read-arrival jitter before the budget expires.
     heartbeat_timeout_s: watchdog threshold: a BUSY slot whose dispatcher
                        heartbeat goes stale past this is declared stuck
                        and failed over (idle slots never trip it).
     watchdog:          enable stuck/dead-slot detection + failover-drain.
+    scrub:             run the background integrity scrubber thread over
+                       slots whose sessions carry an
+                       ``EngineConfig(integrity=…)`` (each slot is paced
+                       by its own ``IntegrityConfig.scrub_interval_s``;
+                       busy slots are skipped, never blocked).
     """
 
     max_queue_depth: int = 64
@@ -327,8 +354,10 @@ class ServingConfig:
     coalesce: bool = True
     degraded_reads: bool = True
     staleness_budget_s: float = 0.5
+    snapshot_refresh_frac: float = 0.5
     heartbeat_timeout_s: float = 30.0
     watchdog: bool = True
+    scrub: bool = True
 
     def __post_init__(self):
         if int(self.max_queue_depth) < 1:
@@ -348,6 +377,11 @@ class ServingConfig:
         if float(self.staleness_budget_s) < 0:
             raise ValueError(f"staleness_budget_s={self.staleness_budget_s}"
                              " must be >= 0")
+        if not (0.0 < float(self.snapshot_refresh_frac) <= 1.0):
+            raise ValueError(
+                f"snapshot_refresh_frac={self.snapshot_refresh_frac} "
+                "outside (0, 1] — it is the fraction of the staleness "
+                "budget at which reads refresh their snapshot")
         if float(self.heartbeat_timeout_s) <= 0:
             raise ValueError(f"heartbeat_timeout_s="
                              f"{self.heartbeat_timeout_s} must be > 0")

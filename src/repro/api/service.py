@@ -53,6 +53,7 @@ import numpy as np
 from repro.api.config import EngineConfig, ServingConfig
 from repro.api.session import PageRankSession, StreamBatchResult
 from repro.core import fault_domain as fd
+from repro.core import integrity as ig
 from repro.core.delta import coalesce_batches, validate_edge_batch
 from repro.core.graph import HostGraph
 
@@ -106,8 +107,11 @@ class UpdateRequest:
 class ReadResult:
     """One degraded-mode read: the values plus their staleness bound.
 
-    ``staleness_s`` is the age of the read snapshot the values came from
-    (0 when served from live state); ``lag_updates`` the number of update
+    ``staleness_s`` is the age of the read snapshot the values came from,
+    counted only while the snapshot diverges from committed state (0 when
+    served from live state OR when the snapshot is at the live batch
+    index — current data is not stale however long ago it was forked);
+    ``lag_updates`` the number of update
     dispatches the live session has completed past the snapshot.  Unpacks
     like the session-level tuple (``values, vertices = svc.top_k(...)``)
     and casts to an array (``np.asarray(result)`` → values)."""
@@ -201,9 +205,19 @@ class PageRankService:
         self._query_walls: List[float] = []
         self._query_staleness: List[float] = []
         self._query_lags: List[int] = []
+        self._snapshot_refreshes = 0    # proactive (budget-driven) refreshes
         if self.serving.degraded_reads:
             for i in range(len(self.sessions)):
                 self._refresh_snapshot(i)
+        # -- integrity scrubber (corruption fault domain) ---------------------
+        # per-slot dispatch locks: held for the update portion of a
+        # dispatch, tried non-blocking by the scrubber so a scrub never
+        # delays serving (a busy slot is simply scrubbed next pass)
+        self._slot_locks: Dict[int, threading.Lock] = {
+            i: threading.Lock() for i in range(len(self.sessions))}
+        self._scrubs_run = 0
+        self._last_scrub: Dict[int, float] = {}
+        self._scrub_thread: Optional[threading.Thread] = None
         # -- background dispatch ----------------------------------------------
         self._running = False
         self._wake: Dict[int, threading.Event] = {
@@ -456,27 +470,32 @@ class PageRankService:
                 req.started_s = start
             last_err: Optional[BaseException] = None
             result = None
-            for attempt in range(sv.max_retries + 1):
-                sess = self.sessions[stream]
-                if sess is None or sess.closed:
-                    last_err = ValueError(
-                        f"stream {stream} session is closed")
-                    break               # permanent: no retry can help
-                try:
-                    result = sess.update(dels, ins)
-                    break
-                except ValueError as e:
-                    if sess.closed:     # slot died mid-dispatch
-                        last_err = e
+            # the slot lock serializes the session-mutating portion of a
+            # dispatch against the integrity scrubber (which only ever
+            # try-acquires, so dispatch never waits on a scrub in progress
+            # for more than one verify pass)
+            with self._slot_locks[stream]:
+                for attempt in range(sv.max_retries + 1):
+                    sess = self.sessions[stream]
+                    if sess is None or sess.closed:
+                        last_err = ValueError(
+                            f"stream {stream} session is closed")
+                        break           # permanent: no retry can help
+                    try:
+                        result = sess.update(dels, ins)
                         break
-                    raise               # rejected batch: caller bug, no retry
-                except Exception as e:  # transient: backoff and retry
-                    last_err = e
-                    result = None
-                    if attempt < sv.max_retries:
-                        with self._lock:
-                            self._retries += 1
-                        time.sleep(sv.retry_backoff_s * (2 ** attempt))
+                    except ValueError as e:
+                        if sess.closed:  # slot died mid-dispatch
+                            last_err = e
+                            break
+                        raise           # rejected batch: caller bug, no retry
+                    except Exception as e:  # transient: backoff and retry
+                        last_err = e
+                        result = None
+                        if attempt < sv.max_retries:
+                            with self._lock:
+                                self._retries += 1
+                            time.sleep(sv.retry_backoff_s * (2 ** attempt))
             for req in reqs:
                 req.attempts = attempt + 1
             if result is None:
@@ -603,6 +622,86 @@ class PageRankService:
             with self._lock:
                 self._recovering.discard(stream)
 
+    # -- integrity scrubber (corruption fault domain, docs/FAULTS.md) --------
+    def _scrub_eligible(self, stream: int) -> Optional[PageRankSession]:
+        sess = self.sessions[stream]
+        if sess is None or sess.closed or sess.config.integrity is None:
+            return None
+        return sess
+
+    def scrub(self, stream: Optional[int] = None, *, deep: bool = True,
+              repair: Optional[bool] = None
+              ) -> Dict[int, "ig.IntegrityReport"]:
+        """One synchronous integrity pass (:meth:`PageRankSession.verify`)
+        over ``stream`` (or every eligible slot) — the deterministic form
+        of the background scrubber, which the chaos harness uses so every
+        detection is attributable to exactly one injection.  Slots whose
+        sessions carry no ``EngineConfig(integrity=…)`` are skipped.
+        Returns the per-slot :class:`~repro.core.integrity.IntegrityReport`
+        map; repairs refresh the slot's read snapshot so repaired state
+        serves immediately."""
+        streams = range(self.slots) if stream is None else [stream]
+        out: Dict[int, ig.IntegrityReport] = {}
+        for i in streams:
+            self._check_stream(i)
+            sess = self._scrub_eligible(i)
+            if sess is None:
+                continue
+            with self._slot_locks[i]:
+                try:
+                    rep = sess.verify(deep=deep, repair=repair)
+                except ValueError:      # closed between check and acquire
+                    continue
+            with self._lock:
+                self._scrubs_run += 1
+                self._last_scrub[i] = time.perf_counter()
+            out[i] = rep
+            if self.serving.degraded_reads and rep.repairs:
+                self._refresh_snapshot(i)
+        return out
+
+    def _scrub_pass(self) -> int:
+        """One background-scrubber sweep: verify each eligible slot whose
+        ``scrub_interval_s`` has elapsed, skipping (never blocking) slots
+        mid-dispatch.  Returns the number of slots scrubbed."""
+        done = 0
+        for i in range(self.slots):
+            sess = self._scrub_eligible(i)
+            if sess is None:
+                continue
+            interval = sess.config.integrity.scrub_interval_s
+            if (time.perf_counter()
+                    - self._last_scrub.get(i, 0.0)) < interval:
+                continue
+            lock = self._slot_locks[i]
+            if not lock.acquire(blocking=False):
+                continue                # busy slot: next pass gets it
+            rep = None
+            try:
+                rep = sess.verify(deep=True)
+            except ValueError:          # closed mid-scrub
+                pass
+            finally:
+                lock.release()
+            if rep is None:
+                continue
+            with self._lock:
+                self._scrubs_run += 1
+                self._last_scrub[i] = time.perf_counter()
+            done += 1
+            if self.serving.degraded_reads and rep.repairs:
+                self._refresh_snapshot(i)
+        return done
+
+    def _scrub_loop(self) -> None:
+        intervals = [s.config.integrity.scrub_interval_s
+                     for s in self.sessions
+                     if s is not None and s.config.integrity is not None]
+        poll = min(0.25, max(0.01, min(intervals, default=0.25) / 4))
+        while self._running:
+            self._scrub_pass()
+            time.sleep(poll)
+
     # -- synchronous dispatch -------------------------------------------------
     def step(self) -> int:
         """One synchronous dispatch pass: every slot with queued work runs
@@ -680,6 +779,13 @@ class PageRankService:
                 target=self._watchdog_loop, name="pagerank-watchdog",
                 daemon=True)
             self._watchdog_thread.start()
+        if self.serving.scrub and any(
+                self._scrub_eligible(i) is not None
+                for i in range(self.slots)):
+            self._scrub_thread = threading.Thread(
+                target=self._scrub_loop, name="pagerank-scrubber",
+                daemon=True)
+            self._scrub_thread.start()
         return self
 
     def stop(self, *, drain: bool = True) -> None:
@@ -697,6 +803,9 @@ class PageRankService:
         if self._watchdog_thread is not None:
             self._watchdog_thread.join(timeout=10)
             self._watchdog_thread = None
+        if self._scrub_thread is not None:
+            self._scrub_thread.join(timeout=10)
+            self._scrub_thread = None
         self._workers.clear()
 
     def __enter__(self) -> "PageRankService":
@@ -723,24 +832,37 @@ class PageRankService:
             else None
         live = self.sessions[stream]
         if snap is not None:
-            # refresh a stale snapshot only when the slot is idle — a busy
-            # slot serves the (bounded-staleness) snapshot, never waits
-            if (t0 - snap.taken_s > self.serving.staleness_budget_s
-                    and not self._heartbeat.is_busy(stream)
+            # refresh proactively at a fraction of the budget so served
+            # staleness stays under budget even under sustained update
+            # load — fork() only rebinds immutable device arrays, so
+            # refreshing while the dispatcher drives is safe and cheap
+            refresh_at = (self.serving.staleness_budget_s
+                          * self.serving.snapshot_refresh_frac)
+            if (t0 - snap.taken_s > refresh_at
                     and live is not None and not live.closed):
                 self._refresh_snapshot(stream)
+                with self._lock:
+                    self._snapshot_refreshes += 1
                 snap = self._snapshots[stream]
             op_start = time.perf_counter()
             values, vertices = op(snap.sess)
             lag = 0
-            if live is not None and not live.closed:
+            if live is not None:
+                # a closed (mid-failover) session's batch index is still
+                # the committed high-water mark for the stream
                 lag = max(0, live._batch_index - snap.batch_index)
-                live._queries += 1  # degraded reads count for the slot too
+                if not live.closed:
+                    live._queries += 1  # degraded reads count for the slot
             # staleness = the age of the served data when the read began
-            # (the read's own wall time is latency, not staleness)
+            # (the read's own wall time is latency, not staleness) — and
+            # only while the snapshot actually DIVERGES from committed
+            # state (lag > 0).  A snapshot at the live batch index IS the
+            # newest committed state no matter how long ago it was taken:
+            # an idle slot, or one mid-failover (nothing commits anywhere
+            # until the respawn replays), serves current data
+            stale = (max(0.0, op_start - snap.taken_s) if lag > 0 else 0.0)
             res = ReadResult(values=values, vertices=vertices,
-                             stream=stream,
-                             staleness_s=max(0.0, op_start - snap.taken_s),
+                             stream=stream, staleness_s=stale,
                              lag_updates=lag, degraded=True)
         else:
             if live is None or live.closed:
@@ -793,6 +915,7 @@ class PageRankService:
                 "p50_ms": round(rep.p50_s * 1e3, 3),
                 "p95_ms": round(rep.p95_s * 1e3, 3),
                 "retraces_post_warmup": rep.retraces_post_warmup,
+                "bucket_retraces_post_warmup": rep.bucket_retraces_post_warmup,
                 "total_sweeps": rep.total_sweeps,
                 "queries_served": rep.queries_served,
                 "batches_converged": rep.batches_converged,
@@ -808,6 +931,8 @@ class PageRankService:
                 row["recoveries"] = rep.recoveries
                 row["recovery_time_s"] = round(rep.recovery_time_s, 6)
                 row["replayed_batches"] = rep.replayed_batches
+            if rep.integrity is not None:
+                row["integrity"] = rep.integrity
             per_session.append(row)
         with self._lock:
             fin = list(self.finished)
@@ -823,7 +948,7 @@ class PageRankService:
         lat = [r.latency_s for r in fin]
         waits = [r.wait_s for r in fin]
         execs = [r.exec_s for r in fin]
-        return {
+        out = {
             "n_sessions": self.slots,
             "serving": {f.name: getattr(self.serving, f.name)
                         for f in dataclasses.fields(self.serving)},
@@ -850,8 +975,23 @@ class PageRankService:
                 "staleness_max_s": (round(max(q_stale), 6)
                                     if q_stale else 0.0),
                 "lag_updates_max": max(q_lags) if q_lags else 0,
+                "snapshot_refreshes": self._snapshot_refreshes,
             },
             "failovers": list(self._failovers),
             "watchdog": watchdog,
             "sessions": per_session,
         }
+        rows = [r.get("integrity") for r in per_session
+                if r.get("integrity") is not None]
+        if rows or self._scrubs_run:
+            repairs: Counter = Counter()
+            for r in rows:
+                repairs.update(r.get("repairs", {}))
+            out["integrity"] = {
+                "scrubs_run": self._scrubs_run,
+                "checks_run": sum(r["checks_run"] for r in rows),
+                "corruption_detected": sum(r["corruption_detected"]
+                                           for r in rows),
+                "repairs": dict(repairs),
+            }
+        return out

@@ -61,6 +61,7 @@ import dataclasses
 import os
 import time
 import warnings
+import zlib
 from functools import partial
 from typing import List, Optional, Sequence, Tuple, Union
 
@@ -75,6 +76,7 @@ from repro.core import distributed as dist
 from repro.core import fault_domain as fd
 from repro.core import faults as flt
 from repro.core import frontier as fr
+from repro.core import integrity as ig
 from repro.core import pallas_engine as pe
 from repro.core.blocked import SweepStats
 from repro.core.delta import signed_edge_delta, validate_edge_batch
@@ -179,6 +181,12 @@ class StreamBatchResult:
     driver_retraces: int = 0      # cache growth DURING this step (-1 n/a) —
     #                               unlike the global cache size, immune to
     #                               other sessions/forks compiling variants
+    bucket_retraces: int = 0      # cache growth explained by a FIRST visit
+    #                               to a (tile capacity, max_tiles, expand)
+    #                               operand bucket — the expected once-per-
+    #                               bucket compile of the doubling ladder,
+    #                               split out so driver_retraces stays an
+    #                               assertable zero-invariant
 
     @property
     def converged(self) -> bool:
@@ -210,12 +218,16 @@ class SessionReport:
     partitioner: Optional[str] = None
     edge_cut: Optional[float] = None          # realized cross-shard edges
     collective_bytes_per_sweep: Optional[float] = None  # analytic wire model
+    # -- retrace decomposition (stream mode) ---------------------------------
+    bucket_retraces_post_warmup: int = 0      # first-visit bucket compiles
     # -- fault domains / durability (docs/FAULTS.md) -------------------------
     durability: str = "none"
     recoveries: int = 0                       # completed, any domain
     recovery_time_s: float = 0.0              # summed detection→recovered
     replayed_batches: int = 0                 # WAL batches replayed (process)
     recovery_events: List[dict] = dataclasses.field(default_factory=list)
+    # -- corruption domain (core/integrity.py; None = integrity disabled) ----
+    integrity: Optional[dict] = None
 
 
 class PageRankSession:
@@ -276,6 +288,20 @@ class PageRankSession:
                 if isinstance(config.fault_domain, fd.ShardFaultDomain)
                 else fd.ShardFaultDomain())
         self._recoveries: List[fd.RecoveryRecord] = []
+        # -- corruption domain (core/integrity.py) ---------------------------
+        self._corruption_faults: Optional[fd.CorruptionFaultDomain] = None
+        if isinstance(config.fault_domain, fd.CorruptionFaultDomain):
+            config.fault_domain.validate_for(topology=config.topology)
+            # same contract as the shard domain: consume a private clone of
+            # the schedule riding the (shareable) frozen config
+            self._corruption_faults = config.fault_domain.clone()
+        self._integrity_checks = 0      # invariant/digest checks evaluated
+        self._corruption_detected = 0   # verify() passes that found damage
+        self._integrity_alert: Optional[dict] = None  # fused-drive detection
+        self._scatter_fault: Optional[str] = None     # pending torn scatter
+        self._r_verified = None         # last integrity-clean iterate
+        self._hg_digest: Optional[int] = None
+        self._driver_keys: set = set()  # operand buckets already compiled
         self._batch_index = 0       # total update batches applied (WAL key)
         self._replaying = False     # True while restore() replays the WAL
         self.store_dir = store_dir
@@ -386,6 +412,11 @@ class PageRankSession:
         self._rb_in = jnp.asarray(self.inc.aux.rb_in)
         self._rb_out = jnp.asarray(self.inc.aux.rb_out)
         self._bmat = jnp.asarray(self.inc.aux.bmat)
+        # host-truth twin of the out-degree mirror (rb_in/rb_out/bmat have
+        # theirs in inc.aux), maintained in O(batch) — what the integrity
+        # scrubber digests the device mirror against
+        self._out_deg_host = np.asarray(g0.out_deg).copy()
+        self._hg_digest = self._graph_digest()
         if r0 is None:
             r0, _ = pe.run_pallas(
                 g0, initial_ranks(g0, dt), g0.vertex_valid, mode=cfg.mode,
@@ -398,6 +429,7 @@ class PageRankSession:
         if r0.shape[0] < self.n_pad:       # e.g. length-n restore state
             r0 = jnp.zeros((self.n_pad,), dt).at[:r0.shape[0]].set(r0)
         self.R = r0[:self.n_pad]
+        self._r_verified = self.R       # drift baseline for integrity checks
 
     def _init_snapshot(self, g: Optional[GraphSnapshot], r0) -> None:
         cfg = self.config
@@ -496,7 +528,16 @@ class PageRankSession:
     def _drive(self, R0, affected, *, expand: bool
                ) -> Tuple[jnp.ndarray, SweepStats]:
         """Run the fused driver over the device-resident operand mirrors
-        (stream mode; one host sync for the stats vector)."""
+        (stream mode; one host sync for the stats vector).
+
+        With ``EngineConfig(integrity=…)`` the corruption-domain invariant
+        vector (mass error / negativity / finiteness / drift,
+        :func:`repro.core.integrity.invariant_vec`) is concatenated onto
+        the stats vector and fetched in the SAME ``block_until_ready`` —
+        the per-drive checks cost device FLOPs, never an extra host sync.
+        A violated invariant raises no error here (the batch is already
+        applied); it posts ``_integrity_alert`` for :meth:`update` /
+        :meth:`verify` to repair."""
         cfg = self.config
         part, alive, delay, crashed = self._fault_tables
         R, stats_vec = pe._driver(
@@ -508,7 +549,34 @@ class PageRankSession:
             expand=expand, active_policy=cfg.active_policy,
             max_iterations=cfg.max_iterations, interpret=self.interpret,
             backend=self.backend)
+        icfg = cfg.integrity
+        if icfg is not None and icfg.fused and self._r_verified is not None:
+            inv = ig.invariant_vec(R, self._r_verified, self.valid)
+            sv = np.asarray(jax.block_until_ready(       # the single sync
+                jnp.concatenate([stats_vec, inv.astype(stats_vec.dtype)])))
+            stats = pe._stats_from_vec(sv[:-ig.N_INVARIANTS])
+            mass_err, neg, nonfinite, _drift = (
+                float(x) for x in sv[-ig.N_INVARIANTS:])
+            # the drift term is informational here: a drive legitimately
+            # moves ranks arbitrarily far from the pre-batch baseline, so
+            # only verify() (between drives, where drift must be 0) gates
+            # on it.  Mass is gated on converged iterates only — a sweep-
+            # capped iterate's residual legitimately carries ≤ n·tau.
+            self._integrity_checks += 3
+            alert = None
+            if nonfinite > 0:
+                alert = {"check": "rank_finite", "count": int(nonfinite)}
+            elif neg > 0:
+                alert = {"check": "rank_negativity", "count": int(neg)}
+            elif stats.converged and mass_err > icfg.mass_tol:
+                alert = {"check": "rank_mass", "mass_error": mass_err}
+            if alert is None:
+                self._r_verified = R
+            else:
+                self._integrity_alert = alert
+            return R, stats
         sv = np.asarray(jax.block_until_ready(stats_vec))  # the single sync
+        self._r_verified = R
         return R, pe._stats_from_vec(sv)
 
     # -- updates -------------------------------------------------------------
@@ -535,6 +603,13 @@ class PageRankSession:
         # here, is never durably logged, and never replays after a restore
         deletions, insertions = validate_edge_batch(deletions, insertions,
                                                     self.n)
+        # a scheduled silent corruption lands on live state BEFORE the
+        # batch, so this drive's fused invariants (or the next scrub) must
+        # be what detects it — the domain's whole point
+        if self._corruption_faults is not None and not self._replaying:
+            cfault = self._corruption_faults.pop_pending()
+            if cfault is not None:
+                self._apply_corruption(cfault)
         bidx = self._batch_index + 1
         wal_undo = None
         if self.store is not None and not self._replaying:
@@ -579,6 +654,13 @@ class PageRankSession:
         if (self._process_domain is not None and not self._replaying
                 and bidx % self._process_domain.checkpoint_interval == 0):
             self._checkpoint_now()
+        # fused detection → repair ladder, inside the same update call (the
+        # batch itself was applied; only the iterate needs repairing)
+        if self._integrity_alert is not None and not self._replaying:
+            icfg = self.config.integrity
+            if icfg is not None and icfg.auto_repair:
+                self.verify(repair=True, deep=False)
+            # else: leave the alert posted; the next verify() handles it
         return res
 
     def _crossing(self, edges_rel: np.ndarray) -> int:
@@ -698,6 +780,340 @@ class PageRankSession:
         self._shard_faults.inject(shard, at_sweep=at_sweep,
                                   permanent=permanent)
 
+    # -- corruption fault domain (core/integrity.py, docs/FAULTS.md) ---------
+    def _graph_digest(self) -> int:
+        """CRC32 of the host edge set — the host-truth identity the deep
+        scrub's ``graph_digest`` check compares against."""
+        return zlib.crc32(
+            np.ascontiguousarray(self.hg.edges).tobytes()) & 0xFFFFFFFF
+
+    def _integrity_cfg(self) -> ig.IntegrityConfig:
+        icfg = self.config.integrity
+        return icfg if icfg is not None else ig.IntegrityConfig()
+
+    def _integrity_check(self, icfg: ig.IntegrityConfig, *, deep: bool
+                         ) -> Tuple[List[dict], int, float, float]:
+        """One detection pass, NO repair: ``(failures, checks_run,
+        mass_error, drift)``.  Rank invariants always run; stream mode adds
+        the mirror digests, the tile-pool sum check and the slot-table
+        structural check; ``deep`` adds the host-graph digest."""
+        failures: List[dict] = []
+        checks = 0
+        ref = self._r_verified if self._r_verified is not None else self.R
+        inv = np.asarray(ig.invariant_vec(self.R, ref, self.valid))
+        mass_err, neg, nonfinite, drift = (float(x) for x in inv)
+        checks += 4
+        if nonfinite > 0:
+            failures.append({"check": "rank_finite",
+                             "count": int(nonfinite)})
+        if neg > 0:
+            failures.append({"check": "rank_negativity", "count": int(neg)})
+        # a sweep-capped iterate legitimately carries residual mass ≤ n·tau,
+        # so the mass gate applies to converged iterates only
+        converged = (not self._history
+                     or bool(self._history[-1].stats.converged))
+        if converged and mass_err > icfg.mass_tol:
+            failures.append({"check": "rank_mass", "mass_error": mass_err})
+        # between drives the ranks are bit-identical to the last verified
+        # iterate (queries never write), so ANY drift is corruption
+        if drift > icfg.drift_tol:
+            failures.append({"check": "rank_drift", "drift": drift})
+        if self._stream:
+            aux = self.inc.aux
+            mirrors = (("out_deg", self._out_deg, self._out_deg_host),
+                       ("rb_in", self._rb_in, aux.rb_in),
+                       ("rb_out", self._rb_out, aux.rb_out),
+                       ("bmat", self._bmat, aux.bmat))
+            for name, dev, host in mirrors:
+                checks += 1
+                bad = ig.compare_digests(
+                    dev, host, chunk_bytes=icfg.scrub_chunk_bytes)
+                if bad:
+                    failures.append({"check": "mirror_digest",
+                                     "mirror": name, "chunks": bad[:8]})
+            # aggregate tile-pool checksum: every stored pull-matrix entry
+            # is 1.0 (one per in-edge incl. self-loop), so the live tiles
+            # of row-block i must sum to exactly rb_in[i]; 0.25 tolerates
+            # nothing but float noise on integer counts
+            checks += 1
+            sums = ig.tile_row_sums(self.inc.mat)
+            bad_rb = np.nonzero(np.abs(sums - aux.rb_in) > 0.25)[0]
+            if len(bad_rb):
+                failures.append({"check": "tile_sums",
+                                 "row_blocks": bad_rb[:8].tolist()})
+            checks += 1
+            failures.extend(ig.check_slot_tables(
+                np.asarray(self.inc.mat.tile_cols),
+                np.asarray(self.inc.mat.tile_idx),
+                aux.bmat, int(self.inc.mat.tiles.shape[0])))
+            if deep and self._hg_digest is not None:
+                checks += 1
+                if self._graph_digest() != self._hg_digest:
+                    failures.append({"check": "graph_digest"})
+        return failures, checks, mass_err, drift
+
+    def verify(self, *, repair: Optional[bool] = None,
+               deep: bool = True) -> ig.IntegrityReport:
+        """Run the corruption-domain integrity checks on the live state
+        and (by default, per ``IntegrityConfig.auto_repair``) climb the
+        repair ladder on any failure.
+
+        Checks: the rank invariants (mass conservation, non-negativity,
+        finiteness, exact inter-drive drift vs the last verified iterate),
+        and in stream mode the chunked digests of the operand mirrors
+        against their host-truth twins, the tile-pool sum check and the
+        slot-table structural check; ``deep=True`` adds the host-graph
+        digest.  The ladder (``"frontier"`` → ``"rebuild"`` →
+        ``"restore"``) re-marks corrupted rows into the DF frontier and
+        helps them to convergence, rebuilds the device operands from host
+        truth, or restores from the durable checkpoint+WAL store — each
+        rung re-verifies and escalates on failure, emitting a
+        ``RecoveryRecord(domain="corruption")`` visible in
+        :meth:`report`.  This is also what the
+        :class:`~repro.api.PageRankService` background scrubber calls on
+        idle slots."""
+        self._ensure_open()
+        t0 = time.perf_counter()
+        icfg = self._integrity_cfg()
+        if repair is None:
+            repair = icfg.auto_repair
+        alert, self._integrity_alert = self._integrity_alert, None
+        failures, checks, mass_err, drift = self._integrity_check(
+            icfg, deep=deep)
+        self._integrity_checks += checks
+        if alert is not None and not any(f["check"] == alert["check"]
+                                         for f in failures):
+            # the fused drive flagged it even if the state has since moved
+            failures = [dict(alert, fused=True)] + failures
+        repairs: List[str] = []
+        ok = not failures
+        if failures:
+            self._corruption_detected += 1
+            if repair:
+                ok, repairs, mass_err, drift = self._repair_corruption(
+                    failures, icfg, deep=deep)
+        if ok:
+            self._r_verified = self.R
+            # a repair rung's own drive may have re-posted a fused alert
+            # against the pre-repair baseline; the clean re-check above
+            # supersedes it
+            self._integrity_alert = None
+        return ig.IntegrityReport(
+            ok=ok, checks_run=checks, failures=failures, repairs=repairs,
+            mass_error=mass_err, drift=drift,
+            wall_time_s=time.perf_counter() - t0)
+
+    def _repair_corruption(self, failures: List[dict],
+                           icfg: ig.IntegrityConfig, *, deep: bool
+                           ) -> Tuple[bool, List[str], float, float]:
+        """Climb the repair ladder from the cheapest rung the failure set
+        allows, re-verifying after each rung and escalating while damage
+        remains.  Returns ``(ok, rungs_applied, mass_error, drift)``."""
+        checks = {f["check"] for f in failures}
+        if "graph_digest" in checks:
+            start = "restore"       # the host truth itself is damaged
+        elif checks & {"mirror_digest", "tile_sums", "slot_tables"}:
+            start = "rebuild"
+        else:
+            start = "frontier"
+        detected = failures[0]["check"]
+        repairs: List[str] = []
+        mass_err = drift = float("nan")
+        for rung in ig.REPAIR_RUNGS[ig.REPAIR_RUNGS.index(start):]:
+            t0 = time.perf_counter()
+            applied = self._apply_repair_rung(rung, icfg)
+            if applied is None:     # rung unavailable (e.g. no store)
+                continue
+            desc, reconverged = applied
+            left, checks_run, mass_err, drift = self._integrity_check(
+                icfg, deep=deep or rung == "restore")
+            self._integrity_checks += checks_run
+            self._recoveries.append(fd.RecoveryRecord(
+                domain="corruption", batch_index=self._batch_index,
+                wall_time_s=time.perf_counter() - t0, rung=rung,
+                check=detected, description=desc))
+            repairs.append(rung)
+            # a sweep-capped repair drive is NOT a repair even when the
+            # checks pass (the mass gate is suspended on capped iterates):
+            # escalate until a rung actually reconverges
+            if not left and reconverged:
+                return True, repairs, mass_err, drift
+        return False, repairs, mass_err, drift
+
+    def _apply_repair_rung(self, rung: str, icfg: ig.IntegrityConfig
+                           ) -> Optional[Tuple[str, bool]]:
+        """Execute one ladder rung; returns ``(description, reconverged)``
+        or ``None`` when the rung does not apply to this session (skipped,
+        not failed)."""
+        if rung == "frontier":
+            # the paper's helping mechanism aimed at corruption instead of
+            # crashes: corrupted rows are reset to the last verified
+            # iterate, re-marked affected, and the DF expansion propagates
+            # any correction outward
+            ref = (self._r_verified if self._r_verified is not None else
+                   jnp.where(self.valid, 1.0 / self.n,
+                             0.0).astype(self._dtype))
+            bad = self.valid & (~jnp.isfinite(self.R) | (self.R < 0)
+                                | (jnp.abs(self.R - ref) > icfg.drift_tol))
+            n_bad = int(jnp.sum(bad))
+            if n_bad:
+                R0, affected = jnp.where(bad, ref, self.R), bad
+            else:
+                # aggregate-only symptom (mass off, nothing localizable):
+                # fall back to the verified iterate wholesale
+                R0 = jnp.where(self.valid, ref, jnp.zeros_like(ref))
+                affected = self.valid
+            if self._stream:
+                R, st = self._drive(R0, affected, expand=True)
+                self.R, reconverged = R, bool(st.converged)
+            else:
+                self._converge(R0, affected, expand=True)
+                reconverged = True
+            return (f"{n_bad} corrupted rank(s) re-marked into the DF "
+                    "frontier and helped back to convergence", reconverged)
+        if rung == "rebuild":
+            if not self._stream:
+                return None         # nothing mirrored to rebuild
+            g = self.hg.snapshot(block_size=self.block_size)
+            self.inc = IncrementalPullMatrix.from_snapshot(
+                g, dtype=np.dtype(self._dtype), padded=True)
+            self._out_deg = jnp.asarray(g.out_deg)
+            self._out_deg_host = np.asarray(g.out_deg).copy()
+            self._rb_in = jnp.asarray(self.inc.aux.rb_in)
+            self._rb_out = jnp.asarray(self.inc.aux.rb_out)
+            self._bmat = jnp.asarray(self.inc.aux.bmat)
+            self._scatter_fault = None
+            # a rebuilt pool restarts the capacity ladder at its own
+            # bucket; compiles it causes are recovery cost, not retraces
+            cap = int(self.inc.mat.tiles.shape[0])
+            mt = int(self.inc.mat.tile_cols.shape[1])
+            self._driver_keys.update({(cap, mt, False), (cap, mt, True)})
+            # cold uniform restart, NOT a warm start: both the current
+            # iterate and the drift baseline may have converged (or sweep-
+            # capped) against the torn operands, and a structured-garbage
+            # warm start can need more sweeps than the cap — the cold
+            # start's sweep count depends only on alpha/tau.  expand=True
+            # so frontier expansion sweeps corrections through chunks that
+            # look locally converged.
+            R0 = jnp.where(self.valid, 1.0 / self.n, 0.0).astype(self._dtype)
+            R, st = self._drive(R0, self.valid, expand=True)
+            self.R = R
+            return ("operand mirrors + tile pool rebuilt from host truth; "
+                    "full re-converge from the verified iterate",
+                    bool(st.converged))
+        if rung == "restore":
+            if self.store is None:
+                return None         # no durable store to fall back to
+            svc, history = self._service, self._history
+            warm, queries = self._warm_idx, self._queries
+            recov = self._recoveries
+            counters = (self._integrity_checks, self._corruption_detected)
+            keys, store_dir = self._driver_keys, self.store.dir
+            fresh = type(self).restore(store_dir, interpret=self.interpret)
+            replayed = sum(r.replayed_batches for r in fresh._recoveries)
+            # adopt the restored state in place, keeping this session's
+            # identity (service registration, history, counters)
+            self.__dict__.update(fresh.__dict__)
+            self._service = svc
+            self._history = history
+            self._warm_idx = warm
+            self._queries = queries
+            self._recoveries = recov + fresh._recoveries
+            self._integrity_checks, self._corruption_detected = counters
+            self._driver_keys = keys | fresh._driver_keys
+            return (f"checkpoint+WAL restore from {store_dir!r} "
+                    f"({replayed} batch(es) replayed)", True)
+        raise ValueError(f"unknown repair rung {rung!r}")
+
+    def inject_corruption(self, kind: Union[str, "fd.CorruptionFault"], *,
+                          index: Optional[int] = None, seed: int = 0,
+                          defer: bool = False) -> "fd.CorruptionFault":
+        """Silently corrupt live session state (chaos harness / tests —
+        see ``fd.CORRUPTION_KINDS``).  Nothing is raised and nothing is
+        recorded: detection is the integrity subsystem's job (the fused
+        per-drive invariants, a scrub, or an explicit :meth:`verify`).
+        ``defer=True`` queues the fault on the session's corruption domain
+        instead, to be consumed by the NEXT :meth:`update` right before
+        the batch applies."""
+        self._ensure_open()
+        if isinstance(kind, fd.CorruptionFault):
+            fault = kind
+        else:
+            fault = fd.CorruptionFault(kind=str(kind), index=index,
+                                       seed=int(seed))
+        if defer:
+            if self._corruption_faults is None:
+                self._corruption_faults = fd.CorruptionFaultDomain()
+            self._corruption_faults.inject(fault.kind, index=fault.index,
+                                           seed=fault.seed)
+        else:
+            self._apply_corruption(fault)
+        return fault
+
+    def _apply_corruption(self, fault: "fd.CorruptionFault") -> None:
+        kind = fault.kind
+        rng = np.random.default_rng(fault.seed)
+        if kind in ("scatter_drop", "scatter_dup"):
+            # consumed by the next _update_stream: the device operand
+            # scatter is dropped / double-applied while the host twins
+            # record the truth — a torn scatter
+            self._scatter_fault = kind
+            return
+        if kind == "rank":
+            i = (int(fault.index) if fault.index is not None
+                 else int(rng.integers(self.n)))
+            bit = ig.exponent_bit(self._dtype, rng)
+            val = np.asarray(self.R[i], self._dtype)
+            self.R = self.R.at[i].set(ig.flipped_float(val, bit))
+            return
+        if not self._stream:
+            raise ValueError(
+                f"corruption kind {kind!r} instruments stream-mode state "
+                "(tile pool / slot tables / operand mirrors); only 'rank' "
+                "and the scatter kinds apply elsewhere")
+        if kind == "graph":
+            keys = self.hg._keys      # hg.edges is DERIVED from the key set
+            if len(keys) == 0:
+                raise ValueError("graph corruption needs at least one edge")
+            i = (int(fault.index) if fault.index is not None
+                 else int(rng.integers(len(keys))))
+            keys[i] ^= 1              # in-place host-truth bit flip (dst±1)
+            return
+        if kind == "mirror":
+            rb = (int(fault.index) if fault.index is not None
+                  else int(rng.integers(self._rb_in.shape[0])))
+            self._rb_in = self._rb_in.at[rb].add(
+                jnp.asarray(3, self._rb_in.dtype))
+            return
+        mat = self.inc.mat
+        tc = np.asarray(mat.tile_cols)
+        occ = np.argwhere(tc >= 0)
+        if kind == "slot":
+            r, c = (occ[int(fault.index) % len(occ)]
+                    if fault.index is not None
+                    else occ[int(rng.integers(len(occ)))])
+            n_cb = int(self.inc.aux.bmat.shape[1])
+            self.inc.mat = dataclasses.replace(
+                mat, tile_cols=mat.tile_cols.at[int(r), int(c)].set(
+                    np.int32(n_cb + 5)))
+            return
+        # kind == "tile": flip an exponent bit of a LIVE (1.0) entry so the
+        # perturbation clears the sum check's 0.25 count tolerance
+        tid_tbl = np.asarray(mat.tile_idx).reshape(tc.shape)
+        for oi in rng.permutation(len(occ)):
+            r, c = occ[oi]
+            tid = int(tid_tbl[r, c])
+            t = np.asarray(mat.tiles[tid])
+            nz = np.argwhere(t != 0)
+            if len(nz):
+                bi, bj = (int(x) for x in nz[int(rng.integers(len(nz)))])
+                bit = ig.exponent_bit(t.dtype, rng)
+                new = ig.flipped_float(np.asarray(t[bi, bj], t.dtype), bit)
+                self.inc.mat = dataclasses.replace(
+                    mat, tiles=mat.tiles.at[tid, bi, bj].set(new))
+                return
+        raise ValueError("no live tile entry to corrupt")
+
     def _drive_with_shard_fault(self, R0, affected, *, expand: bool,
                                 fault: "fd.ShardFault"
                                 ) -> Tuple[jnp.ndarray, dist.DistStats]:
@@ -799,24 +1215,39 @@ class PageRankSession:
                             np.asarray(insertions, np.int64).reshape(-1, 2))
         self._r_prev = self.R
         self.hg = self.hg.apply_batch(deletions, insertions)
+        if self.config.integrity is not None:
+            # the host-truth digest tracks every legitimate rebinding of
+            # the host graph; anything mutating hg.edges WITHOUT passing
+            # here is what the deep scrub's graph_digest check catches
+            self._hg_digest = self._graph_digest()
 
         # patch the device-resident operand mirrors in O(batch): only the
         # bucketed signed delta crosses host→device, never the graph-sized
         # vectors
         rows, cols, vals = signed_edge_delta(dels_eff, ins_eff)
+        scatter_fault, self._scatter_fault = self._scatter_fault, None
         if len(rows):
             b_pad = ops.capacity_bucket(len(rows), ops.DELTA_BATCH_BUCKET)
             z = np.zeros(b_pad - len(rows), np.int32)
-            self._out_deg, self._rb_in, self._rb_out, self._bmat = \
-                _apply_operand_delta(
-                    self._out_deg, self._rb_in, self._rb_out, self._bmat,
-                    jnp.asarray(np.concatenate(
-                        [rows.astype(np.int32), z])),
-                    jnp.asarray(np.concatenate(
-                        [cols.astype(np.int32), z])),
-                    jnp.asarray(np.concatenate(
-                        [vals.astype(np.int32), z])),
-                    block=self.block_size)
+            dev_args = (jnp.asarray(np.concatenate(
+                            [rows.astype(np.int32), z])),
+                        jnp.asarray(np.concatenate(
+                            [cols.astype(np.int32), z])),
+                        jnp.asarray(np.concatenate(
+                            [vals.astype(np.int32), z])))
+            # a pending torn-scatter corruption (scatter_drop/scatter_dup)
+            # silently skips or double-applies the DEVICE patch only — the
+            # host twins below stay truth, which is exactly how the scrub's
+            # mirror digests detect the tear
+            reps = {"scatter_drop": 0, "scatter_dup": 2}.get(scatter_fault, 1)
+            for _ in range(reps):
+                self._out_deg, self._rb_in, self._rb_out, self._bmat = \
+                    _apply_operand_delta(
+                        self._out_deg, self._rb_in, self._rb_out,
+                        self._bmat, *dev_args, block=self.block_size)
+            self._out_deg_host = self._out_deg_host + np.bincount(
+                cols, weights=vals, minlength=self.n_pad
+            ).astype(self._out_deg_host.dtype)
 
         batch_dev = fr.pack_batch(self.n_pad, deletions, insertions)
         if variant == "df":
@@ -836,17 +1267,30 @@ class PageRankSession:
             R0 = jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype)
             expand = False
 
+        # first visit to an operand bucket (tile capacity × slot width ×
+        # expand flag) legitimately compiles once — the doubling ladder's
+        # documented cost.  Record the visit BEFORE driving so the growth
+        # observed below can be attributed to it.
+        dkey = (int(mat_new.tiles.shape[0]),
+                int(mat_new.tile_cols.shape[1]), bool(expand))
+        new_bucket = dkey not in self._driver_keys
+        self._driver_keys.add(dkey)
+
         R, stats = self._drive(R0, affected, expand=expand)
         self.R = R
         raw = (np.asarray(deletions).reshape(-1, 2).shape[0]
                + np.asarray(insertions).reshape(-1, 2).shape[0])
         cache1 = _driver_cache_size()
+        retraces = (cache1 - cache0
+                    if cache0 >= 0 and cache1 >= 0 else -1)
+        bucket = 0
+        if retraces > 0 and new_bucket:
+            bucket, retraces = retraces, 0
         return StreamBatchResult(
             ranks=R, stats=stats,
             wall_time_s=time.perf_counter() - t0, batch_edges=raw,
             driver_cache_size=cache1,
-            driver_retraces=(cache1 - cache0
-                             if cache0 >= 0 and cache1 >= 0 else -1))
+            driver_retraces=retraces, bucket_retraces=bucket)
 
     def _update_snapshot(self, deletions, insertions, variant: str
                          ) -> StreamBatchResult:
@@ -1080,7 +1524,8 @@ class PageRankSession:
             svc._detach(self)
         for attr in ("R", "inc", "runtime", "g", "valid", "_out_deg",
                      "_rb_in", "_rb_out", "_bmat", "_fault_tables",
-                     "_r_prev", "store", "_process_domain"):
+                     "_r_prev", "store", "_process_domain",
+                     "_r_verified", "_out_deg_host", "_corruption_faults"):
             if hasattr(self, attr):
                 setattr(self, attr, None)
 
@@ -1104,6 +1549,8 @@ class PageRankSession:
             v = getattr(self.config, f.name)
             if f.name == "dtype" and v is not None:
                 v = str(jnp.dtype(v))
+            if f.name == "integrity" and v is not None:
+                v = v.to_dict()     # coerced back by EngineConfig
             cfgd[f.name] = v
         return {"format": 1, "kind": "pagerank-session",
                 "n": int(self.hg.n), "config": cfgd}
@@ -1231,12 +1678,30 @@ class PageRankSession:
         sharing one process don't count each other's compiles."""
         walls = [r.wall_time_s for r in self._history]
         growth = [r.driver_retraces for r in self._history]
+        buckets = 0
         if (self.engine_name not in ("pallas", "distributed") or not growth
                 or any(gr < 0 for gr in growth)):
             retraces = -1
         else:
             start = self._warm_idx if self._warm_idx is not None else 1
             retraces = sum(growth[start:])
+            buckets = sum(r.bucket_retraces
+                          for r in self._history[start:])
+        icfg = self.config.integrity
+        integrity = None
+        if (icfg is not None or self._integrity_checks
+                or self._corruption_detected):
+            by_rung = {r: 0 for r in ig.REPAIR_RUNGS}
+            for rec in self._recoveries:
+                if rec.domain == "corruption" and rec.rung in by_rung:
+                    by_rung[rec.rung] += 1
+            integrity = {
+                "checks_run": int(self._integrity_checks),
+                "corruption_detected": int(self._corruption_detected),
+                "repairs": by_rung,
+                "scrub_interval_s": (float(icfg.scrub_interval_s)
+                                     if icfg is not None else None),
+            }
         spec = self._shard_spec
         wire = None
         if spec is not None:
@@ -1270,12 +1735,14 @@ class PageRankSession:
             edge_cut=(self._cut_edges / max(self.hg.m, 1)
                       if spec is not None else None),
             collective_bytes_per_sweep=wire,
+            bucket_retraces_post_warmup=buckets,
             durability=self.config.durability,
             recoveries=len(self._recoveries),
             recovery_time_s=sum(r.wall_time_s for r in self._recoveries),
             replayed_batches=sum(r.replayed_batches
                                  for r in self._recoveries),
-            recovery_events=[r.to_dict() for r in self._recoveries])
+            recovery_events=[r.to_dict() for r in self._recoveries],
+            integrity=integrity)
 
     # -- what-if branching ---------------------------------------------------
     def fork(self) -> "PageRankSession":
@@ -1301,6 +1768,17 @@ class PageRankSession:
         new._replaying = False
         if self._shard_faults is not None:
             new._shard_faults = fd.ShardFaultDomain()
+        # integrity state: checks/detections are per-session counters; the
+        # bucket set and host twins are mutable and must not be shared
+        new._integrity_checks = 0
+        new._corruption_detected = 0
+        new._integrity_alert = None
+        new._scatter_fault = None
+        new._driver_keys = set(self._driver_keys)
+        if self._corruption_faults is not None:
+            new._corruption_faults = fd.CorruptionFaultDomain()
+        if getattr(self, "_out_deg_host", None) is not None:
+            new._out_deg_host = self._out_deg_host.copy()
         if self.inc is not None:
             aux = self.inc.aux
             new.inc = IncrementalPullMatrix(

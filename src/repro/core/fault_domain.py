@@ -1,10 +1,10 @@
-"""Unified fault domains: thread, shard, and process faults behind one
-recovery abstraction (docs/FAULTS.md).
+"""Unified fault domains: thread, shard, process, session, and
+corruption faults behind one recovery abstraction (docs/FAULTS.md).
 
 The paper's claim is that DF_LF "withstands random thread delays and
 crashes"; the non-blocking PageRank line of work argues fault tolerance
 must be a property of the *whole pipeline*.  This module is the one place
-the repo models faults, at three blast radii:
+the repo models faults, at five blast radii:
 
 * **thread** — the paper's own §5.3/§5.4 model: pseudo-threads inside one
   sweep delay or crash-stop; surviving capacity re-covers their blocks on
@@ -38,6 +38,18 @@ the repo models faults, at three blast radii:
   injection schedule (kill or stall a slot after K dispatches) the
   chaos-under-load tests use.
 
+* **corruption** — *silent* damage to live state: a flipped bit in the
+  rank vector / tile pool / slot tables / operand mirrors, a torn or
+  duplicated operand scatter, or corrupted host bookkeeping.  Unlike the
+  four domains above, nothing announces the failure — detection is the
+  integrity subsystem (`core/integrity.py`: fused invariant checks on
+  every drive plus checksum scrubbing), and recovery is a three-rung
+  ladder (frontier re-mark via the paper's helping path → rebuild from
+  host slot tables → checkpoint+WAL restore).  :class:`CorruptionFault`
+  / :class:`CorruptionFaultDomain` are the deterministic injection
+  schedule the chaos harness (`core/chaos.py`) composes with the other
+  domains.
+
 Every recovery, in any domain, appends a :class:`RecoveryRecord` that
 ``session.report()`` / ``service.report()`` surface, so recovery time and
 replayed work are observable wherever the fault happened.
@@ -50,7 +62,7 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.faults import NO_FAULTS, FaultPlan  # noqa: F401 (re-export)
 
-DOMAINS = ("thread", "shard", "process", "session")
+DOMAINS = ("thread", "shard", "process", "session", "corruption")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +83,9 @@ class RecoveryRecord:
     stream: Optional[int] = None   # service slot index the fault hit
     kind: Optional[str] = None     # "dead" | "stuck"
     drained_requests: int = 0      # queued batches re-routed to the respawn
+    # -- corruption domain ----------------------------------------------------
+    rung: Optional[str] = None     # "frontier" | "rebuild" | "restore"
+    check: Optional[str] = None    # the integrity check that detected it
 
     def to_dict(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
@@ -217,6 +232,78 @@ class SessionFault:
                              "'dead' or 'stuck'")
         if self.kind == "stuck" and self.stall_s <= 0:
             raise ValueError("kind='stuck' needs stall_s > 0")
+
+
+#: Injectable silent-corruption kinds (see ``session.inject_corruption``):
+#: ``rank``  — exponent-range bit flip in one live rank value
+#: ``tile``  — bit flip in one live tile of the pull-matrix pool
+#: ``slot``  — bit flip in the slot tables (a tile_cols column id)
+#: ``mirror``— perturb one operand mirror (rb_in) on device
+#: ``scatter_drop`` / ``scatter_dup`` — the NEXT update's operand-mirror
+#:             scatter is silently dropped / applied twice (torn scatter)
+#: ``graph`` — corrupt the host graph's edge list (host truth itself),
+#:             so only the durable store can repair
+CORRUPTION_KINDS = ("rank", "tile", "slot", "mirror",
+                    "scatter_drop", "scatter_dup", "graph")
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptionFault:
+    """One scheduled silent corruption.  ``seed`` deterministically picks
+    the injection site (vertex, tile, bit); ``index`` pins it explicitly
+    instead when not None."""
+    kind: str
+    index: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in CORRUPTION_KINDS:
+            raise ValueError(f"kind={self.kind!r} invalid; expected one "
+                             f"of {list(CORRUPTION_KINDS)}")
+
+
+class CorruptionFaultDomain(FaultDomain):
+    """Deterministic silent-corruption injection for streaming sessions.
+    Faults queue FIFO; each ``update`` consumes at most one and applies
+    it to live state *before* driving, so the drive's fused invariant
+    checks (or the next scrub) must detect it.  The session performs the
+    repair (the integrity ladder, `core/integrity.py`) and logs a
+    :class:`RecoveryRecord(domain="corruption")`."""
+
+    name = "corruption"
+
+    def __init__(self, faults: Optional[List[CorruptionFault]] = None):
+        self._pending: List[CorruptionFault] = list(faults or [])
+
+    def inject(self, kind: str, *, index: Optional[int] = None,
+               seed: int = 0) -> CorruptionFault:
+        f = CorruptionFault(kind=str(kind), index=index, seed=int(seed))
+        self._pending.append(f)
+        return f
+
+    def pop_pending(self) -> Optional[CorruptionFault]:
+        return self._pending.pop(0) if self._pending else None
+
+    def clone(self) -> "CorruptionFaultDomain":
+        """Independent copy of the schedule (same contract as
+        :meth:`ShardFaultDomain.clone`: the domain rides on a frozen
+        shareable config, so each session consumes its own clone)."""
+        return CorruptionFaultDomain(list(self._pending))
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_faults(self) -> List[CorruptionFault]:
+        return list(self._pending)
+
+    def validate_for(self, *, topology: str) -> None:
+        if topology != "single":
+            raise ValueError(
+                "CorruptionFaultDomain instruments the single-device "
+                "streaming path (device mirrors + tile pool); sharded "
+                "sessions take ShardFaultDomain")
 
 
 class SlotHeartbeat:

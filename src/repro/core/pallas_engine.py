@@ -319,7 +319,7 @@ class PallasEngine:
     picks the tile-SpMV backend."""
 
     name = "pallas"
-    fault_domains = ("thread", "process")
+    fault_domains = ("thread", "process", "corruption")
 
     def run(self, g, R0, affected0, *, mode, expand, alpha, tau, tau_f,
             max_iterations, faults, tile, active_policy,

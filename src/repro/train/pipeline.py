@@ -252,12 +252,17 @@ def build_pipeline_loss(cfg: TransformerConfig, pcfg: PipelineConfig,
         tick_fn = jax.checkpoint(
             tick, policy=jax.checkpoint_policies.nothing_saveable) \
             if cfg.remat else tick
-        x0 = jnp.zeros((mb, S_loc, cfg.d_model), dt)
+        # the carry inits must sit on the param (unknown) side of the
+        # autodiff partial-eval split: shard_map's transpose rule (jax
+        # 0.4.x) zips cotangents against in_names positionally, and
+        # known-side residuals that receive linear cotangents (a scan
+        # carry init does) shift that pairing and break grad() with a
+        # _SpecError; 0 * finite-param keeps the values exactly zero
+        zf = 0.0 * emb.ravel()[0].astype(jnp.float32)
+        x0 = jnp.zeros((mb, S_loc, cfg.d_model), dt) + zf.astype(dt)
         n_ticks = n_mb + n_stages - 1
         (x_sh, nll, cnt), _ = lax.scan(
-            tick_fn, (x0, jnp.zeros((), jnp.float32),
-                      jnp.zeros((), jnp.float32)),
-            jnp.arange(n_ticks))
+            tick_fn, (x0, zf, zf), jnp.arange(n_ticks))
         axes = (st_ax, tp_ax) + ((dp_ax,) if dp_ax else ())
         nll = lax.psum(nll, axes)
         cnt = lax.psum(cnt, axes)

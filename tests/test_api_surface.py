@@ -22,6 +22,12 @@ from repro.graphs.generators import rmat
 
 EXPECTED_API = {
     "AdmissionRejected",
+    "ChaosEvent",
+    "ChaosPlan",
+    "CorruptionFault",
+    "CorruptionFaultDomain",
+    "IntegrityConfig",
+    "IntegrityReport",
     "EngineConfig",
     "Engine",
     "PageRankService",
@@ -46,7 +52,7 @@ EXPECTED_CONFIG_FIELDS = {
     "alpha", "tau", "tau_f", "mode", "engine", "backend", "tile",
     "block_size", "active_policy", "max_iterations", "faults", "dtype",
     "topology", "n_shards", "partitioner", "exchange",
-    "fault_domain", "durability", "checkpoint_interval",
+    "fault_domain", "durability", "checkpoint_interval", "integrity",
 }
 
 EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas", "distributed"}
@@ -72,8 +78,8 @@ def test_builtin_engines_registered():
 def test_session_core_methods_exist():
     for m in ("from_graph", "from_snapshot", "update", "recompute",
               "query", "top_k", "report", "fork", "warmup", "close",
-              "save", "restore", "inject_shard_fault",
-              "__enter__", "__exit__"):
+              "save", "restore", "inject_shard_fault", "verify",
+              "inject_corruption", "__enter__", "__exit__"):
         assert callable(getattr(PageRankSession, m)), m
 
 

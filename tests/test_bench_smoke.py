@@ -68,6 +68,9 @@ def test_smoke_report():
     assert q["served"] > 0              # queries ran alongside the drain
     assert q["p50_ms"] > 0 and q["p95_ms"] >= q["p50_ms"]
     assert q["staleness_max_s"] >= 0.0
+    # the staleness budget is a bound, not a suggestion: proactive snapshot
+    # refresh (ServingConfig.snapshot_refresh_frac) must keep p95 inside it
+    assert q["staleness_p95_s"] <= service["serving"]["staleness_budget_s"], q
     # the serve_load scenario (PR-6 overload acceptance): bounded queues
     # shed at 2x overload instead of growing, continuous dispatch keeps
     # queue wait below per-batch compute, degraded reads stay
@@ -83,10 +86,28 @@ def test_smoke_report():
     lq = load["queries"]
     assert lq["served"] >= 100                  # concurrent read load
     assert lq["staleness_max_s"] < 30.0         # bounded, not unbounded
+    assert lq["staleness_p95_s"] <= load["serving"]["staleness_budget_s"], lq
     events = load["watchdog"]                   # the mid-load slot kill
     assert any(e["kind"] == "dead" and e["domain"] == "session"
                for e in events)
     assert load["linf_vs_reference_max"] < 1e-8
+    # the zero-retrace invariant stays assertable under load: legitimate
+    # operand-bucket growth is counted separately (bucket_retraces)
+    for row in load["sessions"]:
+        if not row.get("closed"):
+            assert row["retraces_post_warmup"] == 0, row
+    # the chaos scenario (PR-7 acceptance): every seeded silent corruption
+    # must be detected by the scrub, repaired clean at some ladder rung
+    # (all three rungs exercised across the plan), and the surviving state
+    # must match the accepted-batch oracle
+    chaos = report["chaos"]
+    assert chaos["corruption_injected"] > 0
+    assert chaos["corruption_detected"] == chaos["corruption_injected"]
+    assert chaos["repaired_clean"] == chaos["corruption_injected"]
+    for rung in ("frontier", "rebuild", "restore"):
+        assert chaos["repairs_by_rung"].get(rung, 0) >= 1, chaos
+    assert chaos["final_scrub_ok"]
+    assert chaos["linf_vs_reference_max"] <= 1e-9
     # the sharded scenario (topology="sharded" session on an 8-host-device
     # mesh, one run per partitioner): every partitioner must stay
     # parity-clean with zero post-warmup retraces, and the edge-cut /

@@ -11,7 +11,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import frontier as fr
 from repro.core import pagerank as pr
 from repro.core import properties as prop
-from repro.core.delta import random_batch
+from repro.core.delta import (coalesce_batches, random_batch,
+                              validate_edge_batch)
 from repro.core.faults import FaultPlan
 from repro.core.graph import HostGraph
 
@@ -137,6 +138,89 @@ def test_df_matches_reference(gb, mode, policy):
     ref = pr.reference_pagerank(g2, iterations=250)
     assert res.stats.converged
     assert prop.ranks_match_reference(res.ranks, ref, tol=1e-9)
+
+
+# -- batch coalescing: one folded batch ≡ the sequential stream -----------------
+
+@st.composite
+def batch_stream(draw):
+    """An n-vertex graph seed plus an ordered run of update batches.
+
+    Batches deliberately contain duplicate keys within a side, edges
+    deleted in one batch and reinserted in a later one, and deletions of
+    edges that never existed — everything set-semantics application must
+    absorb and coalescing must net out."""
+    n = draw(st.integers(8, 64))
+    n_batches = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+
+    def pairs(k):
+        if k == 0:
+            return np.zeros((0, 2), np.int64)
+        src = rng.integers(0, n, k)
+        # never a self-loop (src+1..src+n-1 mod n excludes src)
+        dst = (src + 1 + rng.integers(0, n - 1, k)) % n
+        return np.stack([src, dst], 1).astype(np.int64)
+
+    batches = [(pairs(int(rng.integers(0, 7))), pairs(int(rng.integers(0, 7))))
+               for _ in range(n_batches)]
+    return n, seed, batches
+
+
+@SET
+@given(batch_stream())
+def test_coalesce_equals_sequential(nb):
+    """Applying the coalesced batch once must land on exactly the edge set
+    the sequential stream produces, and the folded batch must be valid by
+    construction (no duplicates, no del/ins overlap)."""
+    n, seed, batches = nb
+    hg = _graph(n, 2 * n, seed)
+    seq = hg
+    for d, i in batches:
+        seq = seq.apply_batch(d, i)
+    dels, ins = coalesce_batches(batches, n)
+    validate_edge_batch(dels, ins, n)
+    one = hg.apply_batch(dels, ins)
+    assert np.array_equal(seq.edges, one.edges)
+
+
+@SET
+@given(st.integers(8, 48), st.integers(0, 2 ** 16))
+def test_coalesce_delete_then_reinsert(n, seed):
+    rng = np.random.default_rng(seed)
+    hg = _graph(n, 3 * n, seed)
+    if hg.m == 0:
+        return
+    edge = hg.edges[rng.integers(hg.m)][None, :]
+    z = np.zeros((0, 2), np.int64)
+    # delete then reinsert nets to an insertion: the edge survives
+    dels, ins = coalesce_batches([(edge, z), (z, edge)], n)
+    assert len(dels) == 0 and np.array_equal(ins, edge)
+    assert hg.apply_batch(dels, ins).has_edges(edge).all()
+    # insert then delete nets to a deletion: the edge is gone
+    dels, ins = coalesce_batches([(z, edge), (edge, z)], n)
+    assert len(ins) == 0 and np.array_equal(dels, edge)
+    assert not hg.apply_batch(dels, ins).has_edges(edge).any()
+
+
+@SET
+@given(st.integers(8, 48), st.lists(st.booleans(), min_size=1, max_size=6),
+       st.integers(0, 2 ** 16))
+def test_coalesce_duplicate_key_last_write_wins(n, ops, seed):
+    """The same edge touched across many batches collapses to its final
+    operation regardless of the op ordering."""
+    rng = np.random.default_rng(seed)
+    src = int(rng.integers(0, n))
+    dst = int((src + 1 + rng.integers(0, n - 1)) % n)
+    edge = np.array([[src, dst]], np.int64)
+    z = np.zeros((0, 2), np.int64)
+    batches = [(z, edge) if is_ins else (edge, z) for is_ins in ops]
+    dels, ins = coalesce_batches(batches, n)
+    if ops[-1]:
+        assert len(dels) == 0 and np.array_equal(ins, edge)
+    else:
+        assert len(ins) == 0 and np.array_equal(dels, edge)
 
 
 # -- HostGraph functional semantics ---------------------------------------------
