@@ -56,6 +56,17 @@ RECOVERY_LOG2_N = 10            # graph size for the kill+restore scenario
 RECOVERY_KILL_AFTER = 4         # durable batches applied before SIGKILL
 RECOVERY_AFTER = 2              # batches served post-restore
 
+PPR_N = 512                     # vertices in the walk-engine scenario
+PPR_AVG_DEG = 6                 # powerlaw generator target degree
+PPR_R_CURVE = (4, 16, 64)       # walks/vertex sweep (accuracy vs R)
+PPR_L = 64                      # walk-length cap
+PPR_SEED_SETS = 8               # seed sets averaged into each L1 point
+PPR_SEEDS_PER_SET = 3           # |S| per personalized query
+PPR_BATCHES = 6                 # delta batches for the localization record
+PPR_BATCH_EDGES = 8             # edges per delta batch
+PPR_USERS = 1000                # simulated personalized-query users
+PPR_TOP_K = 10                  # ranking depth per user query
+
 
 def _smoke_service() -> dict:
     """Multi-session serving scenario: N concurrent dynamic streams behind
@@ -567,6 +578,97 @@ def _smoke_stream() -> dict:
     return out
 
 
+def _smoke_ppr() -> dict:
+    """Walk-engine personalized-PageRank scenario (the sweep-free engine's
+    acceptance record).  Three measurements on one seeded power-law graph:
+
+    * **accuracy vs R** — mean L1 error of the walk PPR estimate against
+      the exact dense personalized oracle (``pr.ppr_numpy_reference``)
+      over ``PPR_SEED_SETS`` seed sets, one point per R in
+      ``PPR_R_CURVE`` (must shrink as R grows; gated at the largest R);
+    * **per-delta localization** — regenerated-walk counts per update
+      batch on a walk session (regenerated ≤ touched-walk mass < total
+      walks, and 0 post-warmup retraces on the walk-buffer ladder);
+    * **per-user serving** — ``PPR_USERS`` simulated users issuing
+      seed-set top-k reads through a ``PageRankService`` (degraded-mode
+      snapshot reads), recorded as query p50/p95.
+    """
+    import numpy as np
+    from repro.api import EngineConfig, PageRankService, PageRankSession
+    from repro.core import pagerank as pr
+    from repro.core.delta import random_batch
+    from repro.core.walk_engine import WalkState
+    from repro.graphs.generators import powerlaw
+
+    hg = powerlaw(PPR_N, PPR_AVG_DEG, seed=17)
+    g = hg.snapshot(block_size=64)
+    rng = np.random.default_rng(23)
+    seed_sets = [rng.choice(PPR_N, PPR_SEEDS_PER_SET, replace=False)
+                 for _ in range(PPR_SEED_SETS)]
+    oracles = {tuple(s.tolist()): pr.ppr_numpy_reference(
+        g, s, iterations=300) for s in seed_sets}
+
+    out = {"graph": {"n": hg.n, "m": hg.m}, "walk_length": PPR_L,
+           "seed_sets": PPR_SEED_SETS, "seeds_per_set": PPR_SEEDS_PER_SET,
+           "l1_vs_R": {}}
+    for R in PPR_R_CURVE:
+        ws = WalkState(hg, R=R, L=PPR_L, seed=5)
+        errs = []
+        for s in seed_sets:
+            est = np.asarray(ws.ppr(s))
+            ref = oracles[tuple(s.tolist())][:hg.n]
+            errs.append(float(np.abs(est - ref).sum()))
+        out["l1_vs_R"][str(R)] = round(float(np.mean(errs)), 4)
+
+    # -- per-delta localization on a live walk session -----------------------
+    mid_r = PPR_R_CURVE[len(PPR_R_CURVE) // 2]
+    cfg = EngineConfig(engine="walk", walks_per_vertex=mid_r,
+                       walk_length=PPR_L, walk_seed=5)
+    sess = PageRankSession.from_graph(hg, config=cfg)
+    sess.warmup()
+    cur = hg
+    batches = []
+    for j in range(PPR_BATCHES):
+        dels, ins = random_batch(cur, PPR_BATCH_EDGES / cur.m, seed=900 + j)
+        res = sess.update(dels, ins)
+        cur = cur.apply_batch(dels, ins)
+        batches.append({"regenerated_walks": res.regenerated_walks,
+                        "touched_walks": res.touched_walks,
+                        "total_walks": res.total_walks,
+                        "wall_ms": round(res.wall_time_s * 1e3, 3)})
+    rep = sess.report()
+    out["localization"] = {
+        "R": mid_r, "batches": batches,
+        "retraces_post_warmup": rep.retraces_post_warmup,
+        "bucket_retraces_post_warmup": rep.bucket_retraces_post_warmup,
+    }
+    sess.close()
+
+    # -- 1k simulated users through the serving surface ----------------------
+    svc = PageRankService([hg, hg], config=cfg)
+    walls = []
+    urng = np.random.default_rng(41)
+    # one warm call per stream: the top-k query kernel legitimately
+    # compiles once per (|S|, k) shape — users all share that shape
+    for s in range(2):
+        svc.ppr_query(s, urng.choice(PPR_N, PPR_SEEDS_PER_SET,
+                                     replace=False), PPR_TOP_K)
+    for u in range(PPR_USERS):
+        seeds = urng.choice(PPR_N, PPR_SEEDS_PER_SET, replace=False)
+        t0 = time.perf_counter()
+        r = svc.ppr_query(u % 2, seeds, PPR_TOP_K)
+        walls.append(time.perf_counter() - t0)
+        assert len(r.values) == PPR_TOP_K
+    out["serving"] = {
+        "users": PPR_USERS, "top_k": PPR_TOP_K,
+        "query_p50_ms": round(float(np.percentile(walls, 50)) * 1e3, 3),
+        "query_p95_ms": round(float(np.percentile(walls, 95)) * 1e3, 3),
+        "degraded_reads": True,
+    }
+    svc.stop()
+    return out
+
+
 def smoke(out: str = SMOKE_OUT) -> dict:
     """Tiny per-engine perf snapshot: one DF_LF dynamic update per engine,
     plus the streaming scenario (K delta batches, per-batch latency), the
@@ -649,6 +751,7 @@ def smoke(out: str = SMOKE_OUT) -> dict:
     report["chaos"] = _smoke_chaos()
     report["sharded"] = _smoke_sharded()
     report["recovery"] = _smoke_recovery()
+    report["ppr"] = _smoke_ppr()
 
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

@@ -15,7 +15,7 @@ The public surface below is snapshot-tested (``tests/test_api_surface.py``)
 """
 from repro.api.config import EngineConfig, ServingConfig
 from repro.api import registry
-from repro.api.registry import Engine, register
+from repro.api.registry import CapabilityError, Engine, register
 from repro.api.session import (PageRankSession, SessionReport,
                                StreamBatchResult, SweepCapWarning)
 from repro.api.service import (AdmissionRejected, PageRankService,
@@ -30,6 +30,7 @@ from repro.core.integrity import IntegrityConfig, IntegrityReport
 
 __all__ = [
     "AdmissionRejected",
+    "CapabilityError",
     "ChaosEvent",
     "ChaosPlan",
     "CorruptionFault",

@@ -92,6 +92,19 @@ class EngineConfig:
                     detection machinery — fused invariant checks on every
                     drive, checksum scrubbing via ``session.verify()`` /
                     the service scrubber, and the automatic repair ladder.
+    walks_per_vertex: walk-engine ``R`` — Monte Carlo walk segments per
+                    vertex (``None`` → 16).  Estimation error shrinks as
+                    ``1/sqrt(R)``; update work grows linearly in it.
+                    Rejected (:class:`repro.api.registry.CapabilityError`)
+                    when the resolved engine does not declare the
+                    ``"ppr"`` capability.
+    walk_length:    walk-engine ``L`` — hard cap on a walk segment's
+                    length, ≥ 2 (``None`` → 48; truncation bias is
+                    O(alpha^L)).  Same capability gate.
+    walk_seed:      base PRNG seed of the walk store; every walk's draws
+                    are a pure function of (seed, walk id), which is what
+                    makes delta-localized regeneration bit-exact
+                    (``None`` → 0).  Same capability gate.
     """
 
     alpha: float = 0.85
@@ -114,6 +127,9 @@ class EngineConfig:
     durability: str = "none"
     checkpoint_interval: int = 16
     integrity: Optional[Any] = None
+    walks_per_vertex: Optional[int] = None
+    walk_length: Optional[int] = None
+    walk_seed: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -205,6 +221,18 @@ class EngineConfig:
                     "faults=plan is shorthand for "
                     "fault_domain=ThreadFaultDomain(plan)")
             self.fault_domain.validate_for(topology=self.topology)
+        # -- walk-engine / personalization axis -------------------------------
+        for name, lo in (("walks_per_vertex", 1), ("walk_length", 2),
+                         ("walk_seed", 0)):
+            v = getattr(self, name)
+            if v is None:
+                continue
+            if isinstance(v, bool) or not isinstance(v, int):
+                raise ValueError(
+                    f"{name} must be an integer (or None), got "
+                    f"{type(v).__name__} ({v!r})")
+            if v < lo:
+                raise ValueError(f"{name}={v} must be >= {lo}")
         # resolve engine + tile backend now: this validates explicit values
         # AND the REPRO_ENGINE / REPRO_TILE_BACKEND env overrides eagerly —
         # a bad value fails at construction, not mid-run
@@ -218,6 +246,22 @@ class EngineConfig:
                 f"engine {eng.name!r} does not host the "
                 f"{self.fault_domain.name!r} fault domain (declares "
                 f"{registry.fault_domains_of(eng)}) — see docs/FAULTS.md")
+        # capability gate: personalization fields only reach engines that
+        # declare "ppr"; everything else rejects them at construction
+        registry.reject_personalization(
+            eng, {name: getattr(self, name)
+                  for name in ("walks_per_vertex", "walk_length",
+                               "walk_seed")})
+        if "ppr" in registry.supports_of(eng):
+            if self.faults is not None:
+                raise ValueError(
+                    f"engine {eng.name!r} is sweep-free and hosts no "
+                    "thread fault domain; faults must be None")
+            if self.integrity is not None:
+                raise ValueError(
+                    "integrity checks instrument the stream-mode "
+                    f"pull-matrix state; engine {eng.name!r} does not "
+                    "host them (integrity must be None)")
 
     def _engine_for_resolution(self) -> Optional[str]:
         """Topology-aware engine name: sharded configs always resolve the
@@ -264,6 +308,28 @@ class EngineConfig:
             return jnp.dtype(self.dtype)
         return jnp.dtype(jnp.float64 if jax.config.jax_enable_x64
                          else jnp.float32)
+
+    @property
+    def resolved_walks_per_vertex(self) -> int:
+        """Walk-engine ``R`` after default resolution."""
+        from repro.core import walk_engine
+        return int(self.walks_per_vertex
+                   if self.walks_per_vertex is not None
+                   else walk_engine.DEFAULT_WALKS_PER_VERTEX)
+
+    @property
+    def resolved_walk_length(self) -> int:
+        """Walk-engine ``L`` after default resolution."""
+        from repro.core import walk_engine
+        return int(self.walk_length if self.walk_length is not None
+                   else walk_engine.DEFAULT_WALK_LENGTH)
+
+    @property
+    def resolved_walk_seed(self) -> int:
+        """Walk-store base seed after default resolution."""
+        from repro.core import walk_engine
+        return int(self.walk_seed if self.walk_seed is not None
+                   else walk_engine.DEFAULT_WALK_SEED)
 
     # -- strict construction -------------------------------------------------
     @classmethod

@@ -48,11 +48,18 @@ class Engine(Protocol):
         ...
 
 
+class CapabilityError(ValueError):
+    """An engine was configured with a capability it does not declare
+    (e.g. personalization fields on an engine without ``"ppr"`` in its
+    ``supports`` set).  Raised at config construction, never mid-query."""
+
+
 _REGISTRY: Dict[str, Engine] = {}
 _BUILTINS = ("repro.core.pagerank",        # dense
              "repro.core.blocked",         # blocked
              "repro.core.pallas_engine",   # pallas
-             "repro.core.distributed")     # distributed (sharded)
+             "repro.core.distributed",     # distributed (sharded)
+             "repro.core.walk_engine")     # walk (Monte Carlo PPR)
 _builtins_loaded = False
 
 
@@ -138,6 +145,31 @@ def fault_domains_of(engine: Engine) -> Tuple[str, ...]:
     class attribute; adapters predating the attribute default to
     thread+process (the single-device model)."""
     return tuple(getattr(engine, "fault_domains", ("thread", "process")))
+
+
+def supports_of(engine: Engine) -> frozenset:
+    """Optional capabilities an engine declares beyond the core
+    snapshot-level solve (a ``supports`` class attribute; adapters
+    predating it declare nothing).  Currently the only capability is
+    ``"ppr"`` — seed-set-personalized queries, declared by the walk
+    engine."""
+    return frozenset(getattr(engine, "supports", ()))
+
+
+def reject_personalization(engine: Engine, fields: dict) -> None:
+    """Shared config-time guard: engines without the ``"ppr"`` capability
+    reject the walk/personalization fields (``fields`` maps field name →
+    configured value; ``None`` = unset)."""
+    if "ppr" in supports_of(engine):
+        return
+    set_fields = sorted(k for k, v in fields.items() if v is not None)
+    if set_fields:
+        raise CapabilityError(
+            f"{set_fields} are personalization fields consumed only by "
+            f"engines declaring the 'ppr' capability; engine "
+            f"{engine.name!r} declares supports="
+            f"{sorted(supports_of(engine))} — use "
+            "EngineConfig(engine='walk') for personalized queries")
 
 
 def reject_tile_operands(engine_name: str, mat, aux,

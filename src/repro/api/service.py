@@ -889,6 +889,15 @@ class PageRankService:
         degraded-mode with the staleness bound reported on the result."""
         return self._read(stream, lambda s: tuple(s.top_k(k)))
 
+    def ppr_query(self, stream: int, seeds, k: int) -> ReadResult:
+        """(values, vertex ids) of the k highest **personalized** PageRank
+        estimates for the caller's seed set — the per-user ranking read.
+        Served degraded-mode exactly like :meth:`top_k` (snapshot forks
+        share the immutable walk buffers, so a degraded read costs one
+        gather).  Streams whose engine lacks the ``"ppr"`` capability
+        raise :class:`repro.api.CapabilityError`."""
+        return self._read(stream, lambda s: tuple(s.ppr_query(seeds, k)))
+
     # -- reporting -----------------------------------------------------------
     @staticmethod
     def _pct(vals, q) -> float:

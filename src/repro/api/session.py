@@ -41,6 +41,13 @@ Three operating modes, picked at construction:
   (``report`` additionally exposes ``edge_cut`` and the per-sweep
   collective-bytes model).
 
+* **walk mode** (``EngineConfig(engine="walk")``): the sweep-free Monte
+  Carlo engine (:mod:`repro.core.walk_engine`) — R walk segments per
+  vertex in device-resident capacity-padded buffers, regenerated
+  delta-locally per ``update`` (only walks through touched vertices) and
+  serving global estimates **plus** :meth:`ppr_query` (seed-set
+  personalized top-k), the capability no sweep engine declares.
+
 Faults in any domain (docs/FAULTS.md) recover behind the same surface:
 thread-domain plans ride on ``EngineConfig(faults=…)``/``fault_domain=``,
 sharded sessions survive shard crashes via helping + elastic re-partition
@@ -85,6 +92,7 @@ from repro.core.graph import (GraphSnapshot, HostGraph, initial_ranks,
 from repro.core.incremental import (IncrementalPullMatrix, MatrixAux,
                                     effective_batch)
 from repro.core.pagerank import PagerankResult
+from repro.core import walk_engine as we
 from repro.graphs import partition as gpart
 from repro.kernels.block_spmv import ops
 
@@ -187,6 +195,10 @@ class StreamBatchResult:
     #                               bucket compile of the doubling ladder,
     #                               split out so driver_retraces stays an
     #                               assertable zero-invariant
+    # -- walk-mode localization accounting (None on sweep engines) ----------
+    regenerated_walks: Optional[int] = None   # walks rebuilt this batch
+    touched_walks: Optional[int] = None       # touched-walk mass (bound)
+    total_walks: Optional[int] = None         # n * R (the "global" yardstick)
 
     @property
     def converged(self) -> bool:
@@ -263,6 +275,7 @@ class PageRankSession:
                         if self.engine_name == "pallas" else config.backend)
         self._stream = (self.engine_name == "pallas" and hg is not None
                         and g is None)
+        self._walk = "ppr" in registry.supports_of(self.engine)
         self._closed = False
         self._service = None          # backref set by PageRankService
         self._shard_spec: Optional[dist.ShardSpec] = None
@@ -331,6 +344,8 @@ class PageRankSession:
 
         if self._sharded:
             self._init_sharded(g, r0)
+        elif self._walk:
+            self._init_walk(g, r0)
         elif self._stream:
             self._init_stream(r0)
         else:
@@ -500,6 +515,35 @@ class PageRankSession:
             r_rel[:self.n] = r0h[order]
             self.R = jnp.asarray(r_rel, self._dtype)
 
+    def _init_walk(self, g: Optional[GraphSnapshot], r0) -> None:
+        """Walk mode (``engine="walk"``): no sweeps, no pull operands — the
+        session owns a :class:`repro.core.walk_engine.WalkState` (R walk
+        segments per vertex, device-resident) and every rank read derives
+        from its visit counters.  ``r0`` is accepted for constructor parity
+        (and WAL restore) but ignored: regeneration is deterministic in
+        (graph, seed), so replaying the WAL reproduces the counters exactly
+        — there is no separate rank state to seed."""
+        cfg = self.config
+        if self.hg is None:
+            # from_snapshot without hg: recover the host edge set (walks run
+            # over the host-graph adjacency; the snapshot's implicit
+            # self-loops are re-added by the walk kernel's sampling)
+            src, dst = g.in_edges_host()
+            keep = src != dst
+            self.hg = HostGraph(g.n, np.stack([src[keep], dst[keep]], 1))
+        self.g = None
+        self.inc = None
+        self.n = self.n_pad = self.hg.n
+        self.block_size, self.n_rb = cfg.block_size, 0
+        self.valid = jnp.ones((self.n,), bool)
+        self.walks = we.WalkState(
+            self.hg, R=cfg.resolved_walks_per_vertex,
+            L=cfg.resolved_walk_length, seed=cfg.resolved_walk_seed,
+            alpha=cfg.alpha, dtype=self._dtype)
+        self._hg_digest = self._graph_digest()
+        self.R = self.walks.pagerank()
+        self._r_verified = self.R
+
     # -- the snapshot-level solve (registry-dispatched) ----------------------
     def _converge(self, R0, affected0, *, expand: bool,
                   mode: Optional[str] = None, mat=None, aux=None,
@@ -630,6 +674,8 @@ class PageRankSession:
                                           np.int64).reshape(-1, 2))
             if self._sharded:
                 res = self._update_sharded(deletions, insertions, variant)
+            elif self._walk:
+                res = self._update_walk(deletions, insertions, variant)
             elif self._stream:
                 res = self._update_stream(deletions, insertions, variant)
             else:
@@ -1292,6 +1338,45 @@ class PageRankSession:
             driver_cache_size=cache1,
             driver_retraces=retraces, bucket_retraces=bucket)
 
+    def _update_walk(self, deletions, insertions, variant: str = "df"
+                     ) -> StreamBatchResult:
+        """Walk-mode step: patch the adjacency slabs and regenerate ONLY
+        the walk segments passing through touched vertices (O(batch ·
+        walks-per-touched-vertex), never O(n·R)).  The ``variant`` is
+        accepted for surface parity but does not change the marking — walk
+        invalidation IS the frontier."""
+        t0 = time.perf_counter()
+        cache0 = we.cache_size()
+        dels_eff, ins_eff = effective_batch(self.hg, deletions, insertions)
+        self._hg_prev, self._g_prev = self.hg, None
+        self._last_batch = (np.asarray(deletions, np.int64).reshape(-1, 2),
+                            np.asarray(insertions, np.int64).reshape(-1, 2))
+        self._r_prev = self.R
+        self.hg = self.hg.apply_batch(deletions, insertions)
+        wstats = self.walks.apply_batch(dels_eff, ins_eff)
+        self.R = self.walks.pagerank()
+        self._r_verified = self.R
+        raw = (np.asarray(deletions).reshape(-1, 2).shape[0]
+               + np.asarray(insertions).reshape(-1, 2).shape[0])
+        cache1 = we.cache_size()
+        retraces = (cache1 - cache0
+                    if cache0 >= 0 and cache1 >= 0 else -1)
+        bucket = 0
+        if retraces > 0 and wstats.new_bucket:
+            bucket, retraces = retraces, 0
+        stats = SweepStats(
+            sweeps=1, iterations=1, blocks_processed=0,
+            edges_processed=wstats.steps, sim_time_ms=0.0,
+            converged=True, dnf=False)
+        return StreamBatchResult(
+            ranks=self.R, stats=stats,
+            wall_time_s=time.perf_counter() - t0, batch_edges=raw,
+            driver_cache_size=cache1,
+            driver_retraces=retraces, bucket_retraces=bucket,
+            regenerated_walks=wstats.regenerated_walks,
+            touched_walks=wstats.touched_walk_mass,
+            total_walks=wstats.total_walks)
+
     def _update_snapshot(self, deletions, insertions, variant: str
                          ) -> StreamBatchResult:
         """Snapshot-mode step: rebuild the snapshot (O(m) host work — the
@@ -1357,6 +1442,8 @@ class PageRankSession:
     def _recompute(self, variant: str) -> PagerankResult:
         if self._sharded:
             return self._recompute_sharded(variant)
+        if self._walk:
+            return self._recompute_walk(variant)
         if variant in ("static", "nd"):
             R0 = (self.R if variant == "nd" else
                   jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype))
@@ -1421,6 +1508,32 @@ class PageRankSession:
         return PagerankResult(ranks=R, stats=stats,
                               wall_time_s=time.perf_counter() - t0)
 
+    def _recompute_walk(self, variant: str) -> PagerankResult:
+        """Walk-mode re-solve: regenerate EVERY walk segment from the
+        current graph (``static``/``nd`` — both cold-start here, there is
+        no warm iterate to reuse).  The marking replays (``dt``/``df``)
+        have no walk analogue: walk invalidation is already the frontier,
+        so they raise rather than silently aliasing ``static``."""
+        if variant not in ("static", "nd"):
+            raise ValueError(
+                f"recompute({variant!r}) replays a sweep-engine affected "
+                "marking, which the walk engine does not have — walk "
+                "sessions regenerate globally via variant='static'/'nd' "
+                "(per-delta localization happens inside update())")
+        t0 = time.perf_counter()
+        cfg = self.config
+        self.walks = we.WalkState(
+            self.hg, R=cfg.resolved_walks_per_vertex,
+            L=cfg.resolved_walk_length, seed=cfg.resolved_walk_seed,
+            alpha=cfg.alpha, dtype=self._dtype)
+        self.R = self.walks.pagerank()
+        self._r_verified = self.R
+        stats = SweepStats(sweeps=1, iterations=1,
+                           edges_processed=int(self.walks.total_steps),
+                           converged=True)
+        return PagerankResult(ranks=self.R, stats=stats,
+                              wall_time_s=time.perf_counter() - t0)
+
     # -- serving reads (device-resident, no full-rank host transfer) ---------
     def _vertex_ids(self, vertices) -> np.ndarray:
         """Validate a vertex-id argument (Python int, sequence, or numpy
@@ -1474,6 +1587,34 @@ class PageRankSession:
             idx = self._order[idx]          # back to caller vertex ids
         return np.asarray(vals), idx
 
+    def ppr_query(self, seeds, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(values, vertex ids) of the k highest **personalized** PageRank
+        estimates for a uniform restart over ``seeds`` — the per-user read
+        the walk engine exists for.  O(read): one device gather over the
+        seeds' walk segments plus a top-k; no regeneration, no sweep.
+        Engines without the ``"ppr"`` capability raise
+        :class:`repro.api.CapabilityError`."""
+        self._ensure_open()
+        if not self._walk:
+            raise registry.CapabilityError(
+                f"ppr_query needs an engine declaring the 'ppr' capability; "
+                f"engine {self.engine_name!r} declares supports="
+                f"{sorted(registry.supports_of(self.engine))} — open the "
+                "session with EngineConfig(engine='walk')")
+        seeds = self._vertex_ids(seeds)
+        if seeds.size == 0:
+            raise ValueError("ppr_query needs at least one seed vertex "
+                             "(got an empty seed set)")
+        if not isinstance(k, (int, np.integer)):
+            raise ValueError(
+                f"k must be an integer, got {type(k).__name__} ({k!r})")
+        if k < 1:
+            raise ValueError(f"k={k} must be >= 1")
+        k = int(min(k, self.n))
+        vals, idx = self.walks.ppr_top_k(seeds, k)
+        self._queries += k
+        return np.asarray(vals), np.asarray(idx)
+
     @property
     def ranks(self) -> np.ndarray:
         """Full host copy of the rank vector in caller vertex order (the
@@ -1524,7 +1665,7 @@ class PageRankSession:
             svc._detach(self)
         for attr in ("R", "inc", "runtime", "g", "valid", "_out_deg",
                      "_rb_in", "_rb_out", "_bmat", "_fault_tables",
-                     "_r_prev", "store", "_process_domain",
+                     "_r_prev", "store", "_process_domain", "walks",
                      "_r_verified", "_out_deg_host", "_corruption_faults"):
             if hasattr(self, attr):
                 setattr(self, attr, None)
@@ -1656,6 +1797,10 @@ class PageRankSession:
             self.runtime.warmup(self.R)
             self._warm_idx = len(self._history)
             return
+        if self._walk:
+            self.walks.warmup()
+            self._warm_idx = len(self._history)
+            return
         if self._stream:
             z = np.zeros(1, np.int64)
             self.inc.mat = ops.apply_delta(self.inc.mat, z, z, np.zeros(1))
@@ -1679,8 +1824,8 @@ class PageRankSession:
         walls = [r.wall_time_s for r in self._history]
         growth = [r.driver_retraces for r in self._history]
         buckets = 0
-        if (self.engine_name not in ("pallas", "distributed") or not growth
-                or any(gr < 0 for gr in growth)):
+        if (self.engine_name not in ("pallas", "distributed", "walk")
+                or not growth or any(gr < 0 for gr in growth)):
             retraces = -1
         else:
             start = self._warm_idx if self._warm_idx is not None else 1
@@ -1788,4 +1933,6 @@ class PageRankSession:
                 if aux is not None else None)
         if self._sharded:
             new.runtime = self.runtime.fork()
+        if self._walk:
+            new.walks = self.walks.fork()
         return new

@@ -228,13 +228,22 @@ def contributions(g: GraphSnapshot, ranks: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([c, jnp.zeros((1,), dtype=ranks.dtype)])
 
 
-def pull_all(g: GraphSnapshot, ranks: jnp.ndarray, *, alpha: float
-             ) -> jnp.ndarray:
-    """Dense pull step over every vertex: one full SpMV via segment_sum."""
+def pull_all(g: GraphSnapshot, ranks: jnp.ndarray, *, alpha: float,
+             personalization: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Dense pull step over every vertex: one full SpMV via segment_sum.
+
+    ``personalization`` (a restart distribution [n_pad], summing to 1 over
+    valid vertices) replaces the uniform ``1/n`` teleport — the step then
+    iterates toward *personalized* PageRank for that restart."""
     c = contributions(g, ranks)
     pulled = jax.ops.segment_sum(c[g.src], g.dst, num_segments=g.n_pad + 1,
                                  indices_are_sorted=True)[:g.n_pad]
-    base = jnp.asarray((1.0 - alpha) / g.n, dtype=ranks.dtype)
+    one_m_a = jnp.asarray(1.0 - alpha, dtype=ranks.dtype)
+    if personalization is None:
+        base = one_m_a / jnp.asarray(g.n, ranks.dtype)
+    else:
+        base = one_m_a * jnp.asarray(personalization,
+                                     ranks.dtype)[:g.n_pad]
     r = base + jnp.asarray(alpha, ranks.dtype) * pulled
     return jnp.where(g.vertex_valid, r, 0)
 

@@ -77,11 +77,18 @@ def default_engine() -> str:
 def dense_jacobi(g: GraphSnapshot, R0, affected0, *, expand: bool,
                  alpha: float = DEFAULT_ALPHA, tau: float = DEFAULT_TAU,
                  tau_f: Optional[float] = None,
-                 max_iterations: int = MAX_ITERATIONS
+                 max_iterations: int = MAX_ITERATIONS,
+                 personalization=None
                  ) -> Tuple[jnp.ndarray, int, bool]:
-    """Barrier-based engine: masked full-SpMV per iteration (Alg. 1/3/5/7)."""
+    """Barrier-based engine: masked full-SpMV per iteration (Alg. 1/3/5/7).
+
+    ``personalization`` (restart distribution [n_pad]) swaps the uniform
+    teleport for a personalized one — the exact-PPR oracle the walk
+    engine's parity gates compare against on small graphs."""
     tau_f = (tau / 1000.0) if (expand and tau_f is None) else (
         tau_f if tau_f is not None else float("inf"))
+    pvec = (None if personalization is None
+            else jnp.asarray(personalization))
 
     def cond(state):
         R, affected, dR, i = state
@@ -89,7 +96,7 @@ def dense_jacobi(g: GraphSnapshot, R0, affected0, *, expand: bool,
 
     def body(state):
         R, affected, _, i = state
-        r_all = pull_all(g, R, alpha=alpha)
+        r_all = pull_all(g, R, alpha=alpha, personalization=pvec)
         r_new = jnp.where(affected, r_all, R)
         dr = jnp.abs(r_new - R)
         if expand:
@@ -240,6 +247,42 @@ def numpy_reference(g: GraphSnapshot, *, alpha: float = DEFAULT_ALPHA,
         pulled = np.bincount(dst, weights=c[src], minlength=n_pad)[:n_pad]
         R_new = (1 - alpha) / n + alpha * pulled
         R_new[n:] = 0
+        R = R_new
+    return R
+
+
+def restart_vector(g: GraphSnapshot, seeds, dtype=np.float64) -> np.ndarray:
+    """Uniform restart distribution [n_pad] over a seed set — the
+    ``personalization`` operand :func:`dense_jacobi` / :func:`pull_all`
+    take, and the distribution the walk engine's seed sampling realizes."""
+    seeds = np.asarray(seeds, np.int64).reshape(-1)
+    if seeds.size == 0:
+        raise ValueError("restart_vector needs at least one seed vertex")
+    if (seeds < 0).any() or (seeds >= g.n).any():
+        raise ValueError(f"seed(s) out of range for a graph with {g.n} "
+                         "vertices")
+    p = np.zeros(g.n_pad, np.dtype(dtype))
+    np.add.at(p, seeds, 1.0 / seeds.size)
+    return p
+
+
+def ppr_numpy_reference(g: GraphSnapshot, seeds, *,
+                        alpha: float = DEFAULT_ALPHA,
+                        iterations: int = 200) -> np.ndarray:
+    """Independent numpy oracle (f64) for personalized PageRank with a
+    uniform restart over ``seeds`` — same pull semantics as
+    :func:`numpy_reference`, personalized teleport."""
+    n_pad = g.n_pad
+    src = np.asarray(g.src)[:g.m]
+    dst = np.asarray(g.dst)[:g.m]
+    deg = np.maximum(np.asarray(g.out_deg), 1).astype(np.float64)
+    p = restart_vector(g, seeds)
+    R = p.copy()
+    for _ in range(iterations):
+        c = R / deg
+        pulled = np.bincount(dst, weights=c[src], minlength=n_pad)[:n_pad]
+        R_new = (1 - alpha) * p + alpha * pulled
+        R_new[g.n:] = 0
         R = R_new
     return R
 

@@ -9,6 +9,8 @@ power-law), road networks (near-planar, degree ~3) and protein k-mer graphs
   * ``erdos_renyi``    — uniform random digraphs
   * ``grid_road``      — 2-D lattice with random diagonals (road class)
   * ``kmer_chains``    — long weakly-linked chains (k-mer class)
+  * ``powerlaw``       — Zipf out-degree digraphs (hub-stress class for the
+                         walk engine's visit distributions)
   * ``temporal_stream``— timestamped edge stream (temporal-network class)
 
 All generators are numpy-based (host substrate) and deterministic per seed.
@@ -86,6 +88,31 @@ def kmer_chains(n: int, chain_len: int = 64, *, seed: int = 0) -> HostGraph:
     return HostGraph(n, _dedupe(n, *np.concatenate([fwd, bwd, cross]).T))
 
 
+def powerlaw(n: int, avg_degree: int = 8, *, seed: int = 0,
+             exponent: float = 2.1) -> HostGraph:
+    """Zipf out-degree digraph: vertex out-degrees follow a truncated
+    power law with the given ``exponent`` (2.1 ≈ web crawls), rescaled to
+    hit ``avg_degree`` on average; destinations are uniform.  Exercises
+    hub-heavy walk-length / visit distributions (a hub's walk set is a
+    large fraction of the store) without R-MAT's correlated in/out skew."""
+    if n < 2:
+        raise ValueError(f"n={n} must be >= 2")
+    if avg_degree < 1:
+        raise ValueError(f"avg_degree={avg_degree} must be >= 1")
+    if exponent <= 1.0:
+        raise ValueError(f"exponent={exponent} must be > 1 (Zipf)")
+    rng = np.random.default_rng(seed)
+    deg = rng.zipf(exponent, size=n).astype(np.int64)
+    np.minimum(deg, n - 1, out=deg)     # cap: simple digraph, no self-loop
+    scale = avg_degree / max(deg.mean(), 1e-12)
+    deg = np.maximum((deg * scale).astype(np.int64), 1)
+    np.minimum(deg, n - 1, out=deg)
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    dst = rng.integers(0, n, size=src.size)
+    keep = src != dst
+    return HostGraph(n, _dedupe(n, src[keep], dst[keep]))
+
+
 def temporal_stream(n: int, m_total: int, *, seed: int = 0,
                     preferential: bool = True
                     ) -> np.ndarray:
@@ -110,4 +137,5 @@ GENERATORS = {
     "erdos_renyi": erdos_renyi,
     "grid_road": grid_road,
     "kmer_chains": kmer_chains,
+    "powerlaw": powerlaw,
 }

@@ -22,6 +22,7 @@ from repro.graphs.generators import rmat
 
 EXPECTED_API = {
     "AdmissionRejected",
+    "CapabilityError",
     "ChaosEvent",
     "ChaosPlan",
     "CorruptionFault",
@@ -53,9 +54,11 @@ EXPECTED_CONFIG_FIELDS = {
     "block_size", "active_policy", "max_iterations", "faults", "dtype",
     "topology", "n_shards", "partitioner", "exchange",
     "fault_domain", "durability", "checkpoint_interval", "integrity",
+    "walks_per_vertex", "walk_length", "walk_seed",
 }
 
-EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas", "distributed"}
+EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas", "distributed",
+                            "walk"}
 
 
 def test_api_all_snapshot():
@@ -77,8 +80,8 @@ def test_builtin_engines_registered():
 
 def test_session_core_methods_exist():
     for m in ("from_graph", "from_snapshot", "update", "recompute",
-              "query", "top_k", "report", "fork", "warmup", "close",
-              "save", "restore", "inject_shard_fault", "verify",
+              "query", "top_k", "ppr_query", "report", "fork", "warmup",
+              "close", "save", "restore", "inject_shard_fault", "verify",
               "inject_corruption", "__enter__", "__exit__"):
         assert callable(getattr(PageRankSession, m)), m
 

@@ -135,3 +135,27 @@ def test_smoke_report():
         assert row["p50_ms"] > 0 and row["p95_ms"] >= row["p50_ms"], \
             (part, row)
         assert row["collective_bytes_per_sweep"] > 0, (part, row)
+    # the ppr scenario (PR-8 acceptance, the sweep-free walk engine):
+    # accuracy must improve monotonically from the smallest to the largest
+    # R and meet a fixed gate at the largest (seeded, so deterministic);
+    # per-delta work must stay localized (regenerated ≤ touched-walk mass,
+    # strictly below the global walk count) with zero post-warmup retraces
+    # on the walk-buffer ladder; and the 1k simulated personalized-ranking
+    # users must all have been served with recorded percentiles
+    ppr = report["ppr"]
+    curve = ppr["l1_vs_R"]
+    rs = sorted(int(r) for r in curve)
+    assert len(rs) >= 3
+    assert curve[str(rs[-1])] < curve[str(rs[0])], curve   # error shrinks
+    assert curve[str(rs[-1])] < 0.6, curve                 # fixed gate @ R=64
+    loc = ppr["localization"]
+    assert loc["retraces_post_warmup"] == 0, loc
+    assert len(loc["batches"]) >= 3
+    for row in loc["batches"]:
+        assert 0 < row["regenerated_walks"] <= row["touched_walks"], row
+        assert row["regenerated_walks"] < row["total_walks"], row
+    serving = ppr["serving"]
+    assert serving["users"] >= 1000
+    assert serving["degraded_reads"]
+    assert serving["query_p50_ms"] > 0
+    assert serving["query_p95_ms"] >= serving["query_p50_ms"]

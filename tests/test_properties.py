@@ -233,3 +233,55 @@ def test_apply_batch_is_functional(n, m, seed):
     dels, ins = random_batch(hg, 0.3, seed=seed)
     hg.apply_batch(dels, ins)           # must NOT mutate the original
     assert np.array_equal(before, hg.edges)
+
+
+# -- W1/W2: walk-store determinism (core/walk_engine.py) -----------------------
+#
+# W1: a delta applied through delta-localized regeneration leaves the walk
+# buffers AND visit counters bit-identical to regenerating every walk from
+# scratch on the updated graph — per-walk draws are a pure function of
+# (seed, walk id), so incremental == full exactly, not just statistically.
+# W2: delete-then-reinsert of the same edges is a no-op on the buffers
+# (sorted adjacency rows restore bit-for-bit, hence so do the walks).
+
+def _loopless(n: int, m: int, seed: int) -> HostGraph:
+    hg = _graph(n, m, seed)
+    e = hg.edges
+    return HostGraph(n, e[e[:, 0] != e[:, 1]])
+
+
+@SET
+@given(st.integers(12, 48), st.integers(12, 96), st.integers(0, 2 ** 16))
+def test_walk_delta_equals_full_regeneration(n, m, seed):
+    from repro.core.incremental import effective_batch
+    from repro.core.walk_engine import WalkState
+    hg = _loopless(n, m, seed)
+    dels, ins = random_batch(hg, 0.2, seed=seed + 1)
+    keep = np.asarray(ins)[:, 0] != np.asarray(ins)[:, 1]
+    ins = np.asarray(ins)[keep]
+    ws = WalkState(hg, R=4, L=12, seed=7)
+    de, ie = effective_batch(hg, dels, ins)
+    ws.apply_batch(de, ie)
+    full = WalkState(hg.apply_batch(dels, ins), R=4, L=12, seed=7)
+    assert np.array_equal(np.asarray(ws.walks), np.asarray(full.walks))
+    assert np.array_equal(np.asarray(ws.counts), np.asarray(full.counts))
+
+
+@SET
+@given(st.integers(12, 48), st.integers(12, 96), st.integers(0, 2 ** 16))
+def test_walk_delete_reinsert_noop(n, seed_m, seed):
+    from repro.core.incremental import effective_batch
+    from repro.core.walk_engine import WalkState
+    hg = _loopless(n, seed_m, seed)
+    if hg.m == 0:
+        return
+    rng = np.random.default_rng(seed)
+    edges = hg.edges[rng.choice(hg.m, min(4, hg.m), replace=False)]
+    ws = WalkState(hg, R=4, L=12, seed=11)
+    walks0, counts0 = np.asarray(ws.walks).copy(), np.asarray(ws.counts).copy()
+    none = np.zeros((0, 2), np.int64)
+    ws.apply_batch(*effective_batch(hg, edges, none))
+    hg2 = hg.apply_batch(edges, none)
+    ws.apply_batch(*effective_batch(hg2, none, edges))
+    assert np.array_equal(np.asarray(ws.walks), walks0)
+    assert np.array_equal(np.asarray(ws.counts), counts0)

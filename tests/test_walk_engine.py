@@ -1,0 +1,309 @@
+"""Walk-engine subsystem tests (PR-8): config/capability gating, the
+device-resident walk store's delta-localized regeneration, the session's
+walk mode (``ppr_query``, zero post-warmup retraces, localization
+accounting), the dense personalized oracle, and the service's per-user
+personalized serving path."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.api import (CapabilityError, EngineConfig, PageRankService,
+                       PageRankSession, registry)
+from repro.core import pagerank as pr
+from repro.core.delta import random_batch
+from repro.core.graph import HostGraph
+from repro.core.incremental import effective_batch
+from repro.core.walk_engine import WalkState
+from repro.graphs.generators import powerlaw
+
+
+def _graph(n=96, m=420, seed=0) -> HostGraph:
+    rng = np.random.default_rng(seed)
+    e = np.stack([rng.integers(0, n, m), rng.integers(0, n, m)], 1)
+    hg = HostGraph(n, e)
+    e = hg.edges
+    return HostGraph(n, e[e[:, 0] != e[:, 1]])
+
+
+# ---------------------------------------------------------------------------
+# registry + config gating
+# ---------------------------------------------------------------------------
+
+def test_walk_engine_registered_with_capability():
+    assert "walk" in registry.names()
+    eng = registry.resolve("walk")
+    assert registry.supports_of(eng) == frozenset({"ppr"})
+    assert registry.fault_domains_of(eng) == ("process",)
+    # sweep engines declare no capabilities
+    assert registry.supports_of(registry.resolve("pallas")) == frozenset()
+
+
+@pytest.mark.parametrize("field,bad,match", [
+    ("walks_per_vertex", 0, "must be >= 1"),
+    ("walks_per_vertex", -3, "must be >= 1"),
+    ("walk_length", 1, "must be >= 2"),
+    ("walk_seed", -1, "must be >= 0"),
+    ("walks_per_vertex", 2.5, "integer"),
+    ("walk_length", True, "integer"),
+])
+def test_config_validates_walk_fields_eagerly(field, bad, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(engine="walk", **{field: bad})
+
+
+@pytest.mark.parametrize("engine", ["dense", "blocked", "pallas"])
+def test_sweep_engines_reject_personalization_fields(engine):
+    with pytest.raises(CapabilityError, match="'ppr' capability"):
+        EngineConfig(engine=engine, walks_per_vertex=8)
+    with pytest.raises(CapabilityError, match="engine='walk'"):
+        EngineConfig(engine=engine, walk_length=16, walk_seed=1)
+
+
+def test_walk_engine_rejects_sweep_fault_and_integrity_knobs():
+    from repro.core.faults import FaultPlan
+    with pytest.raises(ValueError, match="sweep"):
+        EngineConfig(engine="walk", faults=FaultPlan(n_threads=2))
+    from repro.core.integrity import IntegrityConfig
+    with pytest.raises(ValueError, match="integrity"):
+        EngineConfig(engine="walk", integrity=IntegrityConfig())
+
+
+def test_ppr_query_on_sweep_engine_raises_capability_error():
+    hg = _graph()
+    with PageRankSession.from_graph(
+            hg, config=EngineConfig(engine="blocked")) as sess:
+        with pytest.raises(CapabilityError, match="ppr_query"):
+            sess.ppr_query([0, 1], 5)
+
+
+# ---------------------------------------------------------------------------
+# walk store: determinism + localization
+# ---------------------------------------------------------------------------
+
+def test_delta_regeneration_equals_full_rebuild():
+    hg = _graph(seed=3)
+    ws = WalkState(hg, R=6, L=16, seed=9)
+    dels, ins = random_batch(hg, 0.15, seed=4)
+    ins = np.asarray(ins)
+    ins = ins[ins[:, 0] != ins[:, 1]]
+    stats = ws.apply_batch(*effective_batch(hg, dels, ins))
+    full = WalkState(hg.apply_batch(dels, ins), R=6, L=16, seed=9)
+    assert np.array_equal(np.asarray(ws.walks), np.asarray(full.walks))
+    assert np.array_equal(np.asarray(ws.counts), np.asarray(full.counts))
+    # localization: regenerated ≤ touched mass, strictly below global
+    assert 0 < stats.regenerated_walks <= stats.touched_walk_mass
+    assert stats.regenerated_walks < stats.total_walks
+
+
+def test_delete_reinsert_is_noop_on_walk_buffers():
+    hg = _graph(seed=5)
+    ws = WalkState(hg, R=5, L=14, seed=2)
+    w0 = np.asarray(ws.walks).copy()
+    c0 = np.asarray(ws.counts).copy()
+    edges = hg.edges[:5]
+    none = np.zeros((0, 2), np.int64)
+    ws.apply_batch(*effective_batch(hg, edges, none))
+    assert not np.array_equal(np.asarray(ws.walks), w0)  # delta took effect
+    hg2 = hg.apply_batch(edges, none)
+    ws.apply_batch(*effective_batch(hg2, none, edges))
+    assert np.array_equal(np.asarray(ws.walks), w0)
+    assert np.array_equal(np.asarray(ws.counts), c0)
+
+
+def test_estimates_track_oracles():
+    hg = powerlaw(128, 5, seed=11)
+    g = hg.snapshot(block_size=64)
+    ws = WalkState(hg, R=128, L=48, seed=1)
+    # global estimate vs the exact numpy oracle
+    ref = pr.numpy_reference(g, iterations=300)[:hg.n]
+    est = np.asarray(ws.pagerank())
+    assert float(np.abs(est - ref).sum()) < 0.35
+    # personalized estimate vs the personalized numpy oracle
+    seeds = np.array([3, 17, 40])
+    pref = pr.ppr_numpy_reference(g, seeds, iterations=300)[:hg.n]
+    pest = np.asarray(ws.ppr(seeds))
+    assert float(np.abs(pest - pref).sum()) < 0.8
+    vals, idx = ws.ppr_top_k(seeds, 5)
+    order = np.argsort(pest)[::-1][:5]
+    np.testing.assert_allclose(np.asarray(vals), pest[order])
+
+
+def test_accuracy_improves_with_R():
+    hg = powerlaw(96, 5, seed=7)
+    g = hg.snapshot(block_size=64)
+    seeds = np.array([1, 2, 5])
+    ref = pr.ppr_numpy_reference(g, seeds, iterations=300)[:hg.n]
+    errs = []
+    for R in (4, 32, 256):
+        ws = WalkState(hg, R=R, L=48, seed=3)
+        errs.append(float(np.abs(np.asarray(ws.ppr(seeds)) - ref).sum()))
+    assert errs[-1] < errs[0]
+
+
+# ---------------------------------------------------------------------------
+# dense personalized oracle (satellite: exact PPR on small graphs)
+# ---------------------------------------------------------------------------
+
+def test_dense_jacobi_personalization_matches_numpy_ppr():
+    hg = _graph(seed=13)
+    g = hg.snapshot(block_size=64)
+    seeds = np.array([0, 7, 31])
+    p = pr.restart_vector(g, seeds)
+    R0 = jnp.asarray(p)
+    R, iters, conv = pr.dense_jacobi(
+        g, R0, g.vertex_valid, expand=False, tau=1e-12,
+        personalization=p)
+    assert conv
+    ref = pr.ppr_numpy_reference(g, seeds, iterations=400)
+    assert float(np.abs(np.asarray(R) - ref).max()) < 1e-9
+    # degenerate restart vectors are rejected eagerly
+    with pytest.raises(ValueError, match="at least one seed"):
+        pr.restart_vector(g, [])
+    with pytest.raises(ValueError, match="out of range"):
+        pr.restart_vector(g, [g.n + 4])
+
+
+def test_powerlaw_generator_seeded_and_heavy_tailed():
+    a = powerlaw(256, 6, seed=3)
+    b = powerlaw(256, 6, seed=3)
+    c = powerlaw(256, 6, seed=4)
+    assert np.array_equal(a.edges, b.edges)     # deterministic per seed
+    assert not np.array_equal(a.edges, c.edges)
+    deg = np.bincount(a.edges[:, 0], minlength=256)
+    assert deg.max() >= 4 * max(np.median(deg), 1)      # hubs exist
+    assert (a.edges[:, 0] != a.edges[:, 1]).all()       # simple digraph
+    with pytest.raises(ValueError, match="exponent"):
+        powerlaw(64, 4, exponent=1.0)
+
+
+# ---------------------------------------------------------------------------
+# session walk mode
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def walk_session():
+    hg = _graph(seed=21)
+    cfg = EngineConfig(engine="walk", walks_per_vertex=8, walk_length=24,
+                       walk_seed=2)
+    sess = PageRankSession.from_graph(hg, config=cfg)
+    yield hg, sess
+    sess.close()
+
+
+def test_session_update_localized_and_retrace_free(walk_session):
+    hg, sess = walk_session
+    sess.warmup()
+    cur = hg
+    for j in range(3):
+        dels, ins = random_batch(cur, 0.05, seed=60 + j)
+        res = sess.update(dels, ins)
+        cur = cur.apply_batch(dels, ins)
+        assert res.stats.converged
+        assert 0 < res.regenerated_walks <= res.touched_walks
+        assert res.regenerated_walks < res.total_walks
+    rep = sess.report()
+    assert rep.engine == "walk"
+    assert rep.retraces_post_warmup == 0
+    assert rep.n_updates >= 3
+    # session buffers must equal a cold walk store on the final graph
+    fresh = WalkState(cur, R=8, L=24, seed=2)
+    assert np.array_equal(np.asarray(sess.walks.walks),
+                          np.asarray(fresh.walks))
+
+
+def test_session_ppr_query_validation(walk_session):
+    hg, sess = walk_session
+    vals, idx = sess.ppr_query([0, 1], 5)
+    assert len(vals) == len(idx) == 5
+    assert (np.diff(vals) <= 0).all()
+    with pytest.raises(ValueError, match="at least one seed"):
+        sess.ppr_query([], 5)
+    with pytest.raises(ValueError, match="out of range"):
+        sess.ppr_query([sess.n + 2], 5)
+    with pytest.raises(ValueError, match="k must be an integer"):
+        sess.ppr_query([0], 2.5)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        sess.ppr_query([0], 0)
+
+
+def test_session_fork_diverges_independently(walk_session):
+    hg, sess = walk_session
+    twin = sess.fork()
+    before = np.asarray(sess.walks.walks).copy()
+    dels = np.zeros((0, 2), np.int64)
+    twin.update(dels, np.array([[0, 5]]))
+    assert np.array_equal(np.asarray(sess.walks.walks), before)
+    twin.close()
+    assert not sess.closed
+
+
+def test_session_recompute_semantics(walk_session):
+    hg, sess = walk_session
+    res = sess.recompute("static")
+    assert res.stats.converged
+    for variant in ("dt", "df"):
+        with pytest.raises(ValueError, match="marking"):
+            sess.recompute(variant)
+
+
+def test_walk_engine_snapshot_run_via_registry():
+    hg = _graph(n=48, m=180, seed=8)
+    g = hg.snapshot(block_size=64)
+    sess = PageRankSession.from_snapshot(
+        g, config=EngineConfig(engine="walk", walks_per_vertex=64,
+                               walk_length=32))
+    ref = pr.numpy_reference(g, iterations=300)[:g.n]
+    assert float(np.abs(sess.ranks[:g.n] - ref).sum()) < 0.5
+    sess.ppr_query([0], 3)
+    sess.close()
+
+
+def test_walk_session_wal_restore_bit_identical(tmp_path):
+    """Process-domain durability on the sweep-free engine: regeneration is
+    deterministic in (graph, seed), so checkpoint + WAL replay must
+    reproduce the walk buffers bit-for-bit."""
+    hg = _graph(n=50, m=220, seed=40)
+    cfg = EngineConfig(engine="walk", walks_per_vertex=6, walk_length=20,
+                       walk_seed=4, durability="wal")
+    sess = PageRankSession.from_graph(hg, config=cfg,
+                                      store_dir=str(tmp_path))
+    none = np.zeros((0, 2), np.int64)
+    for j in range(3):
+        sess.update(none, np.array([[j, (j * 7 + 3) % 50]]))
+    walks_live = np.asarray(sess.walks.walks).copy()
+    ranks_live = np.asarray(sess.ranks).copy()
+    sess.close()
+    restored = PageRankSession.restore(str(tmp_path))
+    try:
+        assert np.array_equal(np.asarray(restored.walks.walks), walks_live)
+        np.testing.assert_allclose(np.asarray(restored.ranks), ranks_live)
+        vals, idx = restored.ppr_query([0, 1], 4)
+        assert len(vals) == 4
+    finally:
+        restored.close()
+
+
+# ---------------------------------------------------------------------------
+# service: per-user personalized serving
+# ---------------------------------------------------------------------------
+
+def test_service_serves_personalized_rankings():
+    graphs = [_graph(seed=31), _graph(seed=32)]
+    cfg = EngineConfig(engine="walk", walks_per_vertex=8, walk_length=24)
+    svc = PageRankService(graphs, config=cfg)
+    try:
+        r = svc.ppr_query(0, [3, 4], 4)
+        assert r.degraded             # snapshot (degraded-mode) read
+        assert len(r.values) == 4 and len(r.vertices) == 4
+        # updates drain while personalized reads keep serving
+        svc.submit(0, np.zeros((0, 2), np.int64), np.array([[0, 9]]))
+        while svc.step():
+            pass
+        r2 = svc.ppr_query(0, [3, 4], 4)
+        assert r2.lag_updates == 0    # snapshot refreshed to committed
+        r3 = svc.ppr_query(1, [7], 2)
+        assert len(r3.values) == 2
+        rep = svc.report()
+        assert rep["queries"]["served"] >= 3
+    finally:
+        svc.stop()
