@@ -600,7 +600,15 @@ class PageRankService:
                 return False
             self.failover(stream)
             with self._lock:
-                self._queues[stream].extend(stranded)
+                # prepend (like _requeue): a durable dead slot keeps
+                # accepting submits while the respawn restores, and those
+                # were admitted AFTER the stranded batches — appending the
+                # stranded run behind them would invert the apply order
+                # vs the accepted-batch lineage (delta batches are
+                # order-sensitive: a later delete can cancel an earlier
+                # insert of the same edge, so inversion silently diverges
+                # the served ranks from the oracle)
+                self._queues[stream].extendleft(reversed(stranded))
             rec = fd.RecoveryRecord(
                 domain="session",
                 batch_index=self.sessions[stream]._batch_index,
@@ -979,9 +987,14 @@ class PageRankService:
                 "served": len(q_walls),
                 "p50_ms": self._pct(q_walls, 50),
                 "p95_ms": self._pct(q_walls, 95),
+                # 9 decimals (ns resolution), not 6: divergence-based
+                # staleness is frequently in the microseconds (a read
+                # catching a lagging snapshot refreshed moments earlier),
+                # and 6-decimal rounding collapses those measurements
+                # into bare powers of ten that read as placeholders
                 "staleness_p95_s": (round(float(np.percentile(q_stale, 95)),
-                                          6) if q_stale else 0.0),
-                "staleness_max_s": (round(max(q_stale), 6)
+                                          9) if q_stale else 0.0),
+                "staleness_max_s": (round(max(q_stale), 9)
                                     if q_stale else 0.0),
                 "lag_updates_max": max(q_lags) if q_lags else 0,
                 "snapshot_refreshes": self._snapshot_refreshes,

@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 import warnings
 import zlib
@@ -176,6 +177,22 @@ def _driver_cache_size() -> int:
         return int(pe._driver._cache_size())
     except Exception:           # pragma: no cover - older jax fallback
         return -1
+
+
+# Cross-session retrace attribution.  The fused driver's jit cache is
+# process-wide, so a step's cache-size delta can observe ANOTHER session's
+# legitimate first-visit bucket compile (concurrent service dispatch) and
+# misreport it as an unexpected retrace.  Every stream-mode drive entered
+# at a first-visit operand bucket registers here for its duration; a step
+# whose measurement window overlaps any registered drive (its own or a
+# concurrent session's) attributes the window's cache growth to the
+# capacity ladder, keeping ``driver_retraces`` an assertable
+# zero-invariant under concurrency.  Sequential callers are unaffected:
+# with no overlap, only the step's own first-visit can explain growth —
+# exactly the previous behavior.
+_RETRACE_LOCK = threading.Lock()
+_NEW_BUCKET_STARTED = 0         # monotone count of first-visit drives begun
+_NEW_BUCKET_ACTIVE = 0          # of those, currently mid-drive
 
 
 @dataclasses.dataclass
@@ -1248,8 +1265,12 @@ class PageRankSession:
         """Stream-mode step: delta scatter → frontier seed → fused
         convergence loop, all device-side after the O(batch) host
         bookkeeping."""
+        global _NEW_BUCKET_STARTED, _NEW_BUCKET_ACTIVE
         t0 = time.perf_counter()
         cache0 = _driver_cache_size()
+        with _RETRACE_LOCK:     # open the attribution window with cache0
+            nb_started0 = _NEW_BUCKET_STARTED
+            nb_active0 = _NEW_BUCKET_ACTIVE
         g_prev_snap = (self.hg.snapshot(block_size=self.block_size)
                        if variant == "dt" else None)
         mat_prev = self.inc.mat
@@ -1322,15 +1343,30 @@ class PageRankSession:
         new_bucket = dkey not in self._driver_keys
         self._driver_keys.add(dkey)
 
-        R, stats = self._drive(R0, affected, expand=expand)
+        if new_bucket:
+            with _RETRACE_LOCK:
+                _NEW_BUCKET_STARTED += 1
+                _NEW_BUCKET_ACTIVE += 1
+        try:
+            R, stats = self._drive(R0, affected, expand=expand)
+        finally:
+            if new_bucket:
+                with _RETRACE_LOCK:
+                    _NEW_BUCKET_ACTIVE -= 1
         self.R = R
         raw = (np.asarray(deletions).reshape(-1, 2).shape[0]
                + np.asarray(insertions).reshape(-1, 2).shape[0])
         cache1 = _driver_cache_size()
+        with _RETRACE_LOCK:
+            nb_started1 = _NEW_BUCKET_STARTED
         retraces = (cache1 - cache0
                     if cache0 >= 0 and cache1 >= 0 else -1)
+        # first-visit drives overlapping this window: ones already active
+        # at cache0 plus ones begun since — any of their compiles may land
+        # in this window's cache delta (shared process-wide jit cache)
+        overlapping = nb_active0 + (nb_started1 - nb_started0)
         bucket = 0
-        if retraces > 0 and new_bucket:
+        if retraces > 0 and (new_bucket or overlapping > 0):
             bucket, retraces = retraces, 0
         return StreamBatchResult(
             ranks=R, stats=stats,

@@ -261,6 +261,38 @@ class TestSessionLifecycle:
             assert res.stats.converged
             assert pr.linf(res.ranks, ref.ranks) < 1e-12, variant
 
+    def test_concurrent_bucket_compile_not_charged_as_retrace(
+            self, dyn, monkeypatch):
+        """The fused driver's jit cache is process-wide: a first-visit
+        bucket compile by a CONCURRENT session can land inside this
+        session's cache-delta window (service dispatch overlaps drives).
+        Growth explained by an overlapping first-visit drive must be
+        classified as bucket-ladder growth, not an unexpected retrace —
+        and growth with no overlapping drive must still be charged."""
+        from repro.api import session as sess_mod
+        hg0, _, _, _, _, r_prev, dels, ins = dyn
+        sess = PageRankSession.from_graph(
+            hg0, config=EngineConfig(engine="pallas", block_size=64),
+            r0=r_prev)
+        sess.update(dels, ins)          # warm: own ladder bucket visited
+        real = sess_mod._driver_cache_size
+        calls = {"n": 0}
+
+        def growing():                  # every cache1 read sees one entry
+            calls["n"] += 1             # more than its cache0 — a compile
+            return real() + (1 if calls["n"] % 2 == 0 else 0)
+
+        monkeypatch.setattr(sess_mod, "_driver_cache_size", growing)
+        d2, i2 = random_batch(sess.hg, 5e-3, seed=91)
+        res = sess.update(d2, i2)       # no overlapping first-visit drive
+        assert res.driver_retraces == 1  # → charged as a real retrace
+        assert res.bucket_retraces == 0
+        monkeypatch.setattr(sess_mod, "_NEW_BUCKET_ACTIVE", 1)
+        d3, i3 = random_batch(sess.hg, 5e-3, seed=92)
+        res = sess.update(d3, i3)       # concurrent first-visit drive
+        assert res.driver_retraces == 0  # explains the growth
+        assert res.bucket_retraces == 1
+
     def test_fork_branches_are_independent(self, dyn):
         hg0, _, _, _, _, r_prev, dels, ins = dyn
         sess = PageRankSession.from_graph(

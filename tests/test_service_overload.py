@@ -354,6 +354,39 @@ class TestFailoverUnderLoad:
         assert pr.linf(svc.sessions[0].ranks[:cur.n],
                        jnp.asarray(ref[:cur.n])) < 1e-8
 
+    def test_failover_drain_orders_stranded_before_midrecovery_submits(
+            self, hg, tmp_path):
+        # A durable dead slot keeps accepting submits while the respawn is
+        # restoring.  Those land in the (cleared) queue before the drain
+        # re-queues the stranded pre-kill batches, so the drain must
+        # PREPEND the stranded run: delta batches are order-sensitive, and
+        # stranded delete(e) + mid-recovery insert(e) nets to insert (edge
+        # survives) only in submit order — the inverted order nets to a
+        # delete, silently diverging the served ranks from the
+        # accepted-batch lineage.
+        svc = PageRankService([self._durable(hg, tmp_path, "order")])
+        svc.inject_session_fault(0, after_dispatches=0, kind="dead")
+        e = hg.edges[:1]                    # one existing edge
+        none = np.zeros((0, 2), np.int64)
+        orig_failover = svc.failover
+
+        def failover_then_submit(stream, **kw):
+            out = orig_failover(stream, **kw)
+            svc.submit(0, none, e)          # re-insert e mid-recovery
+            return out
+
+        svc.failover = failover_then_submit
+        svc.submit(0, e, none)              # delete e (stranded by kill)
+        svc.step()              # dispatch dies; watchdog drains + respawns
+        done = svc.run_until_drained()
+        assert len(done) == 2 and all(r.done for r in done)
+        # submit order [delete(e), insert(e)] nets to e present
+        assert svc.sessions[0].hg.has_edges(e).all()
+        ref = pr.numpy_reference(hg.snapshot(block_size=BLOCK),
+                                 iterations=300)
+        assert pr.linf(svc.sessions[0].ranks[:hg.n],
+                       jnp.asarray(ref[:hg.n])) < 1e-8
+
     def test_dead_slot_without_store_sheds_with_reason(self, hg):
         svc = PageRankService([hg], config=_cfg())    # no durability
         svc.inject_session_fault(0, after_dispatches=0, kind="dead")
