@@ -105,6 +105,13 @@ class EngineConfig:
                     are a pure function of (seed, walk id), which is what
                     makes delta-localized regeneration bit-exact
                     (``None`` → 0).  Same capability gate.
+    device_budget_bytes: cap on device-resident tile-pool bytes for a
+                    streaming session (``None`` → untiered: the whole pool
+                    lives on device).  When set, the session runs the
+                    two-tier storage of :mod:`repro.core.tiering`: host
+                    truth + a frontier-biased hot slab of row-blocks sized
+                    to this budget (docs/SCALE.md has the sizing rule).
+                    Single-topology streaming sessions only.
     """
 
     alpha: float = 0.85
@@ -130,6 +137,7 @@ class EngineConfig:
     walks_per_vertex: Optional[int] = None
     walk_length: Optional[int] = None
     walk_seed: Optional[int] = None
+    device_budget_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -233,6 +241,22 @@ class EngineConfig:
                     f"{type(v).__name__} ({v!r})")
             if v < lo:
                 raise ValueError(f"{name}={v} must be >= {lo}")
+        # -- tiered-storage axis ----------------------------------------------
+        if self.device_budget_bytes is not None:
+            v = self.device_budget_bytes
+            if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+                raise ValueError(
+                    f"device_budget_bytes={v!r} must be a positive integer "
+                    "(or None for untiered storage)")
+            if self.topology != "single":
+                raise ValueError(
+                    "device_budget_bytes tiers a single device's tile pool; "
+                    "topology='sharded' already partitions state across "
+                    "devices — the two cannot compose")
+            if self.engine not in (None, "pallas"):
+                raise ValueError(
+                    "device_budget_bytes requires the streaming pallas "
+                    f"engine (got engine={self.engine!r})")
         # resolve engine + tile backend now: this validates explicit values
         # AND the REPRO_ENGINE / REPRO_TILE_BACKEND env overrides eagerly —
         # a bad value fails at construction, not mid-run

@@ -93,6 +93,7 @@ from repro.core.graph import (GraphSnapshot, HostGraph, initial_ranks,
 from repro.core.incremental import (IncrementalPullMatrix, MatrixAux,
                                     effective_batch)
 from repro.core.pagerank import PagerankResult
+from repro.core import tiering
 from repro.core import walk_engine as we
 from repro.graphs import partition as gpart
 from repro.kernels.block_spmv import ops
@@ -257,6 +258,10 @@ class SessionReport:
     recovery_events: List[dict] = dataclasses.field(default_factory=list)
     # -- corruption domain (core/integrity.py; None = integrity disabled) ----
     integrity: Optional[dict] = None
+    # -- tiered storage / memory audit (docs/SCALE.md) -----------------------
+    tiering: Optional[dict] = None            # HotSetManager counters
+    device_bytes: Optional[dict] = None       # per-component device bytes
+    bytes_per_vertex: Optional[float] = None  # sum(device_bytes) / n
 
 
 class PageRankSession:
@@ -293,6 +298,17 @@ class PageRankSession:
         self._stream = (self.engine_name == "pallas" and hg is not None
                         and g is None)
         self._walk = "ppr" in registry.supports_of(self.engine)
+        # tiered storage (docs/SCALE.md): host-truth tile pool + bounded
+        # device hot set; stream mode only — everything else keeps its
+        # state fully device-resident
+        self._tiered = config.device_budget_bytes is not None
+        if self._tiered and not self._stream:
+            raise ValueError(
+                "device_budget_bytes tiers the streaming tile pool — open "
+                "the session with from_graph and the pallas engine")
+        self.pool: Optional[tiering.HostTilePool] = None
+        self.hot: Optional[tiering.HotSetManager] = None
+        self._deferred_rb: Optional[np.ndarray] = None
         self._closed = False
         self._service = None          # backref set by PageRankService
         self._shard_spec: Optional[dist.ShardSpec] = None
@@ -434,8 +450,27 @@ class PageRankSession:
         t = plan.device_tables(cfg.max_iterations)
         self._fault_tables = tuple(jnp.asarray(a) for a in t)
 
-        self.inc = IncrementalPullMatrix.from_snapshot(
-            g0, dtype=np.dtype(dt), padded=True)
+        if self._tiered:
+            # host tier: the full tile pool + slot tables never land on the
+            # device — only the HotSetManager's budget-bounded slab does.
+            # The device "matrix" is the slab VIEW (same BlockSparse slot-
+            # table indirection), rebound after every admission.
+            src, dst = g0.in_edges_host()
+            self.pool = tiering.HostTilePool.from_edges(
+                dst, src, g0.n_pad, g0.n_pad, block=g0.block_size,
+                dtype=np.dtype(dt))
+            self.hot = tiering.HotSetManager(self.pool,
+                                             cfg.device_budget_bytes)
+            aux = MatrixAux(
+                bmat=tiering.host_block_adjacency(self.pool.tile_cols,
+                                                  self.pool.mat.n_cb),
+                rb_in=np.asarray(g0.block_in_edges()).copy(),
+                rb_out=np.asarray(g0.block_out_edges()).copy())
+            self.inc = IncrementalPullMatrix(self.hot.view(), aux)
+        else:
+            self.inc = IncrementalPullMatrix.from_snapshot(
+                g0, dtype=np.dtype(dt), padded=True)
+        self._rb_res_full = jnp.ones((self.n_rb,), bool)
         self.valid = g0.vertex_valid
         # device-resident engine operands, patched in place per batch by
         # _apply_operand_delta (the host-side numpy twins live in inc.aux
@@ -450,13 +485,26 @@ class PageRankSession:
         self._out_deg_host = np.asarray(g0.out_deg).copy()
         self._hg_digest = self._graph_digest()
         if r0 is None:
-            r0, _ = pe.run_pallas(
-                g0, initial_ranks(g0, dt), g0.vertex_valid, mode=cfg.mode,
-                expand=False, alpha=cfg.alpha, tau=cfg.tau,
-                max_iterations=cfg.max_iterations,
-                active_policy=cfg.active_policy,
-                mat=self.inc.mat, aux=self.inc.aux,
-                interpret=self.interpret, backend=self.backend)
+            if self._tiered:
+                # cold solve through the refill loop: admit what fits,
+                # converge resident blocks, defer the rest — block-Jacobi
+                # over residency partitions (expand=True propagates
+                # corrections across rounds; docs/SCALE.md §Miss semantics)
+                r0, _ = self._drive_refill(
+                    jnp.asarray(initial_ranks(g0, dt)), g0.vertex_valid,
+                    expand=True, want_rb=np.arange(self.n_rb))
+                m = self.inc.mat
+                self._driver_keys.add((int(m.tiles.shape[0]),
+                                       int(m.tile_cols.shape[1]), True))
+            else:
+                r0, _ = pe.run_pallas(
+                    g0, initial_ranks(g0, dt), g0.vertex_valid,
+                    mode=cfg.mode,
+                    expand=False, alpha=cfg.alpha, tau=cfg.tau,
+                    max_iterations=cfg.max_iterations,
+                    active_policy=cfg.active_policy,
+                    mat=self.inc.mat, aux=self.inc.aux,
+                    interpret=self.interpret, backend=self.backend)
         r0 = jnp.asarray(r0, dt)
         if r0.shape[0] < self.n_pad:       # e.g. length-n restore state
             r0 = jnp.zeros((self.n_pad,), dt).at[:r0.shape[0]].set(r0)
@@ -601,20 +649,38 @@ class PageRankSession:
         :meth:`verify` to repair."""
         cfg = self.config
         part, alive, delay, crashed = self._fault_tables
-        R, stats_vec = pe._driver(
+        tiered = self._tiered
+        rb_res = self.hot.rb_res if tiered else self._rb_res_full
+        R, stats_vec, deferred = pe._driver(
             self.inc.mat, R0, affected, self.valid, self._out_deg,
-            self._rb_in, self._rb_out, self._bmat,
+            self._rb_in, self._rb_out, self._bmat, rb_res,
             self._alpha, self._tau, self._tau_f,
             part, alive, delay, crashed,
             n=self.n, block_size=self.block_size, mode=cfg.mode,
             expand=expand, active_policy=cfg.active_policy,
             max_iterations=cfg.max_iterations, interpret=self.interpret,
-            backend=self.backend)
+            backend=self.backend, tiered=tiered)
         icfg = cfg.integrity
-        if icfg is not None and icfg.fused and self._r_verified is not None:
+        fused = (icfg is not None and icfg.fused
+                 and self._r_verified is not None)
+        # everything riding the drive — invariants AND the tiered deferral
+        # indicator — is fetched in the SAME block_until_ready: one sync
+        tail = []
+        if fused:
             inv = ig.invariant_vec(R, self._r_verified, self.valid)
-            sv = np.asarray(jax.block_until_ready(       # the single sync
-                jnp.concatenate([stats_vec, inv.astype(stats_vec.dtype)])))
+            tail.append(inv.astype(stats_vec.dtype))
+        if tiered:
+            tail.append(deferred.astype(stats_vec.dtype))
+        sv = np.asarray(jax.block_until_ready(       # the single sync
+            jnp.concatenate([stats_vec] + tail) if tail else stats_vec))
+        def_pending = False
+        if tiered:
+            self._deferred_rb = sv[-self.n_rb:] != 0
+            def_pending = bool(self._deferred_rb.any())
+            sv = sv[:-self.n_rb]
+        else:
+            self._deferred_rb = None
+        if fused:
             stats = pe._stats_from_vec(sv[:-ig.N_INVARIANTS])
             mass_err, neg, nonfinite, _drift = (
                 float(x) for x in sv[-ig.N_INVARIANTS:])
@@ -622,23 +688,131 @@ class PageRankSession:
             # moves ranks arbitrarily far from the pre-batch baseline, so
             # only verify() (between drives, where drift must be 0) gates
             # on it.  Mass is gated on converged iterates only — a sweep-
-            # capped iterate's residual legitimately carries ≤ n·tau.
+            # capped iterate's residual legitimately carries ≤ n·tau —
+            # and only once no deferred (non-resident) blocks are pending:
+            # mid-refill iterates carry those blocks' stale mass.
             self._integrity_checks += 3
             alert = None
             if nonfinite > 0:
                 alert = {"check": "rank_finite", "count": int(nonfinite)}
             elif neg > 0:
                 alert = {"check": "rank_negativity", "count": int(neg)}
-            elif stats.converged and mass_err > icfg.mass_tol:
+            elif (stats.converged and not def_pending
+                    and mass_err > icfg.mass_tol):
                 alert = {"check": "rank_mass", "mass_error": mass_err}
             if alert is None:
                 self._r_verified = R
             else:
                 self._integrity_alert = alert
             return R, stats
-        sv = np.asarray(jax.block_until_ready(stats_vec))  # the single sync
         self._r_verified = R
         return R, pe._stats_from_vec(sv)
+
+    def _admit(self, want_rb) -> None:
+        """Admit row-blocks into the hot slab and rebind the device view
+        (tiered streams only)."""
+        self.hot.admit(want_rb)
+        self.inc.mat = self.hot.view()
+
+    def _mask_from_indices(self, idx: np.ndarray) -> jnp.ndarray:
+        """Device indicator from a host index list: only the bucket-padded
+        list crosses host→device (pad slots target the guard row), so the
+        per-step transfer is O(batch·deg), never O(n)."""
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        k_pad = ops.capacity_bucket(max(len(idx), 1), 1024)
+        buf = np.full(k_pad, self.n_pad, np.int64)
+        buf[:len(idx)] = np.minimum(idx, self.n_pad)
+        ind = jnp.zeros((self.n_pad + 1,), bool).at[jnp.asarray(buf)].set(
+            True)
+        return ind[:self.n_pad] & self.valid
+
+    def _drive_refill(self, R0, affected, *, expand: bool,
+                      want_rb=None) -> Tuple[jnp.ndarray, SweepStats]:
+        """Admission + fused drive + deferred-refill loop.
+
+        Untiered sessions fall through to one plain :meth:`_drive`.
+        Tiered: admit the frontier-biased want set in one batched gather,
+        drive, and while the driver deferred non-resident blocks, admit
+        those and re-drive with exactly the deferred blocks re-marked
+        affected — the paper's helping mechanism applied to residency
+        misses (a miss inside a sweep never syncs; the block is helped on
+        the next drive).  Each round makes the previous rounds' blocks
+        evictable, so the loop progresses whenever one row-block fits the
+        slab; ``max_iterations`` rounds is the safety cap.
+
+        Drain criterion: the loop stops once every currently-deferred
+        block has been re-driven during an unbroken run of *quiet* rounds
+        — rounds whose max rank movement stayed at or below ``tau`` (or
+        the float ulp floor when ``tau`` sits under machine precision, a
+        limit-cycle regime counted in ``refill_stalls``).  Abandoning the
+        expansion marks of a quiet round is exactly what the untiered
+        driver does when a sweep's max change falls to ``tau``, so tiered
+        and untiered share one convergence semantics; the quiet *window*
+        (rather than a single round) is what makes the criterion reachable
+        when the deferred set is larger than the slab and each round can
+        only re-drive a slice of it."""
+        if not self._tiered:
+            return self._drive(R0, affected, expand=expand)
+        if want_rb is not None:
+            self._admit(want_rb)
+        R, agg = self._drive(R0, affected, expand=expand)
+        rounds = 0
+        eps = float(np.finfo(np.dtype(R.dtype)).eps)
+        quiet_driven = np.zeros(self.n_rb, bool)
+        B = self.block_size
+        while self._deferred_rb is not None and self._deferred_rb.any():
+            if rounds >= int(self.config.max_iterations):
+                warnings.warn(
+                    f"tiered refill loop did not drain in {rounds} rounds "
+                    "— serving the best iterate (raise "
+                    "device_budget_bytes)", SweepCapWarning, stacklevel=3)
+                agg = SweepStats(
+                    sweeps=agg.sweeps, iterations=agg.iterations,
+                    blocks_processed=agg.blocks_processed,
+                    edges_processed=agg.edges_processed,
+                    sim_time_ms=agg.sim_time_ms, converged=False,
+                    dnf=agg.dnf)
+                break
+            rounds += 1
+            deferred = self._deferred_rb
+            pending = np.nonzero(deferred)[0]
+            self._admit(pending)
+            aff = jnp.repeat(jnp.asarray(deferred), B) & self.valid
+            R_prev = R
+            R, st = self._drive(R, aff, expand=expand)
+            agg = SweepStats(
+                sweeps=agg.sweeps + st.sweeps,
+                iterations=agg.iterations + st.iterations,
+                blocks_processed=agg.blocks_processed + st.blocks_processed,
+                edges_processed=agg.edges_processed + st.edges_processed,
+                sim_time_ms=agg.sim_time_ms + st.sim_time_ms,
+                converged=bool(st.converged), dnf=bool(agg.dnf or st.dnf))
+            # drain check: a quiet round extends the window with the
+            # blocks it actually re-drove; a loud round (or an unconverged
+            # drive) resets it
+            driven = pending[self.hot.resident[pending]]
+            quiet = False
+            at_floor = False
+            if st.converged and len(driven):
+                delta = float(jnp.max(jnp.abs(R - R_prev)))
+                if delta <= float(self.config.tau):
+                    quiet = True
+                else:
+                    rmax = float(jnp.max(jnp.abs(R)))
+                    at_floor = delta <= 16.0 * eps * max(rmax, eps)
+                    quiet = at_floor
+            if quiet:
+                quiet_driven[driven] = True
+                cur = np.nonzero(self._deferred_rb)[0]
+                if quiet_driven[cur].all():
+                    if at_floor:
+                        self.hot.counters["refill_stalls"] += 1
+                    self._deferred_rb = np.zeros_like(deferred)
+                    break
+            else:
+                quiet_driven[:] = False
+        self.hot.counters["refill_drives"] += rounds
+        return R, agg
 
     # -- updates -------------------------------------------------------------
     def update(self, deletions, insertions, *, variant: str = "df"
@@ -899,16 +1073,29 @@ class PageRankSession:
             # of row-block i must sum to exactly rb_in[i]; 0.25 tolerates
             # nothing but float noise on integer counts
             checks += 1
-            sums = ig.tile_row_sums(self.inc.mat)
+            # tiered: host truth is the twin everything checks against —
+            # the pool's live tiles carry the sums, its slot tables the
+            # structure, and the slab scrub CRCs every resident device
+            # tile against its host original
+            sums = (self.pool.row_sums() if self._tiered
+                    else ig.tile_row_sums(self.inc.mat))
             bad_rb = np.nonzero(np.abs(sums - aux.rb_in) > 0.25)[0]
             if len(bad_rb):
                 failures.append({"check": "tile_sums",
                                  "row_blocks": bad_rb[:8].tolist()})
             checks += 1
-            failures.extend(ig.check_slot_tables(
-                np.asarray(self.inc.mat.tile_cols),
-                np.asarray(self.inc.mat.tile_idx),
-                aux.bmat, int(self.inc.mat.tiles.shape[0])))
+            if self._tiered:
+                failures.extend(ig.check_slot_tables(
+                    self.pool.tile_cols, self.pool.mat.tile_idx,
+                    aux.bmat, int(self.pool.mat.tiles.shape[0])))
+                checks += 1
+                failures.extend(self.hot.scrub(
+                    np.asarray(self.inc.mat.tiles)))
+            else:
+                failures.extend(ig.check_slot_tables(
+                    np.asarray(self.inc.mat.tile_cols),
+                    np.asarray(self.inc.mat.tile_idx),
+                    aux.bmat, int(self.inc.mat.tiles.shape[0])))
             if deep and self._hg_digest is not None:
                 checks += 1
                 if self._graph_digest() != self._hg_digest:
@@ -975,7 +1162,8 @@ class PageRankSession:
         checks = {f["check"] for f in failures}
         if "graph_digest" in checks:
             start = "restore"       # the host truth itself is damaged
-        elif checks & {"mirror_digest", "tile_sums", "slot_tables"}:
+        elif checks & {"mirror_digest", "tile_sums", "slot_tables",
+                       "hot_slab"}:
             start = "rebuild"
         else:
             start = "frontier"
@@ -1027,7 +1215,7 @@ class PageRankSession:
                 R0 = jnp.where(self.valid, ref, jnp.zeros_like(ref))
                 affected = self.valid
             if self._stream:
-                R, st = self._drive(R0, affected, expand=True)
+                R, st = self._drive_refill(R0, affected, expand=True)
                 self.R, reconverged = R, bool(st.converged)
             else:
                 self._converge(R0, affected, expand=True)
@@ -1038,8 +1226,24 @@ class PageRankSession:
             if not self._stream:
                 return None         # nothing mirrored to rebuild
             g = self.hg.snapshot(block_size=self.block_size)
-            self.inc = IncrementalPullMatrix.from_snapshot(
-                g, dtype=np.dtype(self._dtype), padded=True)
+            if self._tiered:
+                # both tiers rebuild from the host edge set: fresh pool,
+                # fresh (empty) hot set — the re-converge below re-admits
+                src, dst = g.in_edges_host()
+                self.pool = tiering.HostTilePool.from_edges(
+                    dst, src, g.n_pad, g.n_pad, block=self.block_size,
+                    dtype=np.dtype(self._dtype))
+                self.hot = tiering.HotSetManager(
+                    self.pool, self.config.device_budget_bytes)
+                aux = MatrixAux(
+                    bmat=tiering.host_block_adjacency(
+                        self.pool.tile_cols, self.pool.mat.n_cb),
+                    rb_in=np.asarray(g.block_in_edges()).copy(),
+                    rb_out=np.asarray(g.block_out_edges()).copy())
+                self.inc = IncrementalPullMatrix(self.hot.view(), aux)
+            else:
+                self.inc = IncrementalPullMatrix.from_snapshot(
+                    g, dtype=np.dtype(self._dtype), padded=True)
             self._out_deg = jnp.asarray(g.out_deg)
             self._out_deg_host = np.asarray(g.out_deg).copy()
             self._rb_in = jnp.asarray(self.inc.aux.rb_in)
@@ -1059,7 +1263,9 @@ class PageRankSession:
             # so frontier expansion sweeps corrections through chunks that
             # look locally converged.
             R0 = jnp.where(self.valid, 1.0 / self.n, 0.0).astype(self._dtype)
-            R, st = self._drive(R0, self.valid, expand=True)
+            R, st = self._drive_refill(
+                R0, self.valid, expand=True,
+                want_rb=np.arange(self.n_rb) if self._tiered else None)
             self.R = R
             return ("operand mirrors + tile pool rebuilt from host truth; "
                     "full re-converge from the verified iterate",
@@ -1149,19 +1355,47 @@ class PageRankSession:
                 jnp.asarray(3, self._rb_in.dtype))
             return
         mat = self.inc.mat
-        tc = np.asarray(mat.tile_cols)
+        tc = (self.pool.tile_cols.copy() if self._tiered
+              else np.asarray(mat.tile_cols))
         occ = np.argwhere(tc >= 0)
         if kind == "slot":
             r, c = (occ[int(fault.index) % len(occ)]
                     if fault.index is not None
                     else occ[int(rng.integers(len(occ)))])
             n_cb = int(self.inc.aux.bmat.shape[1])
-            self.inc.mat = dataclasses.replace(
-                mat, tile_cols=mat.tile_cols.at[int(r), int(c)].set(
-                    np.int32(n_cb + 5)))
+            if self._tiered:
+                # the slot tables' truth is the HOST tier — corrupt it
+                # there (the structural check scrubs host tables)
+                self.pool.mat.tile_cols[int(r), int(c)] = np.int32(n_cb + 5)
+            else:
+                self.inc.mat = dataclasses.replace(
+                    mat, tile_cols=mat.tile_cols.at[int(r), int(c)].set(
+                        np.int32(n_cb + 5)))
             return
         # kind == "tile": flip an exponent bit of a LIVE (1.0) entry so the
         # perturbation clears the sum check's 0.25 count tolerance
+        if self._tiered:
+            # corrupt the DEVICE slab copy of a resident tile; host truth
+            # stays clean — exactly the divergence hot.scrub() CRCs for
+            tid_tbl = self.pool.tile_idx2d
+            for rb in rng.permutation(sorted(self.hot._rb_slots)):
+                rb = int(rb)
+                slots = self.hot._rb_slots[rb]
+                tids = tid_tbl[rb][self.pool.tile_cols[rb] >= 0]
+                for tid, slot in zip(tids.tolist(), slots):
+                    t = self.pool.mat.tiles[tid]
+                    nz = np.argwhere(t != 0)
+                    if len(nz):
+                        bi, bj = (int(x) for x in
+                                  nz[int(rng.integers(len(nz)))])
+                        bit = ig.exponent_bit(t.dtype, rng)
+                        new = ig.flipped_float(
+                            np.asarray(t[bi, bj], t.dtype), bit)
+                        self.inc.mat = dataclasses.replace(
+                            mat, tiles=mat.tiles.at[slot, bi, bj].set(new))
+                        self.hot.adopt_view(self.inc.mat)
+                        return
+            raise ValueError("no resident live tile entry to corrupt")
         tid_tbl = np.asarray(mat.tile_idx).reshape(tc.shape)
         for oi in rng.permutation(len(occ)):
             r, c = occ[oi]
@@ -1273,10 +1507,24 @@ class PageRankSession:
             nb_active0 = _NEW_BUCKET_ACTIVE
         g_prev_snap = (self.hg.snapshot(block_size=self.block_size)
                        if variant == "dt" else None)
-        mat_prev = self.inc.mat
         dels_eff, ins_eff = effective_batch(self.hg, deletions, insertions)
-        mat_new = self.inc.advance(self.hg, None, deletions, insertions,
-                                   effective=(dels_eff, ins_eff))
+        rows, cols, vals = signed_edge_delta(dels_eff, ins_eff)
+        if self._tiered:
+            # host tier first: patch host truth, drop residency of the
+            # touched blocks (their slab copies are stale — the admission
+            # below re-gathers them fresh), update the host aux twins.
+            # mat_prev/mat_new stay None: tiered seeding is host-side.
+            plan = self.pool.apply_delta(rows, cols, vals)
+            self.inc.aux.apply_delta(self.block_size, rows, cols, vals)
+            self.hot.invalidate(
+                plan.touched_rb,
+                structure_changed=(plan.tile_cols is not None
+                                   or plan.n_new > plan.n_old))
+            mat_prev = mat_new = None
+        else:
+            mat_prev = self.inc.mat
+            mat_new = self.inc.advance(self.hg, None, deletions, insertions,
+                                       effective=(dels_eff, ins_eff))
         self._hg_prev, self._g_prev = self.hg, None
         self._last_batch = (np.asarray(deletions, np.int64).reshape(-1, 2),
                             np.asarray(insertions, np.int64).reshape(-1, 2))
@@ -1291,7 +1539,6 @@ class PageRankSession:
         # patch the device-resident operand mirrors in O(batch): only the
         # bucketed signed delta crosses host→device, never the graph-sized
         # vectors
-        rows, cols, vals = signed_edge_delta(dels_eff, ins_eff)
         scatter_fault, self._scatter_fault = self._scatter_fault, None
         if len(rows):
             b_pad = ops.capacity_bucket(len(rows), ops.DELTA_BATCH_BUCKET)
@@ -1317,11 +1564,23 @@ class PageRankSession:
             ).astype(self._out_deg_host.dtype)
 
         batch_dev = fr.pack_batch(self.n_pad, deletions, insertions)
+        seed_idx = None
         if variant == "df":
-            affected = _seed_affected(
-                mat_prev, mat_new, self._bmat, batch_dev, self.valid,
-                block_size=self.block_size, interpret=self.interpret,
-                backend=self.backend)
+            if self._tiered:
+                # host-side DF seed (paper Alg. 1 lines 4-6) through the
+                # sorted host key sets — needs no device pull matrices, and
+                # only the bucketed index list crosses to the device
+                dels_a = np.asarray(deletions, np.int64).reshape(-1, 2)
+                ins_a = np.asarray(insertions, np.int64).reshape(-1, 2)
+                sources = np.concatenate([dels_a[:, 0], ins_a[:, 0]])
+                seed_idx = dist.df_seed_indices(self._hg_prev, self.hg,
+                                                sources)
+                affected = self._mask_from_indices(seed_idx)
+            else:
+                affected = _seed_affected(
+                    mat_prev, mat_new, self._bmat, batch_dev, self.valid,
+                    block_size=self.block_size, interpret=self.interpret,
+                    backend=self.backend)
             R0, expand = self.R, True
         elif variant == "dt":
             g_new_snap = self.hg.snapshot(block_size=self.block_size)
@@ -1333,13 +1592,32 @@ class PageRankSession:
             affected = self.valid
             R0 = jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype)
             expand = False
+        if self._tiered:
+            # tiered drives always expand: the refill loop is block-Jacobi
+            # over residency partitions, and only frontier expansion
+            # re-marks a resident block whose non-resident inputs moved in
+            # a later round (docs/SCALE.md §Miss semantics)
+            expand = True
+            # frontier-biased admission BEFORE the drive: delta-touched
+            # blocks ∪ seed blocks ∪ their tile-adjacent candidates (the
+            # first expansion wave) — ONE batched gather per step
+            want = [np.asarray(plan.touched_rb, np.int64)]
+            if seed_idx is not None and len(seed_idx):
+                srb = np.unique(np.asarray(seed_idx, np.int64)
+                                // self.block_size)
+                want += [srb, np.nonzero(
+                    self.inc.aux.bmat[:, srb].any(axis=1))[0]]
+            self._admit(np.concatenate(want))
+            key_mat = self.inc.mat
+        else:
+            key_mat = mat_new
 
         # first visit to an operand bucket (tile capacity × slot width ×
         # expand flag) legitimately compiles once — the doubling ladder's
         # documented cost.  Record the visit BEFORE driving so the growth
         # observed below can be attributed to it.
-        dkey = (int(mat_new.tiles.shape[0]),
-                int(mat_new.tile_cols.shape[1]), bool(expand))
+        dkey = (int(key_mat.tiles.shape[0]),
+                int(key_mat.tile_cols.shape[1]), bool(expand))
         new_bucket = dkey not in self._driver_keys
         self._driver_keys.add(dkey)
 
@@ -1348,7 +1626,7 @@ class PageRankSession:
                 _NEW_BUCKET_STARTED += 1
                 _NEW_BUCKET_ACTIVE += 1
         try:
-            R, stats = self._drive(R0, affected, expand=expand)
+            R, stats = self._drive_refill(R0, affected, expand=expand)
         finally:
             if new_bucket:
                 with _RETRACE_LOCK:
@@ -1485,7 +1763,10 @@ class PageRankSession:
                   jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype))
             if self._stream:
                 t0 = time.perf_counter()
-                R, stats = self._drive(R0, self.valid, expand=False)
+                R, stats = self._drive_refill(
+                    R0, self.valid, expand=self._tiered,
+                    want_rb=(np.arange(self.n_rb) if self._tiered
+                             else None))
                 self.R = R
                 return PagerankResult(ranks=R, stats=stats,
                                       wall_time_s=time.perf_counter() - t0)
@@ -1508,7 +1789,11 @@ class PageRankSession:
             affected = fr.dt_affected(g_prev, g_cur, batch_dev)
         R0 = pad_ranks(g_cur, self._r_prev)
         mat = aux = None
-        if self._stream:    # reuse the incrementally maintained operands
+        if self._stream and not self._tiered:
+            # reuse the incrementally maintained operands; tiered sessions
+            # hold only a partial device view, so their dt/df replay (an
+            # explicitly O(m) what-if path) rebuilds a full throwaway
+            # matrix from the snapshot instead
             mat, aux = self.inc.mat, self.inc.aux
         return self._converge(R0, affected, expand=(variant == "df"),
                               g=g_cur, mat=mat, aux=aux)
@@ -1702,7 +1987,8 @@ class PageRankSession:
         for attr in ("R", "inc", "runtime", "g", "valid", "_out_deg",
                      "_rb_in", "_rb_out", "_bmat", "_fault_tables",
                      "_r_prev", "store", "_process_domain", "walks",
-                     "_r_verified", "_out_deg_host", "_corruption_faults"):
+                     "_r_verified", "_out_deg_host", "_corruption_faults",
+                     "pool", "hot", "_rb_res_full", "_deferred_rb"):
             if hasattr(self, attr):
                 setattr(self, attr, None)
 
@@ -1839,7 +2125,16 @@ class PageRankSession:
             return
         if self._stream:
             z = np.zeros(1, np.int64)
-            self.inc.mat = ops.apply_delta(self.inc.mat, z, z, np.zeros(1))
+            if self._tiered:
+                # warm the host-tier delta path and the invalidate →
+                # re-admit gather at the base bucket (values all zero, so
+                # state is unperturbed)
+                self.pool.apply_delta(z, z, np.zeros(1))
+                self.hot.invalidate(np.zeros(1, np.int64))
+                self._admit(np.zeros(1, np.int64))
+            else:
+                self.inc.mat = ops.apply_delta(self.inc.mat, z, z,
+                                               np.zeros(1))
             empty = np.zeros((0, 2), np.int64)
             # not recorded in history, and the dt/df replay state must not
             # see the empty warmup batch as "the last update"
@@ -1883,6 +2178,7 @@ class PageRankSession:
                 "scrub_interval_s": (float(icfg.scrub_interval_s)
                                      if icfg is not None else None),
             }
+        dev_bytes = self._device_bytes()
         spec = self._shard_spec
         wire = None
         if spec is not None:
@@ -1923,7 +2219,39 @@ class PageRankSession:
             replayed_batches=sum(r.replayed_batches
                                  for r in self._recoveries),
             recovery_events=[r.to_dict() for r in self._recoveries],
-            integrity=integrity)
+            integrity=integrity,
+            tiering=(self.hot.stats() if self._tiered
+                     and self.hot is not None else None),
+            device_bytes=dev_bytes,
+            bytes_per_vertex=(sum(dev_bytes.values()) / max(self.n, 1)
+                              if dev_bytes is not None else None))
+
+    def _device_bytes(self) -> Optional[dict]:
+        """Per-component device-resident bytes (the ``report()`` memory
+        audit).  ``None`` for sharded topologies, whose state is accounted
+        per device by the wire model instead."""
+        if self._sharded or self._closed:
+            return None
+
+        def _nb(*arrs):
+            return int(sum(a.nbytes for a in arrs
+                           if a is not None and hasattr(a, "nbytes")))
+
+        out = {"ranks": _nb(self.R, self.valid)}
+        if self._stream:
+            mat = self.inc.mat
+            out["tile_pool"] = _nb(mat.tiles)
+            out["slot_tables"] = _nb(mat.tile_cols, mat.tile_idx)
+            out["operand_mirrors"] = _nb(self._out_deg, self._rb_in,
+                                         self._rb_out, self._bmat)
+            if self._tiered:
+                out["slot_tables"] += _nb(self.hot.rb_res)
+        elif self.g is not None:
+            out["graph_snapshot"] = _nb(*jax.tree_util.tree_leaves(self.g))
+        if self._walk and getattr(self, "walks", None) is not None:
+            out["walk_buffers"] = _nb(*(v for v in vars(self.walks).values()
+                                        if isinstance(v, jnp.ndarray)))
+        return out
 
     # -- what-if branching ---------------------------------------------------
     def fork(self) -> "PageRankSession":
@@ -1967,6 +2295,13 @@ class PageRankSession:
                 MatrixAux(bmat=aux.bmat.copy(), rb_in=aux.rb_in.copy(),
                           rb_out=aux.rb_out.copy())
                 if aux is not None else None)
+        if self._tiered:
+            # both tiers branch: the host pool copies (numpy is mutable),
+            # the hot set forks over it (the immutable device slab is
+            # shared until either side's admissions diverge it)
+            new.pool = self.pool.copy()
+            new.hot = self.hot.fork(new.pool)
+            new._deferred_rb = None
         if self._sharded:
             new.runtime = self.runtime.fork()
         if self._walk:

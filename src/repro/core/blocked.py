@@ -56,14 +56,24 @@ class SweepStats:
 
 
 def _slot_body(g: GraphSnapshot, *, tile: int, expand: bool, jacobi: bool,
-               alpha, tau, tau_f, dtype):
+               alpha, tau, tau_f, dtype, edges=None):
     """Returns the scan body processing one compacted block slot.
 
     ``alpha``/``tau``/``tau_f`` may be traced scalars — they participate
-    only in arithmetic, never in shapes."""
+    only in arithmetic, never in shapes.  ``edges`` (optional) is a paged
+    edge view — ``(src, dst, osrc, odst, in_lo, in_len, out_lo, out_len)``
+    from :class:`repro.core.tiering.EdgePager` — that redirects the
+    per-block edge reads into a bounded device slab; ``None`` reads the
+    snapshot's full device-resident CSR arrays, bit-identically to before
+    the pager existed."""
     B = g.block_size
     T = tile
     n_pad = g.n_pad
+    if edges is None:
+        e_src, e_dst, e_osrc, e_odst = g.src, g.dst, g.osrc, g.odst
+        in_lo = in_len = out_lo = out_len = None
+    else:
+        e_src, e_dst, e_osrc, e_odst, in_lo, in_len, out_lo, out_len = edges
     iota = jnp.arange(T, dtype=jnp.int32)
     base_rank = ((1.0 - jnp.asarray(alpha, dtype)) / g.n).astype(dtype)
     alpha_c = jnp.asarray(alpha, dtype)
@@ -77,8 +87,12 @@ def _slot_body(g: GraphSnapshot, *, tile: int, expand: bool, jacobi: bool,
         bsafe = jnp.maximum(b, 0)
         base = bsafe * B
 
-        lo = g.in_block_ptr[bsafe]
-        hi = g.in_block_ptr[bsafe + 1]
+        if edges is None:
+            lo = g.in_block_ptr[bsafe]
+            hi = g.in_block_ptr[bsafe + 1]
+        else:
+            lo = in_lo[bsafe]
+            hi = lo + in_len[bsafe]
         n_tiles = jnp.where(real, (hi - lo + T - 1) // T, 0)
 
         read = R_read if jacobi else R
@@ -86,8 +100,8 @@ def _slot_body(g: GraphSnapshot, *, tile: int, expand: bool, jacobi: bool,
 
         def tile_step(t, acc):
             start = lo + t * T
-            s = lax.dynamic_slice(g.src, (start,), (T,))
-            d = lax.dynamic_slice(g.dst, (start,), (T,))
+            s = lax.dynamic_slice(e_src, (start,), (T,))
+            d = lax.dynamic_slice(e_dst, (start,), (T,))
             ev = (start + iota) < hi
             c = jnp.where(ev, read[jnp.minimum(s, n_pad - 1)] * inv_deg[s], 0)
             lidx = jnp.where(ev, d - base, B).astype(jnp.int32)
@@ -114,15 +128,19 @@ def _slot_body(g: GraphSnapshot, *, tile: int, expand: bool, jacobi: bool,
 
         if expand:
             changed = upd & (dr > tau_f_c)
-            olo = g.out_block_ptr[bsafe]
-            ohi = g.out_block_ptr[bsafe + 1]
+            if edges is None:
+                olo = g.out_block_ptr[bsafe]
+                ohi = g.out_block_ptr[bsafe + 1]
+            else:
+                olo = out_lo[bsafe]
+                ohi = olo + out_len[bsafe]
             n_ot = jnp.where(real & changed.any(), (ohi - olo + T - 1) // T, 0)
 
             def otile(t, st):
                 affected, RC = st
                 start = olo + t * T
-                u = lax.dynamic_slice(g.osrc, (start,), (T,))
-                w = lax.dynamic_slice(g.odst, (start,), (T,))
+                u = lax.dynamic_slice(e_osrc, (start,), (T,))
+                w = lax.dynamic_slice(e_odst, (start,), (T,))
                 ev = (start + iota) < ohi
                 lsrc = jnp.clip(u - base, 0, B - 1)
                 flag = ev & changed[lsrc]
@@ -146,16 +164,19 @@ def _slot_body(g: GraphSnapshot, *, tile: int, expand: bool, jacobi: bool,
 
 @partial(jax.jit, static_argnames=("tile", "expand", "jacobi", "dtype_name"))
 def sweep(g: GraphSnapshot, R, affected, RC, slot_ids, slot_mask,
-          R_read, alpha, tau, tau_f, *, tile: int, expand: bool,
+          R_read, alpha, tau, tau_f, edges=None, *, tile: int, expand: bool,
           jacobi: bool, dtype_name: str):
     """One compacted sweep over up to K = len(slot_ids) active blocks.
 
     α/τ/τ_f are traced operands: changing them reuses the jit cache entry
     (one compilation per (snapshot family, K, structure), not per
-    hyperparameter point — a τ sweep costs one compile)."""
+    hyperparameter point — a τ sweep costs one compile).  ``edges``
+    (optional) is an :class:`repro.core.tiering.EdgePager` view: the sweep
+    then reads per-block edge slices from the pager's bounded slab (stable
+    shapes — one extra cache entry per K, not per staging)."""
     dtype = jnp.dtype(dtype_name)
     body = _slot_body(g, tile=tile, expand=expand, jacobi=jacobi, alpha=alpha,
-                      tau=tau, tau_f=tau_f, dtype=dtype)
+                      tau=tau, tau_f=tau_f, dtype=dtype, edges=edges)
     carry = (R, R_read, affected, RC, jnp.zeros((), dtype))
     (R, _, affected, RC, maxdr), (edges,) = lax.scan(
         body, carry, (slot_ids, slot_mask))
@@ -203,7 +224,7 @@ def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
                 alpha: float = 0.85, tau: float = 1e-10,
                 tau_f: Optional[float] = None, max_iterations: int = 500,
                 tile: int = 512, faults: Optional[flt.FaultPlan] = None,
-                active_policy: str = "affected",
+                active_policy: str = "affected", pager=None,
                 ) -> Tuple[jnp.ndarray, SweepStats]:
     """Driver loop: compaction → fault masking → sweep → convergence check.
 
@@ -219,6 +240,13 @@ def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
                    §4.3); any change > τ_f re-marks downstream RC flags, so
                    the τ_f error bound is unchanged.  Beyond-paper
                    optimization measured in §Perf.
+
+    pager (optional, a :class:`repro.core.tiering.EdgePager` over ``g``)
+    keeps the snapshot's edge arrays on the host and stages only each
+    sweep's active blocks into a bounded device slab — the blocked
+    oracle's analogue of the tiered tile pool.  The oracle already syncs
+    per sweep, so staging rides the existing round-trip; results are
+    identical to the unpaged run (same slices, different addresses).
     """
     if mode not in ("lf", "bb"):
         raise ValueError(mode)
@@ -254,6 +282,10 @@ def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
         # capacity shrinks with the frontier — the static-shape work pool)
         K = slot_capacity(n_act, g.n_blocks)
         ids = ids_full[:K]
+        # paged edges: stage this sweep's active blocks into the slab (the
+        # ids are already on host from the n_act sync — no extra round-trip)
+        edges = (pager.ensure(np.asarray(ids_full)[:n_act])
+                 if pager is not None else None)
 
         # dynamic scheduling (paper §3.3.2): compacted slots are drawn from a
         # global pool by the threads *participating* this sweep — a delayed or
@@ -277,13 +309,13 @@ def run_blocked(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
         slot_mask = jnp.asarray(slot_mask_np)
 
         # functional freeze: in Jacobi mode the body reads the sweep-start R
-        R, affected, RC, maxdr, edges = sweep(
+        R, affected, RC, maxdr, edge_ct = sweep(
             g, R, affected, RC, ids, slot_mask, R,
             jnp.asarray(alpha, dtype), jnp.asarray(tau, dtype),
-            jnp.asarray(tau_f, dtype), tile=tile, expand=expand,
+            jnp.asarray(tau_f, dtype), edges, tile=tile, expand=expand,
             jacobi=jacobi, dtype_name=dtype_name)
 
-        edges_np = np.asarray(edges)
+        edges_np = np.asarray(edge_ct)
         mask_np = np.asarray(slot_mask)
         thread_edges = np.bincount(assign[mask_np],
                                    weights=edges_np[mask_np],

@@ -84,18 +84,29 @@ def default_interpret() -> bool:
 
 @partial(jax.jit, static_argnames=("n", "block_size", "mode", "expand",
                                    "active_policy", "max_iterations",
-                                   "interpret", "backend"))
+                                   "interpret", "backend", "tiered"))
 def _driver(mat: ops.BlockSparse, R0, affected0, valid, out_deg,
-            rb_in, rb_out, bmat, alpha, tau, tau_f,
+            rb_in, rb_out, bmat, rb_res, alpha, tau, tau_f,
             part_table, alive_table, delay_table, crashed_any, *,
             n: int, block_size: int, mode: str, expand: bool,
             active_policy: str, max_iterations: int, interpret: bool,
-            backend: str):
-    """The fused loop.  Returns (ranks [n_pad], stats vector [7]).
+            backend: str, tiered: bool = False):
+    """The fused loop.  Returns (ranks [n_pad], stats vector [7],
+    deferred row-block indicator [n_rb]).
 
     Every operand keeps a stable shape across a dynamic stream (the pull
     matrix is capacity-padded; the degree/adjacency vectors are per-block,
     the grid is fixed), so a stream re-enters one compiled trace.
+
+    ``tiered=True`` (tiered storage, :mod:`repro.core.tiering`): ``mat`` is
+    the device *hot-slab view* and ``rb_res`` marks which row-blocks are
+    resident.  A non-resident block is never swept — seeds landing in it and
+    expansion candidates touching it are recorded in the ``deferred``
+    indicator instead (the whole block is re-marked, mirroring the helping
+    mechanism: another drive picks the work up after admission, with **no
+    mid-sweep host sync**).  The caller loops admit(deferred) → re-drive
+    until the indicator is empty.  Untiered callers pass ``rb_res`` all-True
+    and get an all-False indicator back.
     """
     dtype = R0.dtype
     B = block_size
@@ -118,14 +129,21 @@ def _driver(mat: ops.BlockSparse, R0, affected0, valid, out_deg,
 
     R = jnp.where(valid, R0[:n_pad], 0).astype(dtype)
     affected = affected0[:n_pad] & valid
+    if tiered:
+        # seeds in non-resident blocks are deferred wholesale before the loop
+        res_v = jnp.repeat(rb_res, B)
+        deferred0 = fr.block_any(affected & ~res_v, n_rb, B)
+        affected = affected & res_v
+    else:
+        deferred0 = jnp.zeros((n_rb,), bool)
     RC = affected
 
     def cond(state):
-        (_, _, _, it, converged, dnf, _) = state
+        (_, _, _, it, converged, dnf, _, _) = state
         return ~converged & ~dnf & (it < max_iterations)
 
     def body(state):
-        R, affected, RC, it, converged, dnf, ctr = state
+        R, affected, RC, it, converged, dnf, deferred, ctr = state
         act_flags = affected if active_policy == "affected" else RC
         act_rb = fr.block_any(act_flags, n_rb, B)
         n_act = act_rb.sum()
@@ -161,6 +179,11 @@ def _driver(mat: ops.BlockSparse, R0, affected0, valid, out_deg,
             changed = upd & (dr > tau_f_c)
             ch_cb = fr.block_any(changed, n_rb, B)
             cand_rb = (bmat & ch_cb[None, :]).any(axis=1)
+            if tiered:
+                # candidate blocks not on device: defer (re-mark for the
+                # next drive after admission) instead of syncing mid-sweep
+                deferred = deferred | (cand_rb & ~rb_res & do)
+                cand_rb = cand_rb & rb_res
             n_cand = jnp.where(do, cand_rb.sum(), 0)
             cids = jnp.where(do, fr.compact_block_ids(cand_rb, n_rb), -1)
             hitf = ops.block_spmv_active_bucketed(
@@ -207,7 +230,13 @@ def _driver(mat: ops.BlockSparse, R0, affected0, valid, out_deg,
         if jacobi:
             conv_after = do & (maxdr <= tau_c)
         else:
-            conv_after = do & ~(RC1 & valid).any()
+            # RC-empty is the paper's LF criterion; the maxdr escape stops
+            # a float limit cycle: when τ_f sits below the ulp floor, a
+            # period-2 fixed point jitters forever above τ_f and the
+            # expansion re-marks RC every sweep even though no vertex has
+            # moved more than τ — abandoning that sub-τ wave inflates the
+            # error by at most τ·α/(1−α), the paper's own stability bound
+            conv_after = do & ((maxdr <= tau_c) | ~(RC1 & valid).any())
         converged1 = converged | no_work | conv_after
         dnf1 = dnf | crash_now
 
@@ -217,20 +246,22 @@ def _driver(mat: ops.BlockSparse, R0, affected0, valid, out_deg,
                 blocks + jnp.where(do, n_act, 0).astype(cdt),
                 edges + e_sweep,
                 sim + step_ms.astype(jnp.float32))
-        return (r_fin, affected1, RC1, it + 1, converged1, dnf1, ctr1)
+        return (r_fin, affected1, RC1, it + 1, converged1, dnf1, deferred,
+                ctr1)
 
     zero = jnp.zeros((), cdt)
     init = (R, affected, RC, jnp.int32(0), jnp.asarray(False),
-            jnp.asarray(False), (zero, zero, zero, zero,
-                                 jnp.zeros((), jnp.float32)))
-    R, _, _, _, converged, dnf, ctr = lax.while_loop(cond, body, init)
+            jnp.asarray(False), deferred0,
+            (zero, zero, zero, zero, jnp.zeros((), jnp.float32)))
+    R, _, _, _, converged, dnf, deferred, ctr = lax.while_loop(
+        cond, body, init)
     sweeps, iters, blocks, edges, sim = ctr
     fdt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     stats = jnp.stack([sweeps.astype(fdt), iters.astype(fdt),
                        blocks.astype(fdt), edges.astype(fdt),
                        sim.astype(fdt), converged.astype(fdt),
                        dnf.astype(fdt)])
-    return R, stats
+    return R, stats, deferred
 
 
 def _stats_from_vec(sv: np.ndarray) -> SweepStats:
@@ -295,9 +326,10 @@ def run_pallas(g: GraphSnapshot, R0: jnp.ndarray, affected0: jnp.ndarray,
 
     part, alive, delay, crashed = plan.device_tables(max_iterations)
     f = jnp.asarray
-    R, stats_vec = _driver(
+    rb_res = jnp.ones((mat.n_rb,), bool)    # untiered: everything resident
+    R, stats_vec, _ = _driver(
         mat, R0[:g.n_pad], affected0[:g.n_pad], g.vertex_valid, g.out_deg,
-        rb_in, rb_out, bmat,
+        rb_in, rb_out, bmat, rb_res,
         f(alpha), f(tau), f(tau_f),
         f(part), f(alive), f(delay), f(crashed),
         n=g.n, block_size=g.block_size, mode=mode, expand=expand,

@@ -49,6 +49,21 @@ SLOT_CAP_BASE = 4        # minimum per-row slot-table width bucket
 DELTA_BATCH_BUCKET = 64  # minimum padded edge-batch length for the scatter
 ACTIVE_LADDER_BASE = 8   # smallest active-block grid bucket
 
+I32_MAX = np.iinfo(np.int32).max
+
+
+def check_i32(count: int, what: str) -> None:
+    """Guard for the int32 index diet: slot tables, tile ids and block
+    indices are stored 32-bit (half the slot-table footprint of int64),
+    which is sufficient below 2^31 entries.  Past that the narrow layout
+    would silently alias — fail loudly at the boundary instead."""
+    if count > I32_MAX:
+        raise OverflowError(
+            f"{what} count {count} exceeds the int32 index range "
+            f"({I32_MAX}); the 32-bit slot-table/index layout cannot "
+            "address it — shard the graph (topology='sharded') or raise "
+            "block_size so per-structure counts stay below 2^31")
+
 
 def capacity_bucket(n: int, base: int = TILE_CAP_BASE) -> int:
     """Smallest power-of-two multiple of ``base`` ≥ n (doubling ladder).
@@ -145,28 +160,38 @@ def _slot_tables(tiles_rb: np.ndarray, tiles_cb: np.ndarray, n_rb: int,
     ``t - row_start[rb(t)]`` — no Python loop.
     """
     n_tiles = len(tiles_rb)
+    check_i32(n_tiles, "tile")
     per_row = np.bincount(tiles_rb, minlength=n_rb)
     max_tiles = max(min_max_tiles, int(per_row.max(initial=1)))
     row_start = np.zeros(n_rb + 1, dtype=np.int64)
     np.cumsum(per_row, out=row_start[1:])
-    slot = np.arange(n_tiles, dtype=np.int64) - row_start[tiles_rb]
+    # int32 diet: tile ids and in-row slots are < 2^31 (guarded above), so
+    # the O(n_tiles) bookkeeping intermediates stay 32-bit like the tables
+    slot = (np.arange(n_tiles, dtype=np.int32)
+            - row_start[tiles_rb].astype(np.int32))
     tile_cols = np.full((n_rb, max_tiles), -1, dtype=np.int32)
     tile_idx = np.zeros((n_rb, max_tiles), dtype=np.int32)
     tile_cols[tiles_rb, slot] = tiles_cb
-    tile_idx[tiles_rb, slot] = np.arange(n_tiles, dtype=np.int64)
+    tile_idx[tiles_rb, slot] = np.arange(n_tiles, dtype=np.int32)
     return tile_cols, tile_idx, max_tiles
 
 
 def build_block_sparse(rows: np.ndarray, cols: np.ndarray, n_rows: int,
                        n_cols: int, *, block: int = 128,
                        values: Optional[np.ndarray] = None,
-                       dtype=np.float32, padded: bool = False) -> BlockSparse:
+                       dtype=np.float32, padded: bool = False,
+                       to_device: bool = True) -> BlockSparse:
     """Build tiles from an edge list: A[rows[k], cols[k]] = values[k] (or 1).
 
     ``padded=True`` preallocates the tile pool and the slot tables on the
     growth ladder (:func:`capacity_bucket`), the layout a dynamic stream
     should use: :func:`apply_delta` can then add tiles without changing
     ``tiles.shape`` / ``max_tiles`` until a bucket overflows.
+
+    ``to_device=False`` keeps the tile pool and slot tables as numpy
+    arrays — the **host tier** layout of :mod:`repro.core.tiering`, where
+    the full pool never touches the device and only a bounded hot set of
+    row-blocks is gathered into a device slab.
     """
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
@@ -199,10 +224,95 @@ def build_block_sparse(rows: np.ndarray, cols: np.ndarray, n_rows: int,
     tile_cols, tile_idx, max_tiles = _slot_tables(tiles_rb, tiles_cb, n_rb,
                                                   min_max_tiles=min_mt)
 
+    if not to_device:
+        return BlockSparse(
+            n_rows=n_rows, n_cols=n_cols, block=block, max_tiles=max_tiles,
+            tiles=tiles, tile_cols=tile_cols,
+            tile_idx=tile_idx.reshape(-1))
     return BlockSparse(
         n_rows=n_rows, n_cols=n_cols, block=block, max_tiles=max_tiles,
         tiles=jnp.asarray(tiles), tile_cols=jnp.asarray(tile_cols),
         tile_idx=jnp.asarray(tile_idx.reshape(-1)))
+
+
+@dataclasses.dataclass
+class DeltaPlan:
+    """Host-side bookkeeping for one delta batch against a block-sparse
+    structure: where every edge lands (``tid``) plus the rebuilt slot
+    tables when the batch opened new (row-block, col-block) pairs.
+
+    The plan is *scatter-agnostic*: :func:`apply_delta` feeds it to the
+    jitted device scatter, the host tier
+    (:class:`repro.core.tiering.HostTilePool`) to a numpy ``add.at`` —
+    the two tiers share one bookkeeping path so they cannot diverge."""
+    tid: np.ndarray                    # [b] target tile id per edge
+    n_old: int                         # live tiles before the batch
+    n_new: int                         # tiles the batch appends
+    tile_cols: Optional[np.ndarray]    # rebuilt [n_rb, mt'] (None: unchanged)
+    tile_idx: Optional[np.ndarray]     # rebuilt [n_rb, mt'] (None: unchanged)
+    max_tiles: int                     # post-batch slot width
+    touched_rb: np.ndarray             # unique row-blocks the batch lands in
+
+    @property
+    def n_live(self) -> int:
+        return self.n_old + self.n_new
+
+
+def plan_delta(tile_cols_h: np.ndarray, tile_idx_h: np.ndarray,
+               rows: np.ndarray, cols: np.ndarray, *, n_cb: int,
+               block: int, max_tiles: int) -> DeltaPlan:
+    """Resolve a delta batch against host copies of the slot tables:
+    per-edge target tile ids, appended-tile count, and (when new tiles
+    appear) merged slot tables on the :data:`SLOT_CAP_BASE` width ladder.
+    Index-sized work only — never touches tile data."""
+    n_rb = tile_cols_h.shape[0]
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    key = (rows // block) * n_cb + (cols // block)
+
+    occ = tile_cols_h >= 0
+    ex_rb, ex_slot = np.nonzero(occ)
+    ex_key = ex_rb * n_cb + tile_cols_h[ex_rb, ex_slot]
+    ex_tid = tile_idx_h[ex_rb, ex_slot]
+    order = np.argsort(ex_key)
+    sk, st = ex_key[order], ex_tid[order]
+
+    pos = np.searchsorted(sk, key)
+    pos_c = np.clip(pos, 0, max(len(sk) - 1, 0))
+    found = (sk[pos_c] == key) if len(sk) else np.zeros(len(key), bool)
+
+    # live tile count: capacity padding means tiles.shape[0] is an upper
+    # bound, but every live tile is referenced by some slot
+    n_old = int(ex_tid.max()) + 1 if len(ex_tid) else 0
+    new_keys = np.unique(key[~found])
+    check_i32(n_old + len(new_keys), "tile")
+    tid = np.where(found, st[pos_c] if len(sk) else 0,
+                   n_old + np.searchsorted(new_keys, key))
+
+    tile_cols_np = tile_idx_np = None
+    out_mt = max_tiles
+    if len(new_keys):
+        # merge old + new coordinates, re-deriving slots (cheap: index-sized)
+        all_key = np.concatenate([ex_key, new_keys])
+        all_tid = np.concatenate([ex_tid, n_old + np.arange(len(new_keys))])
+        order = np.argsort(all_key)
+        all_key, all_tid = all_key[order], all_tid[order]
+        t_rb = (all_key // n_cb).astype(np.int32)
+        t_cb = (all_key % n_cb).astype(np.int32)
+        per_row_max = int(np.bincount(t_rb, minlength=n_rb).max(initial=1))
+        min_mt = max_tiles if per_row_max <= max_tiles else \
+            capacity_bucket(per_row_max, SLOT_CAP_BASE)
+        tile_cols_np, idx_pos, out_mt = _slot_tables(
+            t_rb, t_cb, n_rb, min_max_tiles=min_mt)
+        # _slot_tables numbers tiles 0..n-1 in sorted order; map to real ids
+        tile_idx_np = np.zeros_like(idx_pos)
+        occ2 = tile_cols_np >= 0
+        tile_idx_np[occ2] = all_tid[idx_pos[occ2]]
+
+    return DeltaPlan(
+        tid=tid, n_old=n_old, n_new=len(new_keys),
+        tile_cols=tile_cols_np, tile_idx=tile_idx_np, max_tiles=out_mt,
+        touched_rb=np.unique(rows // block).astype(np.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("block",))
@@ -250,34 +360,16 @@ def apply_delta(mat: BlockSparse, rows: np.ndarray, cols: np.ndarray,
             f"{B}); a grid-size change requires a rebuild with "
             f"build_block_sparse / IncrementalPullMatrix.from_snapshot")
 
-    key = (rows // B) * n_cb + (cols // B)
-
-    # current tile table (host copies of the small index arrays only)
-    tile_cols_h = np.asarray(mat.tile_cols)
-    tile_idx_h = np.asarray(mat.tile_idx).reshape(n_rb, mat.max_tiles)
-    occ = tile_cols_h >= 0
-    ex_rb, ex_slot = np.nonzero(occ)
-    ex_key = ex_rb * n_cb + tile_cols_h[ex_rb, ex_slot]
-    ex_tid = tile_idx_h[ex_rb, ex_slot]
-    order = np.argsort(ex_key)
-    sk, st = ex_key[order], ex_tid[order]
-
-    pos = np.searchsorted(sk, key)
-    pos_c = np.clip(pos, 0, max(len(sk) - 1, 0))
-    found = (sk[pos_c] == key) if len(sk) else np.zeros(len(key), bool)
-
-    # live tile count: capacity padding means tiles.shape[0] is an upper
-    # bound, but every live tile is referenced by some slot
-    n_old = int(ex_tid.max()) + 1 if len(ex_tid) else 0
-    new_keys = np.unique(key[~found])
-    tid = np.where(found, st[pos_c] if len(sk) else 0,
-                   n_old + np.searchsorted(new_keys, key))
+    # host bookkeeping shared with the host tier (repro.core.tiering)
+    plan = plan_delta(
+        np.asarray(mat.tile_cols),
+        np.asarray(mat.tile_idx).reshape(n_rb, mat.max_tiles),
+        rows, cols, n_cb=n_cb, block=B, max_tiles=mat.max_tiles)
 
     tiles = mat.tiles
-    n_live = n_old + len(new_keys)
-    if n_live > tiles.shape[0]:
+    if plan.n_live > tiles.shape[0]:
         # tile-pool bucket overflow → grow to the next capacity bucket
-        cap = capacity_bucket(n_live)
+        cap = capacity_bucket(plan.n_live)
         tiles = jnp.concatenate(
             [tiles, jnp.zeros((cap - tiles.shape[0], B, B), tiles.dtype)])
 
@@ -287,37 +379,21 @@ def apply_delta(mat: BlockSparse, rows: np.ndarray, cols: np.ndarray,
     z = np.zeros(pad, np.int32)
     tiles = _scatter_delta(
         tiles,
-        jnp.asarray(np.concatenate([tid.astype(np.int32), z])),
+        jnp.asarray(np.concatenate([plan.tid.astype(np.int32), z])),
         jnp.asarray(np.concatenate([(rows % B).astype(np.int32), z])),
         jnp.asarray(np.concatenate([(cols % B).astype(np.int32), z])),
         jnp.asarray(np.concatenate([vals, np.zeros(pad, vals.dtype)])),
         block=B)
 
     tile_cols_out, tile_idx_out = mat.tile_cols, mat.tile_idx
-    max_tiles = mat.max_tiles
-    if len(new_keys):
-        # merge old + new coordinates, re-deriving slots (cheap: index-sized)
-        all_key = np.concatenate([ex_key, new_keys])
-        all_tid = np.concatenate([ex_tid, n_old + np.arange(len(new_keys))])
-        order = np.argsort(all_key)
-        all_key, all_tid = all_key[order], all_tid[order]
-        t_rb = (all_key // n_cb).astype(np.int64)
-        t_cb = (all_key % n_cb).astype(np.int64)
-        per_row_max = int(np.bincount(t_rb, minlength=n_rb).max(initial=1))
-        min_mt = mat.max_tiles if per_row_max <= mat.max_tiles else \
-            capacity_bucket(per_row_max, SLOT_CAP_BASE)
-        tile_cols_np, idx_pos, max_tiles = _slot_tables(
-            t_rb, t_cb, n_rb, min_max_tiles=min_mt)
-        # _slot_tables numbers tiles 0..n-1 in sorted order; map to real ids
-        tile_idx_np = np.zeros_like(idx_pos)
-        occ2 = tile_cols_np >= 0
-        tile_idx_np[occ2] = all_tid[idx_pos[occ2]]
-        tile_cols_out = jnp.asarray(tile_cols_np)
-        tile_idx_out = jnp.asarray(tile_idx_np.reshape(-1))
+    if plan.tile_cols is not None:
+        tile_cols_out = jnp.asarray(plan.tile_cols)
+        tile_idx_out = jnp.asarray(plan.tile_idx.reshape(-1))
 
     return BlockSparse(
-        n_rows=mat.n_rows, n_cols=mat.n_cols, block=B, max_tiles=max_tiles,
-        tiles=tiles, tile_cols=tile_cols_out, tile_idx=tile_idx_out)
+        n_rows=mat.n_rows, n_cols=mat.n_cols, block=B,
+        max_tiles=plan.max_tiles, tiles=tiles, tile_cols=tile_cols_out,
+        tile_idx=tile_idx_out)
 
 
 # ---------------------------------------------------------------------------

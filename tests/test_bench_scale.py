@@ -1,0 +1,50 @@
+"""Smoke wiring for the tiered scaling bench (benchmarks/scale.py).
+
+Runs the CI tier (``--smoke``: n = 4K..16K grids + the adversarial R-MAT
+row) end-to-end and sanity-checks the emitted JSON.  Infrastructure
+failures skip rather than fail — the bench's correctness claims live in
+tests/test_tiering.py; this guards the wiring (ladder, budget fractions,
+JSON schema, parity plumbing).  The default/full tiers and the
+multi-million ``--side`` extension are manual runs (docs/SCALE.md).
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.slow
+def test_scale_bench_smoke(tmp_path):
+    from benchmarks import scale
+
+    out = str(tmp_path / "BENCH_scale.json")
+    try:
+        report = scale.main(smoke=True, out=out)
+    except Exception as e:                      # pragma: no cover
+        pytest.skip(f"scale benchmark infrastructure failed: {e!r}")
+
+    assert os.path.exists(out)
+    with open(out) as f:
+        on_disk = json.load(f)
+    assert on_disk["meta"]["tier"] == "smoke"
+    rows = on_disk["rows"]
+    assert len(rows) == len(scale.SMOKE_LADDER) * len(scale.BUDGET_FRACS) + 2
+    for row in rows:
+        assert row["batches_converged"] == row["batches"], row["graph"]
+        assert row["retraces_post_warmup"] == 0, row["graph"]
+        assert row["bucket_retraces_post_warmup"] == 0, row["graph"]
+        assert 0.0 <= row["hit_rate"] <= 1.0
+        assert row["budget_bytes"] <= row["pool_bytes"]
+        assert row["bytes_per_vertex"] > 0
+        assert row["restore_linf"] == 0.0       # durability is host truth
+        assert row["device_bytes"]["tile_pool"] <= row["budget_bytes"]
+    # at least one row ran under genuine budget pressure
+    assert any(r["budget_frac"] < 1.0 and r["tiering"]["evictions"] > 0
+               for r in rows)
+    parity = on_disk["oracle_parity"]
+    assert parity["oracle_converged"]
+    assert parity["linf"] < 1e-6
+    assert report["oracle_parity"]["linf"] == parity["linf"]

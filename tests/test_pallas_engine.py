@@ -265,6 +265,6 @@ def test_driver_has_no_per_sweep_host_syncs():
                 interpret=True, backend=b),
             mat, pr.initial_ranks(g), g.vertex_valid, g.vertex_valid,
             g.out_deg, g.block_in_edges(), g.block_out_edges(),
-            ops.block_adjacency(mat),
+            ops.block_adjacency(mat), jnp.ones((mat.n_rb,), bool),
             f(0.85), f(1e-10), f(1e-13),
             f(part), f(alive), f(delay), f(crashed))
