@@ -537,11 +537,14 @@ def _smoke_recovery() -> dict:
 
 def _smoke_stream() -> dict:
     """Streaming scenario: K fixed-size delta batches through the
-    recompile-free runtime (core/stream.py) at two graph sizes.  Records
-    per-batch p50/p95 latency, the post-warmup retrace count of the fused
-    driver (must be 0) and the large/small latency ratio — per-batch cost
-    tracking batch size, not graph size, is the streaming acceptance
-    signal."""
+    recompile-free runtime (core/stream.py) at two graph sizes, once per
+    driver (the fused pull driver and the residual forward-push driver on
+    the same tile pool — docs/ENGINES.md).  Records per-batch p50/p95
+    latency, the post-warmup retrace count of each fused driver (must be
+    0), per-driver ``edges_processed`` totals with the pull/push ratio
+    (the push acceptance signal: ≥5× fewer edges at equal L∞), and the
+    large/small latency ratio — per-batch cost tracking batch size, not
+    graph size, is the streaming acceptance signal."""
     import jax.numpy as jnp
     from repro.core import pagerank as pr
     from repro.core.delta import random_batch
@@ -565,20 +568,36 @@ def _smoke_stream() -> dict:
                                      seed=70 + i)
             batch_list.append((dels, ins))
             cur = cur.apply_batch(dels, ins)
-
-        rep = run_stream(hg, batch_list, block_size=64, r0=r0,
-                         active_policy="rc")
         ref = pr.numpy_reference(cur.snapshot(block_size=64), iterations=300)
+
+        reps = {}
+        for driver in ("pull", "push"):
+            reps[driver] = run_stream(hg, batch_list, block_size=64, r0=r0,
+                                      active_policy="rc", driver=driver)
+        rep, prep = reps["pull"], reps["push"]
         p50s.append(rep.p50_s)
-        out["sizes"][str(1 << lg)] = {
-            "n": g.n, "m": g.m,
-            "p50_ms": round(rep.p50_s * 1e3, 3),
-            "p95_ms": round(rep.p95_s * 1e3, 3),
-            "retraces_post_warmup": rep.retraces_post_warmup,
-            "sweeps_last": rep.results[-1].stats.sweeps,
-            "linf_vs_reference": float(pr.linf(
-                rep.final_ranks[:g.n], jnp.asarray(ref[:g.n]))),
-        }
+
+        def _row(r):
+            return {
+                "p50_ms": round(r.p50_s * 1e3, 3),
+                "p95_ms": round(r.p95_s * 1e3, 3),
+                "retraces_post_warmup": r.retraces_post_warmup,
+                "sweeps_last": r.results[-1].stats.sweeps,
+                "edges_processed": int(sum(
+                    b.stats.edges_processed for b in r.results)),
+                "linf_vs_reference": float(pr.linf(
+                    r.final_ranks[:g.n], jnp.asarray(ref[:g.n]))),
+            }
+
+        # the per-size row keeps the historical pull-driver schema at top
+        # level (dashboards key on it) and nests the push row next to it
+        row = {"n": g.n, "m": g.m, **_row(rep), "push": _row(prep)}
+        row["edges_ratio_pull_over_push"] = round(
+            row["edges_processed"] / max(row["push"]["edges_processed"], 1),
+            3)
+        row["p50_delta_ms_push_minus_pull"] = round(
+            (prep.p50_s - rep.p50_s) * 1e3, 3)
+        out["sizes"][str(1 << lg)] = row
     out["latency_ratio_large_over_small"] = round(p50s[-1] / p50s[0], 3)
     return out
 

@@ -27,6 +27,11 @@ Tiers::
     python -m benchmarks.scale            # default: n = 64K..262K
     python -m benchmarks.scale --full     # adds the n = 1M acceptance row
 
+``--driver push`` runs the ladder under the residual forward-push driver
+(same tile pool, work ∝ residual mass — docs/ENGINES.md); the smoke tier
+always appends one push row at half budget so BENCH_scale.json records
+the push-under-tiering datapoint on every CI run.
+
 The multi-million extension beyond ``--full`` (n = 4M, side 2048) is a
 manual run: same command with ``--side 2048`` after confirming ~20 GB of
 host headroom for the tile pool — see docs/SCALE.md for the sizing rule.
@@ -101,12 +106,14 @@ def _reference_ranks(hg) -> np.ndarray:
 
 def _run_row(hg, *, tau: float, batches: int, batch_edges: int,
              budget_frac: float, pool_bytes: int, seed: int,
-             graph_name: str, r0: Optional[np.ndarray] = None) -> dict:
+             graph_name: str, r0: Optional[np.ndarray] = None,
+             driver: str = "pull") -> dict:
     import jax.numpy as jnp
     n = hg.n
     budget = max(int(pool_bytes * budget_frac), 1)
     cfg = EngineConfig(engine="pallas", tau=tau, block_size=64,
-                       dtype="float32", device_budget_bytes=budget)
+                       dtype="float32", device_budget_bytes=budget,
+                       driver=driver)
     t0 = time.perf_counter()
     sess = PageRankSession.from_graph(
         hg, config=cfg, r0=None if r0 is None else jnp.asarray(r0))
@@ -144,6 +151,7 @@ def _run_row(hg, *, tau: float, batches: int, batch_edges: int,
         "graph": graph_name,
         "n": n,
         "m": hg.m,
+        "driver": driver,
         "budget_frac": budget_frac,
         "budget_bytes": budget,
         "pool_bytes": pool_bytes,
@@ -187,7 +195,8 @@ def _oracle_parity(hg, ranks: np.ndarray, *, tau: float) -> dict:
 
 
 def main(*, smoke: bool = False, full: bool = False,
-         side: Optional[int] = None, out: str = OUT) -> dict:
+         side: Optional[int] = None, driver: str = "pull",
+         out: str = OUT) -> dict:
     if smoke:
         ladder = SMOKE_LADDER
     elif full:
@@ -204,6 +213,7 @@ def main(*, smoke: bool = False, full: bool = False,
             "backend": jax.default_backend(),
             "warm_start": "host_reference",
             "budget_fracs": list(BUDGET_FRACS),
+            "driver": driver,
             "generated_unix": int(time.time()),
         },
         "rows": [],
@@ -225,9 +235,9 @@ def main(*, smoke: bool = False, full: bool = False,
             row, ranks, final_hg = _run_row(
                 hg, tau=tau, batches=batches, batch_edges=batch_edges,
                 budget_frac=frac, pool_bytes=pool_b, seed=11 + i,
-                graph_name=f"grid_road({s})", r0=r0)
+                graph_name=f"grid_road({s})", r0=r0, driver=driver)
             report["rows"].append(row)
-            print(f"[scale] {row['graph']} budget={frac} "
+            print(f"[scale] {row['graph']} {driver} budget={frac} "
                   f"p50={row['p50_batch_s']}s hit={row['hit_rate']:.3f} "
                   f"retr={row['retraces_post_warmup']}", flush=True)
             # parity at the LARGEST dense-fitting size: track the biggest
@@ -242,10 +252,28 @@ def main(*, smoke: bool = False, full: bool = False,
     row, ranks, final_hg = _run_row(
         rm, tau=1e-8, batches=3, batch_edges=16, budget_frac=0.5,
         pool_bytes=pool_b, seed=3, graph_name="rmat(2^12)",
-        r0=_reference_ranks(rm))
+        r0=_reference_ranks(rm), driver=driver)
     report["rows"].append(row)
     if parity_candidate is None:
         parity_candidate = (final_hg, ranks, 1e-8)
+
+    # the push-driver datapoint under a budget (driver="push" composes
+    # with tiering: a push to a non-resident row defers into the refill
+    # bitmap — docs/ENGINES.md).  Recorded, not a parity candidate; the
+    # full push ladder is `--driver push`.
+    if smoke and driver == "pull":
+        s0 = SMOKE_LADDER[0][0]
+        hg_push = grid_road(s0, seed=7)
+        row, _, _ = _run_row(
+            hg_push, tau=SMOKE_LADDER[0][1], batches=SMOKE_LADDER[0][2],
+            batch_edges=SMOKE_LADDER[0][3], budget_frac=0.5,
+            pool_bytes=_pool_bytes(hg_push), seed=11,
+            graph_name=f"grid_road({s0})", r0=_reference_ranks(hg_push),
+            driver="push")
+        report["rows"].append(row)
+        print(f"[scale] {row['graph']} push budget=0.5 "
+              f"p50={row['p50_batch_s']}s retr="
+              f"{row['retraces_post_warmup']}", flush=True)
 
     hg_p, ranks_p, tau_p = parity_candidate
     report["oracle_parity"] = _oracle_parity(hg_p, ranks_p, tau=tau_p)
@@ -265,6 +293,11 @@ if __name__ == "__main__":
                     help="adds the n=1M acceptance row")
     ap.add_argument("--side", type=int, default=None,
                     help="manual extension: extra grid side (n = side^2)")
+    ap.add_argument("--driver", choices=("pull", "push"), default="pull",
+                    help="convergence driver for the ladder rows "
+                         "(docs/ENGINES.md; smoke tier always appends one "
+                         "push datapoint)")
     ap.add_argument("--out", default=OUT)
     args = ap.parse_args()
-    main(smoke=args.smoke, full=args.full, side=args.side, out=args.out)
+    main(smoke=args.smoke, full=args.full, side=args.side,
+         driver=args.driver, out=args.out)

@@ -19,6 +19,11 @@ from typing import Any, Optional
 
 MODES = ("lf", "bb")
 ACTIVE_POLICIES = ("affected", "rc")
+# convergence drivers of the streaming pallas engine (docs/ENGINES.md):
+#   "pull" — the fused frontier pull loop (re-pull active blocks to tau);
+#   "push" — the residual forward-push loop (repro.core.push_engine):
+#            work ∝ residual mass, convergence on the L1 residual bound
+DRIVERS = ("pull", "push")
 TOPOLOGIES = ("single", "sharded")
 # contribution-exchange variants the sharded session runtime supports
 EXCHANGES = ("full", "bf16", "delta")
@@ -112,6 +117,15 @@ class EngineConfig:
                     truth + a frontier-biased hot slab of row-blocks sized
                     to this budget (docs/SCALE.md has the sizing rule).
                     Single-topology streaming sessions only.
+    driver:         convergence driver of the streaming pallas engine:
+                    ``"pull"`` (fused frontier pull, the default) or
+                    ``"push"`` (residual forward-push,
+                    :mod:`repro.core.push_engine` — per-batch work
+                    proportional to seeded residual mass instead of
+                    frontier × sweeps; docs/ENGINES.md §Drivers).
+                    ``"push"`` requires the pallas engine in stream mode
+                    (``from_graph``), topology ``"single"``, ``mode="lf"``
+                    and no fault/integrity instrumentation.
     """
 
     alpha: float = 0.85
@@ -138,6 +152,7 @@ class EngineConfig:
     walk_length: Optional[int] = None
     walk_seed: Optional[int] = None
     device_budget_bytes: Optional[int] = None
+    driver: str = "pull"
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -263,6 +278,34 @@ class EngineConfig:
         from repro.api import registry
         eng = registry.resolve(self._engine_for_resolution())
         registry.resolve_backend(self.backend)
+        # -- driver axis (pull vs residual forward-push; docs/ENGINES.md) ----
+        if self.driver not in DRIVERS:
+            raise ValueError(
+                f"driver={self.driver!r} invalid; expected one of {DRIVERS}")
+        if self.driver == "push":
+            if eng.name != "pallas":
+                raise ValueError(
+                    "driver='push' is the residual forward-push mode of the "
+                    f"streaming pallas engine; engine resolves to "
+                    f"{eng.name!r} — pass engine='pallas' (or leave the "
+                    "default) to select it")
+            if self.mode != "lf":
+                raise ValueError(
+                    "driver='push' has no blocked-barrier analogue; "
+                    f"mode must be 'lf' (got {self.mode!r})")
+            if self.faults is not None:
+                raise ValueError(
+                    "driver='push' does not host thread fault tables; "
+                    "run fault experiments on driver='pull'")
+            if self.fault_domain is not None:
+                raise ValueError(
+                    "driver='push' does not host fault domains on the drive "
+                    "path (durability='wal' still composes); use "
+                    "driver='pull' for fault-domain experiments")
+            if self.integrity is not None:
+                raise ValueError(
+                    "integrity invariants instrument the pull iterate; "
+                    "driver='push' does not support integrity=")
         if (self.fault_domain is not None
                 and self.fault_domain.name
                 not in registry.fault_domains_of(eng)):

@@ -934,10 +934,19 @@ class PageRankService:
                 "retraces_post_warmup": rep.retraces_post_warmup,
                 "bucket_retraces_post_warmup": rep.bucket_retraces_post_warmup,
                 "total_sweeps": rep.total_sweeps,
+                "total_edges_processed": rep.total_edges_processed,
                 "queries_served": rep.queries_served,
                 "batches_converged": rep.batches_converged,
                 "sweep_cap_hits": rep.sweep_cap_hits,
+                # per-batch work history: pull-vs-push comparable from one
+                # record (ISSUE 10 work accounting)
+                "driver": rep.driver,
+                "sweeps_history": rep.sweeps_history,
+                "edges_processed_history": rep.edges_processed_history,
             }
+            if rep.driver == "push":
+                row["residual_mass_last"] = rep.residual_mass_last
+                row["pushed_blocks"] = rep.pushed_blocks
             if rep.topology == "sharded":
                 row["topology"] = rep.topology
                 row["n_shards"] = rep.n_shards

@@ -86,6 +86,7 @@ from repro.core import faults as flt
 from repro.core import frontier as fr
 from repro.core import integrity as ig
 from repro.core import pallas_engine as pe
+from repro.core import push_engine as pshe
 from repro.core.blocked import SweepStats
 from repro.core.delta import signed_edge_delta, validate_edge_batch
 from repro.core.graph import (GraphSnapshot, HostGraph, initial_ranks,
@@ -217,6 +218,10 @@ class StreamBatchResult:
     regenerated_walks: Optional[int] = None   # walks rebuilt this batch
     touched_walks: Optional[int] = None       # touched-walk mass (bound)
     total_walks: Optional[int] = None         # n * R (the "global" yardstick)
+    # -- push-driver accounting (None on the pull driver) --------------------
+    residual_mass: Optional[float] = None     # ‖r‖₁ at drive exit
+    pushed_blocks: Optional[int] = None       # source blocks pushed (summed
+    #                                           over sweeps/refill rounds)
 
     @property
     def converged(self) -> bool:
@@ -262,6 +267,13 @@ class SessionReport:
     tiering: Optional[dict] = None            # HotSetManager counters
     device_bytes: Optional[dict] = None       # per-component device bytes
     bytes_per_vertex: Optional[float] = None  # sum(device_bytes) / n
+    # -- work accounting (per-batch history; pull-vs-push comparable) --------
+    driver: str = "pull"                      # EngineConfig.driver
+    sweeps_history: List[int] = dataclasses.field(default_factory=list)
+    edges_processed_history: List[int] = dataclasses.field(
+        default_factory=list)
+    residual_mass_last: Optional[float] = None  # push: ‖r‖₁ at last exit
+    pushed_blocks: Optional[int] = None         # push: total source blocks
 
 
 class PageRankSession:
@@ -309,6 +321,17 @@ class PageRankSession:
         self.pool: Optional[tiering.HostTilePool] = None
         self.hot: Optional[tiering.HotSetManager] = None
         self._deferred_rb: Optional[np.ndarray] = None
+        # residual forward-push driver (docs/ENGINES.md): the session keeps
+        # a device-resident residual vector next to the ranks, seeded in
+        # O(batch) per update; config validation already pinned the engine
+        # to pallas — here we additionally need the *stream* machinery
+        self._push = config.driver == "push"
+        if self._push and not self._stream:
+            raise ValueError(
+                "driver='push' runs the residual forward-push stream — "
+                "open the session with from_graph and the pallas engine "
+                "(from_snapshot has no operand mirrors to seed)")
+        self._residual = None
         self._closed = False
         self._service = None          # backref set by PageRankService
         self._shard_spec: Optional[dist.ShardSpec] = None
@@ -485,7 +508,21 @@ class PageRankSession:
         self._out_deg_host = np.asarray(g0.out_deg).copy()
         self._hg_digest = self._graph_digest()
         if r0 is None:
-            if self._tiered:
+            if self._push:
+                # cold push solve: p = 0, r = b — the invariant
+                # r = b + M·p − p holds trivially, and the drive pushes the
+                # whole teleport mass to the fixed point (tiered sessions
+                # refill through the same admit → re-drive loop as pull)
+                self._residual = jnp.where(
+                    self.valid, (1.0 - cfg.alpha) / self.n, 0).astype(dt)
+                r0, _, _ = self._drive_push_refill(
+                    jnp.zeros((self.n_pad,), dt),
+                    want_rb=(np.arange(self.n_rb) if self._tiered
+                             else None))
+                m = self.inc.mat
+                self._driver_keys.add((int(m.tiles.shape[0]),
+                                       int(m.tile_cols.shape[1]), "push"))
+            elif self._tiered:
                 # cold solve through the refill loop: admit what fits,
                 # converge resident blocks, defer the rest — block-Jacobi
                 # over residency partitions (expand=True propagates
@@ -510,6 +547,10 @@ class PageRankSession:
             r0 = jnp.zeros((self.n_pad,), dt).at[:r0.shape[0]].set(r0)
         self.R = r0[:self.n_pad]
         self._r_verified = self.R       # drift baseline for integrity checks
+        if self._push and self._residual is None:
+            # restored / caller-provided ranks: rebuild the exact residual
+            # invariant before the first update seeds against it
+            self._residual = self._residual_recompute(self.R)
 
     def _init_snapshot(self, g: Optional[GraphSnapshot], r0) -> None:
         cfg = self.config
@@ -813,6 +854,155 @@ class PageRankSession:
                 quiet_driven[:] = False
         self.hot.counters["refill_drives"] += rounds
         return R, agg
+
+    # -- the stream-mode residual forward-push solve -------------------------
+    def _drv_cache_size(self) -> int:
+        """Jit-cache size of THIS session's fused driver (push sessions
+        measure the push driver's cache, pull sessions the pull driver's —
+        the retrace yardsticks are per-driver)."""
+        return (pshe.push_cache_size() if getattr(self, "_push", False)
+                else _driver_cache_size())
+
+    def _drive_push(self, P0) -> Tuple[jnp.ndarray, SweepStats, dict]:
+        """One fused push drive over the device-resident operand mirrors:
+        ranks + carried residual in, ranks + shrunk residual out, one host
+        sync for the stats vector (the tiered deferral indicator rides the
+        same ``block_until_ready``, exactly like :meth:`_drive`)."""
+        cfg = self.config
+        tiered = self._tiered
+        rb_res = self.hot.rb_res if tiered else self._rb_res_full
+        P, Rr, stats_vec, deferred = pshe._push_driver(
+            self.inc.mat, P0, self._residual, self.valid, self._out_deg,
+            self._rb_out, self._bmat, rb_res, self._alpha, self._tau,
+            n=self.n, block_size=self.block_size,
+            max_iterations=cfg.max_iterations, interpret=self.interpret,
+            backend=self.backend, tiered=tiered)
+        tail = [deferred.astype(stats_vec.dtype)] if tiered else []
+        sv = np.asarray(jax.block_until_ready(       # the single sync
+            jnp.concatenate([stats_vec] + tail) if tail else stats_vec))
+        if tiered:
+            self._deferred_rb = sv[-self.n_rb:] != 0
+            sv = sv[:-self.n_rb]
+        else:
+            self._deferred_rb = None
+        self._residual = Rr
+        self._r_verified = P
+        stats, extras = pshe.push_stats_from_vec(sv)
+        return P, stats, extras
+
+    def _drive_push_refill(self, P0, *, want_rb=None
+                           ) -> Tuple[jnp.ndarray, SweepStats, dict]:
+        """Admission + push drive + stale-refresh refill loop (the push
+        twin of :meth:`_drive_refill`).  A drive delivers pushes to
+        resident destination rows only; rows it pushed to while
+        non-resident are *stale* and sit in the deferred bitmap.  Each
+        round admits the pending blocks, rebuilds the admitted ones'
+        residuals exactly from the invariant (``r = b + M·p − p`` needs
+        only the row's own — now resident — tiles;
+        :func:`repro.core.push_engine.residual_refresh_blocks`) and
+        re-drives, until the bitmap drains or the rounds cap trips.  No
+        quiet-window drain is needed: ``p`` is globally exact at all
+        times, so draining the bitmap IS convergence."""
+        if not self._tiered:
+            return self._drive_push(P0)
+        if want_rb is not None:
+            self._admit(want_rb)
+        P, agg, extras = self._drive_push(P0)
+        pushed = extras["pushed_blocks"]
+        rounds = 0
+        while self._deferred_rb is not None and self._deferred_rb.any():
+            if rounds >= int(self.config.max_iterations):
+                warnings.warn(
+                    f"tiered push refill loop did not drain in {rounds} "
+                    "rounds — serving the best iterate (raise "
+                    "device_budget_bytes)", SweepCapWarning, stacklevel=3)
+                agg = SweepStats(
+                    sweeps=agg.sweeps, iterations=agg.iterations,
+                    blocks_processed=agg.blocks_processed,
+                    edges_processed=agg.edges_processed,
+                    sim_time_ms=agg.sim_time_ms, converged=False,
+                    dnf=agg.dnf)
+                break
+            rounds += 1
+            pending = np.nonzero(self._deferred_rb)[0]
+            self._admit(pending)
+            got = pending[self.hot.resident[pending]]
+            if len(got):
+                ids = np.full(self.n_rb, -1, np.int32)
+                ids[:len(got)] = got
+                self._residual = pshe.residual_refresh_blocks(
+                    self.inc.mat, P, self._residual, self.valid,
+                    self._out_deg, self._alpha, jnp.asarray(ids),
+                    jnp.asarray(np.int32(len(got))),
+                    n=self.n, block_size=self.block_size,
+                    interpret=self.interpret, backend=self.backend)
+            # blocks the slab could not take this round stay deferred
+            leftover = np.zeros(self.n_rb, bool)
+            leftover[pending] = ~self.hot.resident[pending]
+            P, st, extras = self._drive_push(P)
+            pushed += extras["pushed_blocks"]
+            agg = SweepStats(
+                sweeps=agg.sweeps + st.sweeps,
+                iterations=agg.iterations + st.iterations,
+                blocks_processed=agg.blocks_processed + st.blocks_processed,
+                edges_processed=agg.edges_processed + st.edges_processed,
+                sim_time_ms=agg.sim_time_ms + st.sim_time_ms,
+                converged=bool(st.converged), dnf=bool(agg.dnf or st.dnf))
+            if leftover.any():
+                self._deferred_rb = (leftover if self._deferred_rb is None
+                                     else self._deferred_rb | leftover)
+        self.hot.counters["refill_drives"] += rounds
+        return P, agg, {**extras, "pushed_blocks": pushed}
+
+    def _residual_recompute(self, P) -> jnp.ndarray:
+        """Exact O(m) residual rebuild ``r = b + M·p − p`` for the current
+        graph (nd / restore / static-repair path).  Tiered sessions hold
+        only a partial device view, so they walk host truth instead."""
+        if self._tiered:
+            return jnp.asarray(pshe.residual_from_host(
+                self.hg, self._out_deg_host, np.asarray(P),
+                float(self.config.alpha)))
+        return pshe.residual_full(
+            self.inc.mat, P, self.valid, self._out_deg, self._alpha,
+            n=self.n, interpret=self.interpret, backend=self.backend)
+
+    def _seed_push(self, variant: str, dels_eff, ins_eff, deg_old_host
+                   ) -> Tuple[jnp.ndarray, Optional[np.ndarray]]:
+        """Set the session residual for one applied batch and return
+        ``(P0, seed_idx)``.  ``df`` is the O(batch·deg) hot path: the batch
+        changes the pull matrix only in its effective source columns, so
+        ``Δr = (M' − M)·p`` is enumerated host-side
+        (:func:`repro.core.push_engine.residual_seed_host`) and applied
+        with one bucketed device scatter — the operand-mirror scatter
+        discipline.  ``nd`` keeps ``p`` and rebuilds the exact residual
+        (O(m)); ``static`` restarts cold (p = 0, r = b)."""
+        cfg = self.config
+        if variant == "df":
+            dels_a = np.asarray(dels_eff, np.int64).reshape(-1, 2)
+            ins_a = np.asarray(ins_eff, np.int64).reshape(-1, 2)
+            sources = np.unique(np.concatenate([dels_a[:, 0],
+                                                ins_a[:, 0]]))
+            if len(sources):
+                p_src = np.asarray(self.R[jnp.asarray(sources)])
+                sidx, svals = pshe.residual_seed_host(
+                    self._hg_prev, self.hg, sources, p_src,
+                    deg_old_host[sources], self._out_deg_host[sources],
+                    float(cfg.alpha))
+            else:
+                sidx = np.zeros(0, np.int64)
+                svals = np.zeros(0, self._dtype)
+            # the scatter runs even for an empty batch so warmup() traces
+            # it at the base bucket, like the operand scatter
+            self._residual = pshe.scatter_residual(self._residual, sidx,
+                                                   svals)
+            return self.R, sidx
+        if variant == "nd":
+            self._residual = self._residual_recompute(self.R)
+            return self.R, None
+        # static: cold restart — invariant holds trivially at p=0, r=b
+        self._residual = jnp.where(
+            self.valid, (1.0 - cfg.alpha) / self.n, 0).astype(self._dtype)
+        return jnp.zeros((self.n_pad,), self._dtype), None
 
     # -- updates -------------------------------------------------------------
     def update(self, deletions, insertions, *, variant: str = "df"
@@ -1500,8 +1690,14 @@ class PageRankSession:
         convergence loop, all device-side after the O(batch) host
         bookkeeping."""
         global _NEW_BUCKET_STARTED, _NEW_BUCKET_ACTIVE
+        if self._push and variant == "dt":
+            raise ValueError(
+                "driver='push' does not implement the dt reachability "
+                "marking (it walks throwaway snapshots of the pull "
+                "iterate); use variant='df' or 'nd', or a driver='pull' "
+                "session")
         t0 = time.perf_counter()
-        cache0 = _driver_cache_size()
+        cache0 = self._drv_cache_size()
         with _RETRACE_LOCK:     # open the attribution window with cache0
             nb_started0 = _NEW_BUCKET_STARTED
             nb_active0 = _NEW_BUCKET_ACTIVE
@@ -1536,6 +1732,9 @@ class PageRankSession:
             # here is what the deep scrub's graph_digest check catches
             self._hg_digest = self._graph_digest()
 
+        # push seeding divides by the PRE-batch degrees: capture the host
+        # twin before the mirror patch below rebinds it
+        deg_old_host = self._out_deg_host if self._push else None
         # patch the device-resident operand mirrors in O(batch): only the
         # bucketed signed delta crosses host→device, never the graph-sized
         # vectors
@@ -1565,7 +1764,15 @@ class PageRankSession:
 
         batch_dev = fr.pack_batch(self.n_pad, deletions, insertions)
         seed_idx = None
-        if variant == "df":
+        pextras = None
+        if self._push:
+            # residual seeding replaces the frontier marking: the residual
+            # IS the frontier (work ∝ its mass).  seed_idx feeds the same
+            # tiered admission want-set as the pull df seed.
+            R0, seed_idx = self._seed_push(variant, dels_eff, ins_eff,
+                                           deg_old_host)
+            affected, expand = None, True
+        elif variant == "df":
             if self._tiered:
                 # host-side DF seed (paper Alg. 1 lines 4-6) through the
                 # sorted host key sets — needs no device pull matrices, and
@@ -1617,7 +1824,8 @@ class PageRankSession:
         # documented cost.  Record the visit BEFORE driving so the growth
         # observed below can be attributed to it.
         dkey = (int(key_mat.tiles.shape[0]),
-                int(key_mat.tile_cols.shape[1]), bool(expand))
+                int(key_mat.tile_cols.shape[1]),
+                "push" if self._push else bool(expand))
         new_bucket = dkey not in self._driver_keys
         self._driver_keys.add(dkey)
 
@@ -1626,7 +1834,10 @@ class PageRankSession:
                 _NEW_BUCKET_STARTED += 1
                 _NEW_BUCKET_ACTIVE += 1
         try:
-            R, stats = self._drive_refill(R0, affected, expand=expand)
+            if self._push:
+                R, stats, pextras = self._drive_push_refill(R0)
+            else:
+                R, stats = self._drive_refill(R0, affected, expand=expand)
         finally:
             if new_bucket:
                 with _RETRACE_LOCK:
@@ -1634,7 +1845,7 @@ class PageRankSession:
         self.R = R
         raw = (np.asarray(deletions).reshape(-1, 2).shape[0]
                + np.asarray(insertions).reshape(-1, 2).shape[0])
-        cache1 = _driver_cache_size()
+        cache1 = self._drv_cache_size()
         with _RETRACE_LOCK:
             nb_started1 = _NEW_BUCKET_STARTED
         retraces = (cache1 - cache0
@@ -1650,7 +1861,11 @@ class PageRankSession:
             ranks=R, stats=stats,
             wall_time_s=time.perf_counter() - t0, batch_edges=raw,
             driver_cache_size=cache1,
-            driver_retraces=retraces, bucket_retraces=bucket)
+            driver_retraces=retraces, bucket_retraces=bucket,
+            residual_mass=(pextras["residual_l1"]
+                           if pextras is not None else None),
+            pushed_blocks=(pextras["pushed_blocks"]
+                           if pextras is not None else None))
 
     def _update_walk(self, deletions, insertions, variant: str = "df"
                      ) -> StreamBatchResult:
@@ -1758,6 +1973,8 @@ class PageRankSession:
             return self._recompute_sharded(variant)
         if self._walk:
             return self._recompute_walk(variant)
+        if self._push:
+            return self._recompute_push(variant)
         if variant in ("static", "nd"):
             R0 = (self.R if variant == "nd" else
                   jnp.where(self.valid, 1.0 / self.n, 0).astype(self._dtype))
@@ -1797,6 +2014,31 @@ class PageRankSession:
             mat, aux = self.inc.mat, self.inc.aux
         return self._converge(R0, affected, expand=(variant == "df"),
                               g=g_cur, mat=mat, aux=aux)
+
+    def _recompute_push(self, variant: str) -> PagerankResult:
+        """Push-session re-solve.  ``nd`` keeps the rank estimate and
+        rebuilds the exact residual (O(m)); ``static`` restarts cold.
+        ``dt``/``df`` replay the *pull* marking machinery and have no push
+        analogue (same contract as the walk engine's recompute)."""
+        if variant not in ("static", "nd"):
+            raise ValueError(
+                f"recompute({variant!r}) replays the pull driver's "
+                "frontier marking; a driver='push' session re-solves via "
+                "variant='static' or 'nd'")
+        t0 = time.perf_counter()
+        if variant == "nd":
+            P0 = self.R
+            self._residual = self._residual_recompute(P0)
+        else:
+            P0 = jnp.zeros((self.n_pad,), self._dtype)
+            self._residual = jnp.where(
+                self.valid, (1.0 - self.config.alpha) / self.n,
+                0).astype(self._dtype)
+        R, stats, _ = self._drive_push_refill(
+            P0, want_rb=(np.arange(self.n_rb) if self._tiered else None))
+        self.R = R
+        return PagerankResult(ranks=R, stats=stats,
+                              wall_time_s=time.perf_counter() - t0)
 
     def _recompute_sharded(self, variant: str) -> PagerankResult:
         """Sharded re-solve through the cached compiled sweep — same
@@ -1988,7 +2230,8 @@ class PageRankSession:
                      "_rb_in", "_rb_out", "_bmat", "_fault_tables",
                      "_r_prev", "store", "_process_domain", "walks",
                      "_r_verified", "_out_deg_host", "_corruption_faults",
-                     "pool", "hot", "_rb_res_full", "_deferred_rb"):
+                     "pool", "hot", "_rb_res_full", "_deferred_rb",
+                     "_residual"):
             if hasattr(self, attr):
                 setattr(self, attr, None)
 
@@ -2224,7 +2467,18 @@ class PageRankSession:
                      and self.hot is not None else None),
             device_bytes=dev_bytes,
             bytes_per_vertex=(sum(dev_bytes.values()) / max(self.n, 1)
-                              if dev_bytes is not None else None))
+                              if dev_bytes is not None else None),
+            driver=getattr(self.config, "driver", "pull"),
+            sweeps_history=[int(r.stats.sweeps) for r in self._history],
+            edges_processed_history=[int(r.stats.edges_processed)
+                                     for r in self._history],
+            residual_mass_last=next(
+                (r.residual_mass for r in reversed(self._history)
+                 if r.residual_mass is not None), None),
+            pushed_blocks=(sum(r.pushed_blocks for r in self._history
+                               if r.pushed_blocks is not None)
+                           if any(r.pushed_blocks is not None
+                                  for r in self._history) else None))
 
     def _device_bytes(self) -> Optional[dict]:
         """Per-component device-resident bytes (the ``report()`` memory
@@ -2237,7 +2491,8 @@ class PageRankSession:
             return int(sum(a.nbytes for a in arrs
                            if a is not None and hasattr(a, "nbytes")))
 
-        out = {"ranks": _nb(self.R, self.valid)}
+        out = {"ranks": _nb(self.R, self.valid,
+                            getattr(self, "_residual", None))}
         if self._stream:
             mat = self.inc.mat
             out["tile_pool"] = _nb(mat.tiles)

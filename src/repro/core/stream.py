@@ -100,7 +100,8 @@ class StreamRunner:
                  backend: Optional[str] = None,
                  durability: str = "none",
                  store_dir: Optional[str] = None,
-                 checkpoint_interval: int = 16):
+                 checkpoint_interval: int = 16,
+                 driver: str = "pull"):
         from repro.api import EngineConfig, PageRankSession
         cfg = EngineConfig(engine="pallas", mode=mode,
                            active_policy=active_policy, alpha=alpha,
@@ -108,7 +109,8 @@ class StreamRunner:
                            max_iterations=max_iterations, backend=backend,
                            block_size=block_size, dtype=dtype,
                            durability=durability,
-                           checkpoint_interval=checkpoint_interval)
+                           checkpoint_interval=checkpoint_interval,
+                           driver=driver)
         self.session = PageRankSession.from_graph(
             hg0, config=cfg, r0=r0, interpret=interpret,
             store_dir=store_dir)
@@ -208,11 +210,12 @@ def run_stream(hg0: HostGraph,
     without perturbing the graph, so recorded latencies are steady-state
     (up to batches reaching a not-yet-seen size bucket) and the retrace
     count covers **every** recorded batch, including the first."""
-    from repro.api.session import _driver_cache_size
     runner = StreamRunner(hg0, **runner_kwargs)
     if warmup:
         runner.warmup()
-    base = _driver_cache_size() if warmup else -1
+    # measure the cache of THIS stream's driver (push sessions count the
+    # push driver's jit cache, pull sessions the pull driver's)
+    base = runner.session._drv_cache_size() if warmup else -1
     results: List[StreamBatchResult] = []
     for dels, ins in batches:
         results.append(runner.step(dels, ins))

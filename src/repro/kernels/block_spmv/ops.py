@@ -574,6 +574,34 @@ def block_spmv_active_bucketed(mat: BlockSparse, x: jnp.ndarray,
     return y[:mat.n_rows]
 
 
+def block_spmv_push_bucketed(mat: BlockSparse, x: jnp.ndarray,
+                             src_cb: jnp.ndarray,
+                             active_ids: jnp.ndarray, n_active: jnp.ndarray,
+                             *, interpret: bool = True,
+                             backend: Optional[str] = None,
+                             ladder: Optional[Sequence[int]] = None
+                             ) -> jnp.ndarray:
+    """Scatter-semiring push step on the pull tile layout.
+
+    Forward push moves each selected source's residual along its
+    *out*-edges: ``y[v] = Σ_{u→v, u ∈ S} x[u]``.  On the pull layout
+    (``A[v, u] = 1`` iff edge u→v) that scatter is exactly ``A @ (x ⊙ 1_S)``
+    — so the push reuses the same tiles, slot tables and bucketed dispatch
+    as the pull, with the operand masked to the selected source
+    column-blocks (``src_cb``, a [n_cb] indicator) and the launch restricted
+    to the candidate *destination* row-blocks (``active_ids`` compacted,
+    -1-padded; ``n_active`` traced — the tile-presence adjacency gives the
+    exact candidate set, so no destination outside it can receive mass).
+
+    Same output contract as :func:`block_spmv_active_bucketed`: rows of
+    blocks outside ``active_ids`` are UNDEFINED on the Pallas backend —
+    mask with the candidate indicator before consuming."""
+    xm = jnp.where(jnp.repeat(src_cb, mat.block)[:x.shape[0]], x, 0)
+    return block_spmv_active_bucketed(
+        mat, xm, active_ids, n_active, semiring="sum",
+        interpret=interpret, backend=backend, ladder=ladder)
+
+
 def block_adjacency(mat: BlockSparse) -> jnp.ndarray:
     """Boolean [n_rb, n_cb] tile-presence matrix: which row-blocks own a tile
     in each column-block.  Drives candidate-block selection for the OR-pass

@@ -55,7 +55,7 @@ EXPECTED_CONFIG_FIELDS = {
     "topology", "n_shards", "partitioner", "exchange",
     "fault_domain", "durability", "checkpoint_interval", "integrity",
     "walks_per_vertex", "walk_length", "walk_seed",
-    "device_budget_bytes",
+    "device_budget_bytes", "driver",
 }
 
 EXPECTED_BUILTIN_ENGINES = {"dense", "blocked", "pallas", "distributed",

@@ -31,7 +31,12 @@ def test_scale_bench_smoke(tmp_path):
         on_disk = json.load(f)
     assert on_disk["meta"]["tier"] == "smoke"
     rows = on_disk["rows"]
-    assert len(rows) == len(scale.SMOKE_LADDER) * len(scale.BUDGET_FRACS) + 2
+    # ladder × budgets + the adversarial R-MAT row + the half-budget
+    # push-driver row (benchmarks/scale.py --driver; docs/ENGINES.md)
+    assert len(rows) == len(scale.SMOKE_LADDER) * len(scale.BUDGET_FRACS) + 3
+    push_rows = [r for r in rows if r["driver"] == "push"]
+    assert len(push_rows) == 1
+    assert push_rows[0]["budget_frac"] == 0.5
     for row in rows:
         assert row["batches_converged"] == row["batches"], row["graph"]
         assert row["retraces_post_warmup"] == 0, row["graph"]
